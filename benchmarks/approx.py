@@ -1,0 +1,48 @@
+"""Approximate-squaring study (paper conclusion + paper ref [1]).
+
+Error of the square-based matmul when built from TRUNCATED squarers, as a
+function of dropped low bits, plus the additional area saving the truncation
+buys (partial-product rows removed from the squarer array).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import matmul as M
+
+
+def approx_matmul_error(sizes=((64, 64, 64), (256, 256, 256)),
+                        bits=(0, 2, 4, 6)):
+    rng = np.random.default_rng(0)
+    rows = []
+    for (m, k, n) in sizes:
+        a = rng.integers(-128, 128, (m, k)).astype(np.int8)
+        b = rng.integers(-128, 128, (k, n)).astype(np.int8)
+        exact = a.astype(np.int64) @ b.astype(np.int64)
+        scale = np.abs(exact).mean() + 1e-9
+        for db in bits:
+            out = np.asarray(M.pm_matmul_approx(jnp.asarray(a), jnp.asarray(b),
+                                                drop_bits=db))
+            err = np.abs(out.astype(np.int64) - exact).mean() / scale
+            # truncated squarer area: ~ (n-db)^2/2 of exact n^2/2 (rows cut)
+            area_rel = ((8 + 1 - db) ** 2) / ((8 + 1) ** 2)
+            rows.append({"size": f"{m}x{k}x{n}", "drop_bits": db,
+                         "mean_rel_err": float(err),
+                         "squarer_area_vs_exact": area_rel})
+    return rows
+
+
+def approx_float_error():
+    """bf16-squarer float path error vs f32 exact."""
+    rng = np.random.default_rng(1)
+    rows = []
+    for (m, k, n) in ((64, 64, 64), (128, 256, 64)):
+        a = rng.normal(size=(m, k)).astype(np.float32)
+        b = rng.normal(size=(k, n)).astype(np.float32)
+        exact = a @ b
+        out = np.asarray(M.pm_matmul_approx(jnp.asarray(a), jnp.asarray(b)))
+        rel = np.abs(out - exact).max() / (np.abs(exact).max() + 1e-9)
+        rows.append({"size": f"{m}x{k}x{n}", "squarer": "bf16",
+                     "max_rel_err": float(rel)})
+    return rows

@@ -1,0 +1,36 @@
+"""Paper's headline hardware claim: area savings of square-based designs.
+
+Reproduces the gate-count argument (squarer ~ half a multiplier, paper ref
+[1]) through the analytical cost model: PM-MAC vs MAC, CPM4/CPM3 vs 3-mult
+complex MAC, square systolic arrays (Fig.2) and tensor cores (Fig.4/5).
+"""
+from __future__ import annotations
+
+from repro.core import cost_model as cm
+
+
+def mac_savings():
+    return cm.savings_table(bitwidths=(8, 16, 32))
+
+
+def systolic_sweep():
+    rows = []
+    for size in (32, 128, 256):
+        for bits in (8, 16):
+            sq = cm.systolic_array_cost(size, size, bits, True)
+            mac = cm.systolic_array_cost(size, size, bits, False)
+            rows.append({"array": f"{size}x{size}", "bits": bits,
+                         "sq_area": sq.area, "mac_area": mac.area,
+                         "ratio": sq.ratio_to(mac)})
+    return rows
+
+
+def tensor_core_sweep():
+    rows = []
+    for (m, n, k) in ((4, 4, 4), (8, 8, 8), (16, 16, 16)):
+        for bits in (8, 16):
+            sq = cm.tensor_core_cost(m, n, k, bits, True)
+            mac = cm.tensor_core_cost(m, n, k, bits, False)
+            rows.append({"core": f"{m}x{n}x{k}", "bits": bits,
+                         "ratio": sq.ratio_to(mac)})
+    return rows

@@ -1,0 +1,52 @@
+"""Kernel wall-time microbenchmarks (CPU interpret mode for Pallas; jnp for
+the algebraic paths).  Interpret-mode timings validate correctness cost, not
+TPU performance -- TPU projections come from the roofline (§Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, reps=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6      # us
+
+
+def matmul_modes(m=256, k=256, n=256):
+    from repro.core import matmul as M
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    rows = []
+    for mode in ("standard", "square_virtual", "square_scan"):
+        f = jax.jit(lambda a, b, mode=mode: M.matmul(a, b, mode=mode))
+        rows.append({"name": f"matmul[{mode}]", "us_per_call": _time(f, a, b),
+                     "derived": f"{m}x{k}x{n}"})
+    return rows
+
+
+def pallas_kernels():
+    from repro.kernels import ops
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(2048,)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
+    zx = jnp.asarray((rng.normal(size=(64, 64)) + 1j * rng.normal(size=(64, 64))).astype(np.complex64))
+    zy = jnp.asarray((rng.normal(size=(64, 64)) + 1j * rng.normal(size=(64, 64))).astype(np.complex64))
+    return [
+        {"name": "pallas_sq_matmul[interp]",
+         "us_per_call": _time(ops.sq_matmul, a, b), "derived": "128^3 f32"},
+        {"name": "pallas_cpm3_matmul[interp]",
+         "us_per_call": _time(lambda x, y: ops.cpm3_matmul(x, y)[0], zx, zy),
+         "derived": "64^3 c64"},
+        {"name": "pallas_sq_conv[interp]",
+         "us_per_call": _time(ops.sq_conv, x, w), "derived": "L=2048 taps=16"},
+    ]

@@ -1,0 +1,97 @@
+"""Perf-iteration lab: run a dry-run cell under named variants and report
+the roofline-term deltas.  Drives EXPERIMENTS.md §Perf.
+
+    PYTHONPATH=src python -m benchmarks.perf_lab --arch command-r-35b \
+        --shape train_4k --variants baseline,remat_dots,square_virtual
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# variant name -> (matmul_mode, config overrides)
+VARIANTS = {
+    "baseline": (None, {}),
+    "square_virtual": ("square_virtual", {}),          # paper mode at scale
+    "remat_none": (None, {"remat": "none"}),
+    "remat_dots": (None, {"remat": "dots"}),
+    "microbatch_32": (None, {"_microbatch": 32}),
+    "microbatch_128": (None, {"_microbatch": 128}),
+    "no_microbatch": (None, {"_microbatch": 0}),
+    "loss_chunk_512": (None, {"loss_chunk": 512}),
+    "loss_chunk_8k": (None, {"loss_chunk": 8192}),
+    "attn_chunks_4k": (None, {"attn_chunk_q": 4096, "attn_chunk_kv": 2048}),
+    "attn_chunks_1k": (None, {"attn_chunk_q": 1024, "attn_chunk_kv": 512}),
+    "causal_skip": (None, {"attn_block_skip": True}),
+    "zero1": (None, {"_zero1": True}),
+    "zero1_skip_dots": (None, {"_zero1": True, "attn_block_skip": True,
+                               "remat": "dots"}),
+    "skip_dots": (None, {"attn_block_skip": True, "remat": "dots"}),
+    "p_bf16": (None, {"attn_p_bf16": True}),
+    "skip_pbf16": (None, {"attn_block_skip": True, "attn_p_bf16": True}),
+    "combo_all": (None, {"attn_block_skip": True, "attn_p_bf16": True,
+                         "_zero1": True}),
+    "combo_sq": ("square_virtual", {"attn_block_skip": True,
+                                    "attn_p_bf16": True, "_zero1": True}),
+    "tp_bf16": (None, {"tp_bf16_reduce": True}),
+    "skip_tp": (None, {"attn_block_skip": True, "tp_bf16_reduce": True}),
+    "skip_mb128": (None, {"attn_block_skip": True, "_microbatch": 128}),
+    "skip_dots_mb128": (None, {"attn_block_skip": True, "remat": "dots",
+                               "_microbatch": 128}),
+    "skip_dots_mb256": (None, {"attn_block_skip": True, "remat": "dots",
+                               "_microbatch": 0}),
+    "best_sq": ("square_virtual", {"attn_block_skip": True, "remat": "dots",
+                                   "_microbatch": 128, "_zero1": True}),
+    "skip_zero1": (None, {"attn_block_skip": True, "_zero1": True}),
+    "fold_q": (None, {"attn_fold_q": True}),
+    "ragged_pos": (None, {"_lockstep": False}),
+    "fold_q_sq": ("square_virtual", {"attn_fold_q": True}),
+    "skip_zero1_sq": ("square_virtual", {"attn_block_skip": True,
+                                         "_zero1": True}),
+}
+
+
+def run_variant(arch: str, shape: str, name: str, multi_pod: bool = False):
+    from repro.launch.dryrun import dryrun_cell
+    from repro.roofline.report import roofline_row
+    mode, over = VARIANTS[name]
+    cell = dryrun_cell(arch, shape, multi_pod=multi_pod, matmul_mode=mode,
+                       overrides=dict(over), verbose=False)
+    row = roofline_row(cell)
+    row["variant"] = name
+    row["dot_flops"] = cell["dot_flops_per_device"]
+    row["bytes"] = cell["bytes_per_device"]
+    row["coll_bytes"] = cell["collective_bytes_total"]
+    row["peak_gb"] = cell["peak_bytes_per_device"] / 1e9
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    rows = []
+    for name in args.variants.split(","):
+        try:
+            r = run_variant(args.arch, args.shape, name.strip(),
+                            args.multi_pod)
+            rows.append(r)
+            print(f"{name:16s} compute={r['compute_s']:.4f}s "
+                  f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s "
+                  f"bound={r['bottleneck']} MFU={r['roofline_fraction_mfu']:.3f} "
+                  f"peak={r['peak_gb']:.1f}GB", flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name:16s} FAILED: {e!r}", flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

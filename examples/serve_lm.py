@@ -1,0 +1,11 @@
+"""Batched serving example: continuous batching over mixed-length prompts.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_cli
+
+if __name__ == "__main__":
+    serve_cli.main(["--arch", "fairsquare-demo", "--reduced",
+                    "--requests", "8", "--max-new", "12", "--max-batch", "4",
+                    "--matmul-mode", "square_virtual"])
+    print("OK")

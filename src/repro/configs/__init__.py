@@ -1,0 +1,3 @@
+"""Config package: one module per assigned architecture."""
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES  # noqa: F401
+from repro.configs.registry import ARCHS, get_config  # noqa: F401

@@ -1,0 +1,144 @@
+"""Model / run configuration dataclasses.
+
+One ``ModelConfig`` instance per assigned architecture lives in
+``src/repro/configs/<id>.py``; ``reduced()`` derives the CPU smoke-test
+config of the same family (small widths, few layers/experts, tiny vocab).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "pad_vocab"]
+
+
+def pad_vocab(v: int, mult: int = 256) -> int:
+    return v + (-v) % mult
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    activation: str = "swiglu"       # ffn: swiglu | geglu | gelu
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    rope_theta: float = 10000.0
+    window: Optional[int] = None     # sliding-window attention size
+    attn_bias: bool = False
+    ffn_bias: bool = False
+    attn_logit_softcap: float = 0.0
+    tie_embeddings: bool = True
+    # --- MoE ---
+    n_experts: int = 0
+    topk: int = 0
+    capacity_factor: float = 1.25
+    # --- layer pattern (cycled): attn | moe | mlstm | slstm | rglru | lattn ---
+    block_pattern: Tuple[str, ...] = ("attn",)
+    # --- recurrent (rg-lru / conv) ---
+    rnn_width: int = 0
+    conv_width: int = 4
+    local_window: int = 2048
+    # --- xlstm ---
+    inner_factor: float = 2.0        # mLSTM d_inner = factor * d_model
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    encoder_seq: int = 0             # fixed frame count (whisper: 1500)
+    # --- modality frontend stubs ---
+    prefix_tokens: int = 0           # vlm: precomputed patch embeddings
+    # --- numerics / execution ---
+    dtype: str = "bfloat16"
+    matmul_mode: str = "standard"    # standard | square_virtual | ...
+    scan_layers: bool = True
+    remat: str = "block"             # none | block
+    loss_chunk: int = 2048
+    attn_chunk_q: int = 2048
+    attn_chunk_kv: int = 1024
+    attn_block_skip: bool = False    # causal triangular block schedule
+    attn_p_bf16: bool = False        # bf16 probability tensor in PV einsum
+    tp_bf16_reduce: bool = False     # explicit bf16 psum on row-parallel GEMMs
+    attn_fold_q: bool = False        # fold q-chunks into batch, shard over model
+    max_seq: int = 524288
+    source: str = ""                 # provenance note
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab)
+
+    @property
+    def layer_kinds(self) -> Tuple[str, ...]:
+        pat = self.block_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if decode-time state is O(1) in context length (SWA counts:
+        its cache is window-bounded)."""
+        kinds = set(self.layer_kinds)
+        if "attn" in kinds or "moe" in kinds:
+            return self.window is not None
+        return True                  # recurrent/local-attn only
+
+    def supports_shape(self, shape_name: str) -> bool:
+        if shape_name == "long_500k":
+            return self.is_subquadratic
+        return True
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test config of the same family (runs a fwd/train step on CPU)."""
+        pat_len = len(self.block_pattern)
+        n_layers = max(pat_len, 2 if pat_len == 1 else pat_len)
+        return dataclasses.replace(
+            self,
+            n_layers=n_layers,
+            d_model=64,
+            n_heads=max(2, min(4, self.n_heads)),
+            n_kv_heads=max(1, min(2, self.n_kv_heads)),
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab=512,
+            n_experts=4 if self.n_experts else 0,
+            topk=2 if self.topk else 0,
+            # drop-free at smoke scale: capacity drops would make
+            # prefill+decode legitimately diverge from the full forward
+            capacity_factor=8.0 if self.n_experts else self.capacity_factor,
+            rnn_width=64 if self.rnn_width else 0,
+            encoder_layers=2 if self.encoder_layers else 0,
+            encoder_seq=16 if self.encoder_seq else 0,
+            prefix_tokens=4 if self.prefix_tokens else 0,
+            window=min(self.window, 64) if self.window else None,
+            local_window=32,
+            dtype="float32",
+            loss_chunk=64,
+            attn_chunk_q=32,
+            attn_chunk_kv=32,
+            max_seq=256,
+            scan_layers=self.scan_layers,
+            remat="none",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

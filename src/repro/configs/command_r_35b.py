@@ -1,0 +1,4 @@
+"""Config for command-r-35b (see registry.py for the full definition)."""
+from repro.configs.registry import ARCHS
+
+CONFIG = ARCHS["command-r-35b"]

@@ -1,0 +1,4 @@
+"""Config for deepseek-7b (see registry.py for the full definition)."""
+from repro.configs.registry import ARCHS
+
+CONFIG = ARCHS["deepseek-7b"]

@@ -1,0 +1,4 @@
+"""Config for h2o-danube-3-4b (see registry.py for the full definition)."""
+from repro.configs.registry import ARCHS
+
+CONFIG = ARCHS["h2o-danube-3-4b"]

@@ -1,0 +1,4 @@
+"""Config for mixtral-8x7b (see registry.py for the full definition)."""
+from repro.configs.registry import ARCHS
+
+CONFIG = ARCHS["mixtral-8x7b"]

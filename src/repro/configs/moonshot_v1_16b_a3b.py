@@ -1,0 +1,4 @@
+"""Config for moonshot-v1-16b-a3b (see registry.py for the full definition)."""
+from repro.configs.registry import ARCHS
+
+CONFIG = ARCHS["moonshot-v1-16b-a3b"]

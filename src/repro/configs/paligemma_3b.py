@@ -1,0 +1,4 @@
+"""Config for paligemma-3b (see registry.py for the full definition)."""
+from repro.configs.registry import ARCHS
+
+CONFIG = ARCHS["paligemma-3b"]

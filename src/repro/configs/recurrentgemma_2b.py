@@ -1,0 +1,4 @@
+"""Config for recurrentgemma-2b (see registry.py for the full definition)."""
+from repro.configs.registry import ARCHS
+
+CONFIG = ARCHS["recurrentgemma-2b"]

@@ -1,0 +1,4 @@
+"""Config for starcoder2-3b (see registry.py for the full definition)."""
+from repro.configs.registry import ARCHS
+
+CONFIG = ARCHS["starcoder2-3b"]

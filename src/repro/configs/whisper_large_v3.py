@@ -1,0 +1,4 @@
+"""Config for whisper-large-v3 (see registry.py for the full definition)."""
+from repro.configs.registry import ARCHS
+
+CONFIG = ARCHS["whisper-large-v3"]

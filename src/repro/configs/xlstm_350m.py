@@ -1,0 +1,4 @@
+"""Config for xlstm-350m (see registry.py for the full definition)."""
+from repro.configs.registry import ARCHS
+
+CONFIG = ARCHS["xlstm-350m"]

@@ -1,0 +1,107 @@
+"""Square-based complex matrix multiplication (paper §6 and §9).
+
+Two decompositions of ``Z = X @ Y`` with ``X = A + jB`` (M,N) and
+``Y = C + jS`` (N,P):
+
+CPM4 (paper §6, eqs 17-19): 4 squares per complex multiply
+    Re(2z_hk) = sum_i [(a+c)^2 + (b-s)^2] + Sx_h + Sy_k
+    Im(2z_hk) = sum_i [(b+c)^2 + (a+s)^2] + Sx_h + Sy_k
+    Sx_h = -sum_i (a^2 + b^2)       Sy_k = -sum_i (c^2 + s^2)
+
+CPM3 (paper §9, eqs 31-36): 3 squares per complex multiply; the square
+``(c+a+b)^2`` is shared between real and imaginary parts:
+    Re(2z_hk) = sum_i [(c+a+b)^2 - (b+c+s)^2] + Sab_h + Scs_k
+    Im(2z_hk) = sum_i [(c+a+b)^2 + (a+s-c)^2] + Sba_h + Ssc_k
+    Sab_h = sum_i (-(a+b)^2 + b^2)   Scs_k = sum_i (-c^2 + (c+s)^2)
+    Sba_h = sum_i (-(a+b)^2 - a^2)   Ssc_k = sum_i (-c^2 - (s-c)^2)
+
+Unit-modulus simplification (paper §6): if every element of Y has |y| = 1
+(e.g. the DFT matrix), then Sy_k == -N identically - asserted in tests.
+
+Inputs may be complex arrays or (real, imag) plane pairs; planes are how the
+paper's four-wire CPM hardware sees them.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import squares as sq
+
+__all__ = ["cpm4_matmul", "cpm3_matmul", "complex_matmul", "split_planes"]
+
+
+def split_planes(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if jnp.iscomplexobj(x):
+        return jnp.real(x), jnp.imag(x)
+    raise ValueError("expected a complex array or explicit (re, im) planes")
+
+
+def _as_planes(x, x_im):
+    if x_im is None:
+        return split_planes(x)
+    return x, x_im
+
+
+def cpm4_matmul(x, y, x_im=None, y_im=None, *, planes_out: bool = False):
+    """Complex matmul with 4 squares per multiply (paper §6)."""
+    a, b = _as_planes(x, x_im)
+    c, s = _as_planes(y, y_im)
+    acc = sq.accum_dtype(a.dtype)
+    a, b, c, s = (t.astype(acc) for t in (a, b, c, s))
+
+    # Partial dot products: contract over the shared axis i (a: (..,M,N), c: (N,P)).
+    re2 = jnp.sum(sq.pm(a[..., :, :, None], c[None, :, :])
+                  + sq.pm_neg(b[..., :, :, None], s[None, :, :]), axis=-2)
+    im2 = jnp.sum(sq.pm(b[..., :, :, None], c[None, :, :])
+                  + sq.pm(a[..., :, :, None], s[None, :, :]), axis=-2)
+
+    sx = -jnp.sum(sq.square(a) + sq.square(b), axis=-1)       # (.., M)
+    sy = -jnp.sum(sq.square(c) + sq.square(s), axis=0)        # (P,)
+
+    re = sq.halve(re2 + sx[..., None] + sy)
+    im = sq.halve(im2 + sx[..., None] + sy)
+    if planes_out:
+        return re, im
+    return re + 1j * im
+
+
+def cpm3_matmul(x, y, x_im=None, y_im=None, *, planes_out: bool = False):
+    """Complex matmul with 3 squares per multiply (paper §9)."""
+    a, b = _as_planes(x, x_im)
+    c, s = _as_planes(y, y_im)
+    acc = sq.accum_dtype(a.dtype)
+    a, b, c, s = (t.astype(acc) for t in (a, b, c, s))
+
+    ab = a[..., :, :, None]          # broadcast (.., M, N, 1)
+    bb = b[..., :, :, None]
+    cb = c[None, :, :]               # broadcast (1, N, P)
+    sb = s[None, :, :]
+
+    shared = sq.cpm3_shared(ab, bb, cb)                    # (c+a+b)^2, shared
+    re2 = jnp.sum(sq.cpm3_real(ab, bb, cb, sb, shared=shared), axis=-2)
+    im2 = jnp.sum(sq.cpm3_imag(ab, bb, cb, sb, shared=shared), axis=-2)
+
+    sab = jnp.sum(-sq.square(a + b) + sq.square(b), axis=-1)   # (.., M)  eq 33
+    scs = jnp.sum(-sq.square(c) + sq.square(c + s), axis=0)    # (P,)     eq 33
+    sba = jnp.sum(-sq.square(a + b) - sq.square(a), axis=-1)   # (.., M)  eq 35
+    ssc = jnp.sum(-sq.square(c) - sq.square(s - c), axis=0)    # (P,)     eq 35
+
+    re = sq.halve(re2 + sab[..., None] + scs)
+    im = sq.halve(im2 + sba[..., None] + ssc)
+    if planes_out:
+        return re, im
+    return re + 1j * im
+
+
+def complex_matmul(x, y, *, mode: str = "standard"):
+    """Complex matmul dispatch: standard | cpm4 | cpm3."""
+    if mode == "standard":
+        return jnp.matmul(x, y)
+    if mode == "cpm4":
+        return cpm4_matmul(x, y)
+    if mode == "cpm3":
+        return cpm3_matmul(x, y)
+    raise ValueError(f"unknown complex matmul mode {mode!r}")

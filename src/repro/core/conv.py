@@ -1,0 +1,184 @@
+"""Square-based convolutions / correlations (paper §5, §5.1, §8, §11).
+
+Real 1D correlation (paper eq 10/11):
+    y_k = sum_i w_i x_{i+k}
+        = 1/2 ( sum_i (w_i + x_{i+k})^2  + Sx_k + Sw )
+    Sx_k = -sum_i x_{i+k}^2   (sliding sum of squares -- the shared x^2 term)
+    Sw   = -sum_i w_i^2       (precomputed: weights are constant, paper §5)
+
+Real 2D correlation (paper §5.1, eqs 12-14) is the separably identical form
+over an (Mk, Nk) window.
+
+Complex 1D correlation:
+  - CPM4 form (paper §8, eqs 27-30)
+  - CPM3 form (paper §11, eqs 44-47), correction ``Sw`` complex (eq 47).
+
+Modes: ``standard`` (lax conv baseline), ``square`` (faithful emulation via
+extracted windows), ``square_virtual`` (MXU/conv-unit routed, corrections
+carried, same contract).  The emulation vectorizes over windows so operand
+sizes should stay test-scale; the Pallas streaming kernel lives in
+kernels/sq_conv.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import squares as sq
+
+__all__ = ["correlate1d", "convolve1d", "correlate2d",
+           "complex_correlate1d", "sliding_sum_squares", "iir_filter"]
+
+
+def _windows1d(x, n):
+    """(..., L) -> (..., L-n+1, n) sliding windows (valid correlation)."""
+    L = x.shape[-1]
+    k = L - n + 1
+    idx = jnp.arange(k)[:, None] + jnp.arange(n)[None, :]
+    return x[..., idx]
+
+
+def sliding_sum_squares(x, n):
+    """``sum_i x_{i+k}^2`` for every window position k (the shared x^2 term).
+
+    Computed once per sample stream, as the paper's Fig.8 architecture does
+    (each x^2 is squared once and reused by every window covering it).
+    """
+    xs = sq.square(x)
+    c = jnp.cumsum(xs, axis=-1)
+    zero = jnp.zeros_like(c[..., :1])
+    c = jnp.concatenate([zero, c], axis=-1)
+    return c[..., n:] - c[..., :-n]
+
+
+def correlate1d(x, w, *, mode: str = "standard"):
+    """Valid 1D correlation ``y_k = sum_i w_i x_{i+k}`` (paper eq 10)."""
+    n = w.shape[-1]
+    if mode == "standard":
+        return jax.lax.conv_general_dilated(
+            x[None, None, :].astype(jnp.result_type(x, w)),
+            w[None, None, ::1].astype(jnp.result_type(x, w)),
+            window_strides=(1,), padding="VALID",
+            dimension_numbers=("NCH", "OIH", "NCH"))[0, 0]
+    acc = sq.accum_dtype(x.dtype)
+    xw = x.astype(acc)
+    ww = w.astype(acc)
+    if mode == "square":
+        win = _windows1d(xw, n)                             # (K, n)
+        sab = jnp.sum(sq.pm(win, ww), axis=-1)              # sum (w+x)^2
+        sxk = -sliding_sum_squares(xw, n)                   # shared x^2 term
+        sw = -jnp.sum(sq.square(ww), axis=-1)               # precomputable
+        return sq.halve(sab + sxk + sw)
+    if mode == "square_virtual":
+        y = correlate1d(x, w, mode="standard").astype(acc)
+        return sq.halve(y + y)                              # x2 carry + shift
+    raise ValueError(f"unknown conv mode {mode!r}")
+
+
+def convolve1d(x, w, *, mode: str = "standard"):
+    """Valid 1D convolution = correlation with the flipped kernel (paper §5:
+    "we won't make a distinction ... the mechanism is essentially the same")."""
+    return correlate1d(x, w[..., ::-1], mode=mode)
+
+
+def correlate2d(x, w, *, mode: str = "standard"):
+    """Valid 2D correlation (paper §5.1 eq 12)."""
+    mk, nk = w.shape
+    if mode == "standard":
+        dt = jnp.result_type(x, w)
+        return jax.lax.conv_general_dilated(
+            x[None, None].astype(dt), w[None, None].astype(dt),
+            window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))[0, 0]
+    acc = sq.accum_dtype(x.dtype)
+    xw = x.astype(acc)
+    ww = w.astype(acc)
+    if mode == "square":
+        H, W = xw.shape
+        oh, ow = H - mk + 1, W - nk + 1
+        ih = jnp.arange(oh)[:, None] + jnp.arange(mk)[None, :]
+        iw = jnp.arange(ow)[:, None] + jnp.arange(nk)[None, :]
+        win = xw[ih[:, None, :, None], iw[None, :, None, :]]  # (oh, ow, mk, nk)
+        sab = jnp.sum(sq.pm(win, ww), axis=(-2, -1))           # eq 14 Swx
+        sx = -jnp.sum(sq.square(win), axis=(-2, -1))           # eq 14 Sx
+        sw = -jnp.sum(sq.square(ww))                           # eq 14 Sw
+        return sq.halve(sab + sx + sw)
+    if mode == "square_virtual":
+        y = correlate2d(x, w, mode="standard").astype(acc)
+        return sq.halve(y + y)
+    raise ValueError(f"unknown conv mode {mode!r}")
+
+
+def complex_correlate1d(x, w, *, mode: str = "standard"):
+    """Complex valid 1D correlation, CPM4 (paper §8) or CPM3 (paper §11).
+
+    x: complex samples (L,); w: complex kernel (n,).  Paper's kernel slides
+    over samples: z_k = sum_i w_i x_{i+k} with w = c + js, x = x + jy.
+    """
+    if mode == "standard":
+        return correlate1d(jnp.real(x), jnp.real(w)) - correlate1d(jnp.imag(x), jnp.imag(w)) \
+            + 1j * (correlate1d(jnp.imag(x), jnp.real(w)) + correlate1d(jnp.real(x), jnp.imag(w)))
+    n = w.shape[-1]
+    acc = sq.accum_dtype(jnp.real(x).dtype)
+    xr, xi = jnp.real(x).astype(acc), jnp.imag(x).astype(acc)
+    c, s = jnp.real(w).astype(acc), jnp.imag(w).astype(acc)
+    wr_x = _windows1d(xr, n)                                  # (K, n)
+    wi_x = _windows1d(xi, n)
+    if mode == "cpm4":
+        # eq 28 / 29 with shared -x^2-y^2 and precomputed Sw (eq 30)
+        re2 = jnp.sum(sq.pm(c, wr_x) + sq.pm_neg(s, wi_x), axis=-1)
+        im2 = jnp.sum(sq.pm(s, wr_x) + sq.pm(c, wi_x), axis=-1)
+        sxy = -(sliding_sum_squares(xr, n) + sliding_sum_squares(xi, n))
+        sw = -jnp.sum(sq.square(c) + sq.square(s))
+        return sq.halve(re2 + sxy + sw) + 1j * sq.halve(im2 + sxy + sw)
+    if mode == "cpm3":
+        # eqs 45 / 46 with complex correction Sw (eq 47)
+        shared = sq.cpm3_shared(wr_x, wi_x, c)                # (c+x+y)^2
+        re2 = jnp.sum(sq.cpm3_real(wr_x, wi_x, c, s, shared=shared), axis=-1)
+        im2 = jnp.sum(sq.cpm3_imag(wr_x, wi_x, c, s, shared=shared), axis=-1)
+        # data-side common terms: (-(x+y)^2 + y^2) + j(-(x+y)^2 - x^2)
+        sxy_re = -sliding_sum_squares(xr + xi, n) + sliding_sum_squares(xi, n)
+        sxy_im = -sliding_sum_squares(xr + xi, n) - sliding_sum_squares(xr, n)
+        sw_re = jnp.sum(-sq.square(c) + sq.square(c + s))
+        sw_im = jnp.sum(-sq.square(c) - sq.square(s - c))
+        return sq.halve(re2 + sxy_re + sw_re) + 1j * sq.halve(im2 + sxy_im + sw_im)
+    raise ValueError(f"unknown complex conv mode {mode!r}")
+
+
+def iir_filter(x, b, a, *, mode: str = "standard"):
+    """IIR filter (paper §5: "For IIR filters we can apply the same
+    principles").
+
+    y_t = sum_i b_i x_{t-i} + sum_j a_j y_{t-j-1}
+
+    The feed-forward taps use the square-based correlation machinery; the
+    feedback taps apply the PM substitution per step inside the recurrence:
+    each product a_j * y is computed as ((a_j + y)^2 - a_j^2 - y^2) / 2 with
+    the kernel-side sum of squares Sa precomputed (constant coefficients).
+    """
+    nb = b.shape[-1]
+    na = a.shape[-1]
+    acc = sq.accum_dtype(x.dtype)
+    xw = jnp.pad(x.astype(acc), (nb - 1, 0))
+    ff = correlate1d(xw, b[::-1],
+                     mode="square" if mode == "square" else "standard")
+
+    aw = a.astype(acc)
+    sa = jnp.sum(sq.square(aw))                      # precomputed (constants)
+
+    def step(hist, f_t):
+        # hist: last na outputs, newest first
+        if mode == "square":
+            pm = jnp.sum(sq.pm(aw, hist))            # sum (a_j + y)^2
+            sy = jnp.sum(sq.square(hist))            # y^2 terms (recomputed)
+            fb = sq.halve(pm - sa - sy)
+        else:
+            fb = jnp.sum(aw * hist)
+        y_t = f_t + fb
+        new_hist = jnp.concatenate([y_t[None], hist[:-1]])
+        return new_hist, y_t
+
+    hist0 = jnp.zeros((na,), acc)
+    _, y = jax.lax.scan(step, hist0, ff)
+    return y

@@ -1,0 +1,149 @@
+"""Analytical hardware cost model for the paper's architectures.
+
+The paper's headline claim is a *gate-count* saving: "an n-bit squaring
+circuit requires about half the gate count of an nxn multiplier" (paper ref
+[1], Chen et al., "Exact and Approximate Squarers for Error-Tolerant
+Applications").  This module provides an area/power proxy model (in
+full-adder-equivalent units, the standard array-arithmetic accounting) for:
+
+- multiplier-based vs square-based MACs (paper Fig.1a vs Fig.1b)
+- MAC vs PM systolic arrays (paper §3.2, Fig.2/3)
+- MAC vs PM tensor cores (paper §3.3, Fig.4/5)
+- complex multipliers (3-mult Karatsuba form, paper Fig.9b) vs CPM4 / CPM3
+  blocks (paper Fig.9a / Fig.12a)
+
+Model conventions (documented, conservative):
+- array multiplier  area(n x n)  = n^2            FA-equivalents
+- squarer           area(n)      = n^2 / 2        (paper ref [1]: ~half)
+- ripple/CLA adder  area(n)      = n
+- register          area(n)      = n              (flop ~ FA proxy)
+- PM operand adder works on (n+1) bits; the squarer sees n+1 bits;
+  accumulators are sized 2n + log2(K) for a K-deep reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = ["ArithCost", "mac_cost", "pm_mac_cost", "complex_mac_cost",
+           "cpm4_cost", "cpm3_cost", "systolic_array_cost",
+           "tensor_core_cost", "savings_table"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArithCost:
+    name: str
+    area: float          # FA-equivalents
+    squarers: int = 0
+    multipliers: int = 0
+    adders: int = 0
+
+    def ratio_to(self, other: "ArithCost") -> float:
+        return self.area / other.area
+
+
+def _mult_area(n: int) -> float:
+    return float(n * n)
+
+
+def _sq_area(n: int) -> float:
+    return float(n * n) / 2.0
+
+
+def _add_area(n: int) -> float:
+    return float(n)
+
+
+def _acc_bits(n: int, depth: int) -> int:
+    return 2 * n + max(1, math.ceil(math.log2(max(2, depth))))
+
+
+def mac_cost(n: int, depth: int = 1024) -> ArithCost:
+    """Multiplier MAC (paper Fig.1a): n x n multiplier + accumulator adder."""
+    acc = _acc_bits(n, depth)
+    area = _mult_area(n) + _add_area(acc) + acc
+    return ArithCost("mac", area, multipliers=1, adders=1)
+
+
+def pm_mac_cost(n: int, depth: int = 1024) -> ArithCost:
+    """Partial-multiplication MAC (paper Fig.1b): operand adder + squarer +
+    accumulator.  The squarer sees n+1 bits (sum growth)."""
+    acc = _acc_bits(n + 1, depth)
+    area = _add_area(n + 1) + _sq_area(n + 1) + _add_area(acc) + acc
+    return ArithCost("pm_mac", area, squarers=1, adders=2)
+
+
+def complex_mac_cost(n: int, depth: int = 1024) -> ArithCost:
+    """Complex MAC via 3 real multipliers (paper Fig.9b, Karatsuba form)."""
+    acc = _acc_bits(n + 1, depth)
+    area = 3 * _mult_area(n + 1) + 5 * _add_area(n + 1) + 2 * (_add_area(acc) + acc)
+    return ArithCost("complex_mac3", area, multipliers=3, adders=7)
+
+
+def cpm4_cost(n: int, depth: int = 1024) -> ArithCost:
+    """CPM with 4 squarers (paper Fig.9a): 4 operand adders + 4 squarers +
+    2 combine adders + 2 accumulators."""
+    acc = _acc_bits(n + 1, depth)
+    area = 4 * (_add_area(n + 1) + _sq_area(n + 1)) + 2 * _add_area(2 * (n + 1)) \
+        + 2 * (_add_area(acc) + acc)
+    return ArithCost("cpm4", area, squarers=4, adders=8)
+
+
+def cpm3_cost(n: int, depth: int = 1024) -> ArithCost:
+    """CPM3 (paper Fig.12a): 3 squarers on (n+2)-bit three-operand sums,
+    shared square reused by both output planes."""
+    acc = _acc_bits(n + 2, depth)
+    area = 3 * (_sq_area(n + 2)) + 5 * _add_area(n + 2) + 2 * _add_area(2 * (n + 2)) \
+        + 2 * (_add_area(acc) + acc)
+    return ArithCost("cpm3", area, squarers=3, adders=9)
+
+
+def systolic_array_cost(rows: int, cols: int, n: int, square: bool,
+                        depth: int = 1024) -> ArithCost:
+    """Weight-stationary systolic array (paper Fig.2/3).
+
+    Each PE holds REGA + mux + compute; the square version adds the Sa/Sb
+    injection path (one adder) at the array periphery per column.
+    """
+    pe = pm_mac_cost(n, depth) if square else mac_cost(n, depth)
+    periph = cols * _add_area(_acc_bits(n + 1, depth)) if square else 0.0
+    area = rows * cols * (pe.area + n) + periph          # + REGA register
+    return ArithCost("sq_systolic" if square else "mac_systolic", area,
+                     squarers=pe.squarers * rows * cols,
+                     multipliers=pe.multipliers * rows * cols)
+
+
+def tensor_core_cost(m: int, n_dim: int, k: int, n: int, square: bool,
+                     depth: int = 1024) -> ArithCost:
+    """Tensor core (paper Fig.4/5): M*P PEs each with a K-wide dot-product
+    reduction tree; square version initializes accumulators with Sa+Sb."""
+    acc = _acc_bits(n + 1, depth)
+    if square:
+        unit = _add_area(n + 1) + _sq_area(n + 1)        # PM unit
+    else:
+        unit = _mult_area(n)
+    tree = (k - 1) * _add_area(acc)
+    pe = k * unit + tree + _add_area(acc) + acc
+    area = m * n_dim * pe
+    return ArithCost("sq_tensor_core" if square else "mac_tensor_core", area,
+                     squarers=(k * m * n_dim if square else 0),
+                     multipliers=(0 if square else k * m * n_dim))
+
+
+def savings_table(bitwidths=(8, 16, 32), depth: int = 1024):
+    """Area ratios (square-based / multiplier-based) per paper architecture."""
+    rows = []
+    for n in bitwidths:
+        rows.append({
+            "bits": n,
+            "pm_mac/mac": pm_mac_cost(n, depth).ratio_to(mac_cost(n, depth)),
+            "cpm4/cmac3": cpm4_cost(n, depth).ratio_to(complex_mac_cost(n, depth)),
+            "cpm3/cmac3": cpm3_cost(n, depth).ratio_to(complex_mac_cost(n, depth)),
+            "sq_systolic/mac_systolic(128x128)":
+                systolic_array_cost(128, 128, n, True, depth).ratio_to(
+                    systolic_array_cost(128, 128, n, False, depth)),
+            "sq_tcore/mac_tcore(8x8x8)":
+                tensor_core_cost(8, 8, 8, n, True, depth).ratio_to(
+                    tensor_core_cost(8, 8, 8, n, False, depth)),
+        })
+    return rows

@@ -1,0 +1,178 @@
+"""Fair-and-Square primitive algebra (paper §2, §6.1, §9.1).
+
+The paper replaces every multiplication inside a reduction with squaring
+operations via
+
+    ab  = ((a+b)^2 - a^2 - b^2) / 2        (1)
+   -ab  = ((a-b)^2 - a^2 - b^2) / 2        (2)
+
+This module defines the *scalar/elementwise* building blocks exactly as the
+paper's hardware datapaths compute them:
+
+- ``pm(a, b)``            -- real partial multiplication  (a+b)^2      (Fig.1b)
+- ``cpm4(x, y)``          -- complex partial mult, 4 squares (eq 21/22, Fig.9a)
+- ``cpm3(x, y)``          -- complex partial mult, 3 squares (eq 37/38, Fig.12a)
+
+plus the correction terms that the architectures inject into accumulators
+(``Sa``/``Sb`` row/column terms).  Everything here is *scale-2* arithmetic:
+like the paper's circuits, accumulating PM terms plus corrections yields
+``2 * (true result)``; callers apply :func:`halve` at the end (the paper's
+"simple right shift").
+
+All functions are pure jnp and differentiable; integer dtypes follow the
+paper's bit-growth rules (int8 operands -> int16 sums -> int32 squares).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "square",
+    "pm",
+    "pm_neg",
+    "cpm4_real",
+    "cpm4_imag",
+    "cpm3_shared",
+    "cpm3_real",
+    "cpm3_imag",
+    "row_correction",
+    "col_correction",
+    "halve",
+    "widen_for_sum",
+    "accum_dtype",
+]
+
+
+def accum_dtype(dtype) -> jnp.dtype:
+    """Accumulator dtype for square-form arithmetic.
+
+    The paper assumes an n-bit squarer emits 2n bits into a wide accumulator.
+    We mirror that: int8/int16 accumulate in int32; other ints in int64;
+    bf16/f16 accumulate in f32 (matching MXU accumulation); f32/f64 unchanged.
+    """
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        if dtype.itemsize <= 2:
+            return jnp.dtype(jnp.int32)
+        import jax
+        return jnp.dtype(jnp.int64 if jax.config.jax_enable_x64 else jnp.int32)
+    if dtype in (jnp.bfloat16, jnp.float16):
+        return jnp.dtype(jnp.float32)
+    return dtype
+
+
+def widen_for_sum(x):
+    """Widen an operand so that ``a + b`` cannot overflow before squaring.
+
+    int8 sums need 9 bits -> int16 is sufficient; we go straight to the
+    accumulator dtype so the subsequent square is exact.
+    """
+    return x.astype(accum_dtype(x.dtype))
+
+
+def square(x):
+    """The squaring primitive.  On the paper's silicon this is the ~half-area
+    squarer circuit; here it is an elementwise multiply executed in the
+    accumulator dtype so integer paths are exact."""
+    w = widen_for_sum(x)
+    return w * w
+
+
+def pm(a, b):
+    """Real partial multiplication (paper Fig.1b): ``(a+b)^2``.
+
+    ``sum_k pm(a_k, b_k) + Sa + Sb == 2 * sum_k a_k b_k`` with the row/col
+    corrections from :func:`row_correction` / :func:`col_correction`.
+    """
+    return square(widen_for_sum(a) + widen_for_sum(b))
+
+
+def pm_neg(a, b):
+    """Negative-product partial multiplication (paper eq 2): ``(a-b)^2``.
+
+    ``sum_k pm_neg(a_k, b_k) + Sa + Sb == -2 * sum_k a_k b_k``.
+    """
+    return square(widen_for_sum(a) - widen_for_sum(b))
+
+
+# --------------------------------------------------------------------------
+# Complex partial multiplications.  Operands are passed as separate real and
+# imaginary planes (a + jb) and (c + js) -- exactly the four wires entering
+# the paper's CPM blocks.
+# --------------------------------------------------------------------------
+
+def cpm4_real(a, b, c, s):
+    """CPM (4 squares) real part, paper eq (21): ``(a+c)^2 + (b-s)^2``."""
+    return pm(a, c) + pm_neg(b, s)
+
+
+def cpm4_imag(a, b, c, s):
+    """CPM (4 squares) imag part, paper eq (22): ``(b+c)^2 + (a+s)^2``."""
+    return pm(b, c) + pm(a, s)
+
+
+def cpm3_shared(a, b, c):
+    """The square shared by CPM3 real and imaginary parts: ``(c+a+b)^2``."""
+    return square(widen_for_sum(a) + widen_for_sum(b) + widen_for_sum(c))
+
+
+def cpm3_real(a, b, c, s, shared=None):
+    """CPM3 real part, paper eq (37): ``(c+a+b)^2 - (b+c+s)^2``."""
+    if shared is None:
+        shared = cpm3_shared(a, b, c)
+    return shared - square(widen_for_sum(b) + widen_for_sum(c) + widen_for_sum(s))
+
+
+def cpm3_imag(a, b, c, s, shared=None):
+    """CPM3 imag part, paper eq (38): ``(c+a+b)^2 + (a+s-c)^2``."""
+    if shared is None:
+        shared = cpm3_shared(a, b, c)
+    return shared + square(widen_for_sum(a) + widen_for_sum(s) - widen_for_sum(c))
+
+
+# --------------------------------------------------------------------------
+# Correction terms (paper eq 5).  Negative sums of squares along the
+# contraction axis; reused across an entire row/column of outputs.
+# --------------------------------------------------------------------------
+
+def row_correction(a, axis: int = -1):
+    """``Sa_i = -sum_k a_ik^2`` along the contraction axis (paper eq 5)."""
+    return -jnp.sum(square(a), axis=axis)
+
+
+def col_correction(b, axis: int = 0):
+    """``Sb_j = -sum_k b_kj^2`` along the contraction axis (paper eq 5)."""
+    return -jnp.sum(square(b), axis=axis)
+
+
+def square_approx(x, *, drop_bits: int = 4):
+    """Approximate squaring (paper conclusion: "Approximate squaring is also
+    a possibility"; paper ref [1] studies exact AND approximate squarers for
+    error-tolerant applications).
+
+    Integer path: truncated squarer -- the low ``drop_bits`` bits of the
+    operand are zeroed before squaring (hardware: the corresponding partial-
+    product rows are removed, shrinking the squarer beyond the exact-squarer
+    ~50% saving).  Relative error <= 2^(drop_bits+1) / |x|.
+
+    Float path: the square is computed in bfloat16 (8-bit mantissa ~ a
+    truncated mantissa multiplier array).
+    """
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        w = widen_for_sum(x)
+        t = jnp.right_shift(w, drop_bits) << drop_bits
+        return t * t
+    xb = x.astype(jnp.bfloat16)
+    return (xb * xb).astype(accum_dtype(x.dtype))
+
+
+def halve(x):
+    """The paper's final "simple right shift": recover ``c`` from ``2c``.
+
+    Exact for the integer path because every accumulated quantity
+    ``(a+b)^2 - a^2 - b^2 = 2ab`` is even.
+    """
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return jnp.right_shift(x, 1)
+    return x * np.array(0.5, dtype=x.dtype)

@@ -1,0 +1,126 @@
+"""Square-based linear transforms (paper §4, §7, §10).
+
+Real-coefficient transform of a real vector (paper eq 7/8):
+    X_k = sum_i w_ki x_i
+        = 1/2 ( sum_i (w_ki + x_i)^2  - sum_i x_i^2  + Sw_k )
+    Sw_k = -sum_i w_ki^2  (precomputed: "the coefficients are constants", §4)
+
+The ``sum_i x_i^2`` term is common to all k and computed once (paper: "can be
+calculated once and subtracted from all the terms").
+
+Complex-coefficient transforms of complex vectors:
+  - CPM4 form (paper §7, eqs 23-26) with data term Sxy = -sum(x^2+y^2) and
+    per-row S_k = -sum(c^2+s^2); unit-modulus rows (DFT) give S_k = -N.
+  - CPM3 form (paper §10, eqs 39-43).
+
+``SquareTransform`` precomputes the coefficient-side corrections at
+construction, amortizing them over many applications -- the paper's stated
+deployment model ("a single upfront cost ... over multiple subsequent
+transformations").
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import squares as sq
+
+__all__ = ["SquareTransform", "ComplexSquareTransform", "dft_matrix",
+           "real_transform"]
+
+
+def dft_matrix(n: int, dtype=jnp.complex64):
+    k = np.arange(n)
+    w = np.exp(-2j * np.pi * np.outer(k, k) / n)
+    return jnp.asarray(w, dtype=dtype)
+
+
+def real_transform(w, x, *, mode: str = "standard"):
+    """One-shot real transform X_k = sum_i w_ki x_i (paper eq 7/8)."""
+    if mode == "standard":
+        return w @ x
+    acc = sq.accum_dtype(x.dtype)
+    ww, xw = w.astype(acc), x.astype(acc)
+    if mode == "square":
+        sab = jnp.sum(sq.pm(ww, xw[None, :]), axis=-1)   # sum (w_ki + x_i)^2
+        sx = jnp.sum(sq.square(xw), axis=-1)             # common x^2 term
+        swk = -jnp.sum(sq.square(ww), axis=-1)           # Sw_k (eq 9)
+        return sq.halve(sab - sx + swk)
+    raise ValueError(f"unknown transform mode {mode!r}")
+
+
+class SquareTransform:
+    """Real-coefficient square-based transform engine (paper Fig.6b).
+
+    Registers are initialized with the precomputed ``Sw_k``; each input sample
+    is added to the k-th coefficient column, squared, the shared ``x_i^2``
+    subtracted, and accumulated.  We execute the same algebra vectorized.
+    Also covers complex *coefficients* over real inputs (paper §4 end): two
+    instances, one per coefficient plane -- handled by complex ``w``.
+    """
+
+    def __init__(self, w):
+        self.complex_coeff = jnp.iscomplexobj(w)
+        if self.complex_coeff:
+            self.wr = jnp.real(w)
+            self.wi = jnp.imag(w)
+            self.swk_r = -jnp.sum(sq.square(self.wr), axis=-1)
+            self.swk_i = -jnp.sum(sq.square(self.wi), axis=-1)
+        else:
+            self.w = w
+            self.swk = -jnp.sum(sq.square(w), axis=-1)   # eq 9, precomputed
+
+    def __call__(self, x):
+        acc = sq.accum_dtype(x.dtype)
+        xw = x.astype(acc)
+        sx = jnp.sum(sq.square(xw), axis=-1)
+        if self.complex_coeff:
+            re = sq.halve(jnp.sum(sq.pm(self.wr.astype(acc), xw[None, :]), -1) - sx + self.swk_r)
+            im = sq.halve(jnp.sum(sq.pm(self.wi.astype(acc), xw[None, :]), -1) - sx + self.swk_i)
+            return re + 1j * im
+        sab = jnp.sum(sq.pm(self.w.astype(acc), xw[None, :]), axis=-1)
+        return sq.halve(sab - sx + self.swk)
+
+
+class ComplexSquareTransform:
+    """Complex-coefficient transform of complex inputs (paper §7 CPM4, §10 CPM3)."""
+
+    def __init__(self, w, *, mode: str = "cpm3"):
+        if mode not in ("cpm4", "cpm3"):
+            raise ValueError(f"mode must be cpm4|cpm3, got {mode!r}")
+        self.mode = mode
+        self.c = jnp.real(w)
+        self.s = jnp.imag(w)
+        if mode == "cpm4":
+            # S_k = -sum_i (c^2 + s^2)  (eq 25); == -N for unit-modulus rows.
+            self.sk = -jnp.sum(sq.square(self.c) + sq.square(self.s), axis=-1)
+        else:
+            # Sx_k / Sy_k (eqs 41 / 43)
+            self.sxk = jnp.sum(-sq.square(self.c) + sq.square(self.c + self.s), axis=-1)
+            self.syk = jnp.sum(-sq.square(self.c) - sq.square(self.s - self.c), axis=-1)
+
+    def __call__(self, z):
+        acc = sq.accum_dtype(jnp.real(z).dtype)
+        x = jnp.real(z).astype(acc)
+        y = jnp.imag(z).astype(acc)
+        c = self.c.astype(acc)
+        s = self.s.astype(acc)
+        if self.mode == "cpm4":
+            # eqs 24 / 26
+            re2 = jnp.sum(sq.pm(c, x[None, :]) + sq.pm_neg(s, y[None, :]), -1)
+            im2 = jnp.sum(sq.pm(c, y[None, :]) + sq.pm(s, x[None, :]), -1)
+            sxy = -jnp.sum(sq.square(x) + sq.square(y))      # eq 25, common
+            re = sq.halve(re2 + sxy + self.sk)
+            im = sq.halve(im2 + sxy + self.sk)
+            return re + 1j * im
+        # CPM3: eqs 40 / 42 with shared (c + x + y)^2
+        shared = sq.cpm3_shared(x[None, :], y[None, :], c)
+        re2 = jnp.sum(sq.cpm3_real(x[None, :], y[None, :], c, s, shared=shared), -1)
+        im2 = jnp.sum(sq.cpm3_imag(x[None, :], y[None, :], c, s, shared=shared), -1)
+        sxy = jnp.sum(-sq.square(x + y) + sq.square(y))      # eq 41, common
+        syx = jnp.sum(-sq.square(x + y) - sq.square(x))      # eq 43, common
+        re = sq.halve(re2 + sxy + self.sxk)
+        im = sq.halve(im2 + syx + self.syk)
+        return re + 1j * im

@@ -1,0 +1,102 @@
+"""Deterministic synthetic token pipeline with checkpointable state.
+
+Production stand-in for a tokenized-shard reader: per-host sharding,
+sequence packing semantics, and an iterator whose state (epoch, step) is
+saved/restored by the checkpoint manager so fault-tolerant restarts resume
+the exact batch stream.  The generator is a counter-based PRNG (threefry via
+jax.random.fold_in), so batch t is reproducible from (seed, t) alone --
+elastically rescaling the data-parallel world just re-partitions the same
+global stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DataConfig", "SyntheticLM", "make_batch_specs"]
+
+
+@dataclasses.dataclass
+class DataConfig:
+    global_batch: int
+    seq_len: int
+    vocab: int
+    seed: int = 1234
+    # markov-ish structure so the LM has something learnable
+    structure: bool = True
+
+
+class SyntheticLM:
+    """Stateful iterator: ``next_batch()`` -> {tokens: (B, S+1)} (+ frontend
+    stubs added by the model input spec when needed)."""
+
+    def __init__(self, cfg: DataConfig, model_cfg=None, start_step: int = 0):
+        self.cfg = cfg
+        self.model_cfg = model_cfg
+        self.step = start_step
+
+    # ----------------------------------------------------------- state
+    def state_dict(self) -> Dict[str, int]:
+        return {"step": self.step, "seed": self.cfg.seed}
+
+    def load_state_dict(self, s: Dict[str, int]) -> None:
+        assert s["seed"] == self.cfg.seed, "data seed changed across restart"
+        self.step = int(s["step"])
+
+    # ----------------------------------------------------------- batches
+    def _tokens(self, step: int) -> np.ndarray:
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, step))
+        B, S = cfg.global_batch, cfg.seq_len + 1
+        if not cfg.structure:
+            return rng.integers(0, cfg.vocab, (B, S), dtype=np.int32)
+        # learnable structure: noisy arithmetic sequences mod vocab
+        start = rng.integers(0, cfg.vocab, (B, 1))
+        stride = rng.integers(1, 17, (B, 1))
+        base = (start + stride * np.arange(S)[None, :]) % cfg.vocab
+        noise = rng.integers(0, cfg.vocab, (B, S))
+        take_noise = rng.random((B, S)) < 0.05
+        return np.where(take_noise, noise, base).astype(np.int32)
+
+    def next_batch(self) -> Dict[str, jnp.ndarray]:
+        cfg = self.cfg
+        batch = {"tokens": jnp.asarray(self._tokens(self.step))}
+        mc = self.model_cfg
+        if mc is not None and mc.prefix_tokens:
+            rng = np.random.default_rng((cfg.seed, self.step, 7))
+            batch["patches"] = jnp.asarray(
+                rng.normal(size=(cfg.global_batch, mc.prefix_tokens,
+                                 mc.d_model)).astype(np.float32) * 0.02)
+        if mc is not None and mc.encoder_layers:
+            rng = np.random.default_rng((cfg.seed, self.step, 11))
+            batch["frames"] = jnp.asarray(
+                rng.normal(size=(cfg.global_batch, mc.encoder_seq,
+                                 mc.d_model)).astype(np.float32) * 0.02)
+        self.step += 1
+        return batch
+
+
+def make_batch_specs(model_cfg, shape_cfg, *, for_train: bool = True):
+    """ShapeDtypeStruct stand-ins for every model input (dry-run contract:
+    weak-type-correct, shardable, no device allocation)."""
+    B = shape_cfg.global_batch
+    S = shape_cfg.seq_len
+    specs = {}
+    if shape_cfg.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S + 1), jnp.int32)
+    elif shape_cfg.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:                                       # decode: one new token
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    if shape_cfg.kind in ("train", "prefill"):
+        if model_cfg.prefix_tokens:
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, model_cfg.prefix_tokens, model_cfg.d_model), jnp.float32)
+        if model_cfg.encoder_layers:
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, model_cfg.encoder_seq, model_cfg.d_model), jnp.float32)
+    return specs

@@ -1,0 +1,29 @@
+"""Process-global mesh context.
+
+The model code is mesh-agnostic; blocks that need manual SPMD (MoE's
+shard_map dispatch) discover the active mesh here.  ``use_mesh`` is entered
+by the launcher / dry-run around tracing.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+_MESH = None
+
+
+def current_mesh():
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield mesh
+    finally:
+        _MESH = prev

@@ -1,0 +1,155 @@
+"""Logical-axis sharding rules (MaxText-style) with automatic rule dropping.
+
+Each parameter carries logical axis names (see layers/param.py); the rules
+below map them to mesh axes.  A rule is silently DROPPED for a given tensor
+dim when the dim size is not divisible by the mesh-axis size -- this is what
+makes kv_heads=1 (paligemma, recurrentgemma) or 8-head attention work on a
+16-way model axis: those tensors fall back to replication while vocab/mlp
+stay fully sharded.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.layers.param import axes_tree, is_spec
+
+__all__ = ["LOGICAL_RULES", "logical_to_spec", "param_shardings",
+           "input_shardings", "act_spec", "constrain"]
+
+# logical axis -> mesh axis (first rule whose mesh axis divides the dim wins)
+LOGICAL_RULES: Tuple[Tuple[str, Optional[str]], ...] = (
+    ("vocab", "model"),
+    ("mlp", "model"),
+    ("q_heads", "model"),       # flattened heads*head_dim projections
+    ("kv_proj", "model"),
+    # NOTE: "expert" is deliberately NOT sharded: MoE experts run tensor-
+    # parallel on their hidden ("mlp") axis inside shard_map (see moe.py);
+    # sharding the expert axis here would fight the shard_map in_specs and
+    # force a full expert-weight all-gather every layer (observed 207
+    # GB/device on moonshot decode before this rule was removed).
+    ("expert", None),
+    ("rnn", "model"),
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("head_dim", None),         # never split a head across devices
+    ("batch", ("pod", "data")),
+    ("q_chunks", "model"),   # folded attention q-chunk axis (see attention.py)
+    ("embed", None),            # replicated (activations row dim)
+    ("layers", None),
+    ("seq", None),
+    ("conv", None),
+)
+
+_RULES = dict(LOGICAL_RULES)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis if a in mesh.axis_names]))
+    return int(mesh.shape[axis]) if axis in mesh.axis_names else 1
+
+
+def logical_to_spec(mesh: Mesh, shape, axes) -> P:
+    """Build a PartitionSpec for one tensor, dropping indivisible rules."""
+    used = set()
+    entries = []
+    for dim, ax in zip(shape, axes):
+        mesh_ax = _RULES.get(ax) if ax is not None else None
+        if isinstance(mesh_ax, tuple):
+            mesh_ax = tuple(a for a in mesh_ax if a in mesh.axis_names)
+            mesh_ax = mesh_ax or None
+        elif mesh_ax is not None and mesh_ax not in mesh.axis_names:
+            mesh_ax = None
+        if mesh_ax is None:
+            entries.append(None)
+            continue
+        size = _axis_size(mesh, mesh_ax)
+        key = mesh_ax if not isinstance(mesh_ax, tuple) else mesh_ax
+        flat = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+        if dim % size != 0 or any(a in used for a in flat):
+            entries.append(None)          # drop rule: replicate this dim
+            continue
+        used.update(flat)
+        entries.append(mesh_ax)
+    return P(*entries)
+
+
+def param_shardings(mesh: Mesh, spec_tree):
+    """NamedSharding tree matching a ParamSpec tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, logical_to_spec(mesh, s.shape, s.axes)),
+        spec_tree, is_leaf=is_spec)
+
+
+def act_spec(mesh: Mesh, *axes) -> P:
+    """PartitionSpec for an activation given logical axis names per dim."""
+    return _act(mesh, axes)
+
+
+def _act(mesh, axes):
+    entries = []
+    used = set()
+    for ax in axes:
+        mesh_ax = _RULES.get(ax) if ax is not None else None
+        if isinstance(mesh_ax, tuple):
+            mesh_ax = tuple(a for a in mesh_ax if a in mesh.axis_names) or None
+        elif mesh_ax is not None and mesh_ax not in mesh.axis_names:
+            mesh_ax = None
+        flat = (mesh_ax,) if isinstance(mesh_ax, str) else (mesh_ax or ())
+        if mesh_ax is not None and not any(a in used for a in flat):
+            used.update(flat)
+            entries.append(mesh_ax)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def zero1_shardings(mesh: Mesh, spec_tree):
+    """ZeRO-1 optimizer-state sharding: each m/v tensor keeps its param's
+    model-axis sharding and ADDITIONALLY shards its largest still-replicated
+    divisible dim over the data axes.  AdamW's update is elementwise, so no
+    extra collectives appear in the update itself; the psum of grads is
+    replaced by reduce-scatter + all-gather by GSPMD where profitable."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+
+    def one(s):
+        spec = list(logical_to_spec(mesh, s.shape, s.axes))
+        spec += [None] * (len(s.shape) - len(spec))
+        if dsize > 1:
+            # largest replicated dim divisible by the data size
+            cands = [(d, i) for i, d in enumerate(s.shape)
+                     if spec[i] is None and d % dsize == 0 and d >= dsize]
+            if cands:
+                _, i = max(cands)
+                spec[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, spec_tree, is_leaf=is_spec)
+
+
+def input_shardings(mesh: Mesh, batch_tree):
+    """Batch inputs: shard the leading batch dim over (pod, data) when it
+    divides; everything else replicated."""
+    def one(x):
+        shape = x.shape
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        size = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+        if shape and size > 1 and shape[0] % size == 0:
+            return NamedSharding(mesh, P(data_axes, *([None] * (len(shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(shape))))
+    return jax.tree.map(one, batch_tree)
+
+
+def constrain(x, mesh: Mesh, *axes):
+    """with_sharding_constraint using logical activation axes."""
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _act(mesh, axes)))

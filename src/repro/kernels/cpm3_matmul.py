@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: complex matmul with 3 squares per multiply (paper §9).
+
+Implements the CPM3 accumulator array (paper Fig.12b) as a K-blocked Pallas
+grid.  Four real input planes (a, b = Re/Im of X; c, s = Re/Im of Y) stream
+through; two output planes (re, im) stay VMEM-resident across the K axis.
+
+Per (h, i, k) the three squares are:
+    shared = (c + a + b)^2            -- computed ONCE, used by both planes
+    re    += shared - (b + c + s)^2   (paper eq 32)
+    im    += shared + (a + s - c)^2   (paper eq 34)
+
+Accumulators are initialized with the corrections (paper §9.1):
+    re0 = Sab_h + Scs_k       im0 = Sba_h + Ssc_k
+and the final K step halves both planes (the x2 output scale).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["cpm3_matmul_kernel", "cpm3_matmul_pallas"]
+
+
+def cpm3_matmul_kernel(a_ref, b_ref, c_ref, s_ref, sre_ref, sim_ref,
+                       re_ref, im_ref, *, nk: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        re_ref[...] = sre_ref[:, 0][:, None] + jnp.zeros_like(re_ref)
+        im_ref[...] = sim_ref[:, 0][:, None] + jnp.zeros_like(im_ref)
+
+    a = a_ref[...]            # (bm, bk)
+    b = b_ref[...]
+    c = c_ref[...]            # (bk, bn)
+    s = s_ref[...]
+    bk = a.shape[1]
+
+    def body(kk, carry):
+        re, im = carry
+        ak = a[:, kk][:, None]
+        bk_ = b[:, kk][:, None]
+        ck = c[kk, :][None, :]
+        sk = s[kk, :][None, :]
+        t = ck + ak + bk_
+        shared = t * t                      # the square shared by Re and Im
+        u = bk_ + ck + sk
+        v = ak + sk - ck
+        return re + (shared - u * u), im + (shared + v * v)
+
+    re, im = jax.lax.fori_loop(0, bk, body, (re_ref[...], im_ref[...]))
+    re_ref[...] = re
+    im_ref[...] = im
+
+    @pl.when(k_step == nk - 1)
+    def _finalize():
+        re_ref[...] = re_ref[...] * 0.5
+        im_ref[...] = im_ref[...] * 0.5
+
+
+def cpm3_matmul_pallas(a, b, c, s, sre, sim, scs, ssc, *, bm: int = 256,
+                       bn: int = 256, bk: int = 128, interpret: bool = False):
+    """Raw pallas_call wrapper; column corrections (scs, ssc) are folded into
+    the accumulator at init via broadcast rows.
+
+    sre: (m, 1) row corrections Sab_h; sim: (m, 1) Sba_h;
+    scs: (1, n) Scs_k; ssc: (1, n) Ssc_k.
+    The column terms enter through the init of the first K step: we pre-add
+    them into broadcast blocks by passing (sre + 0*...) -- to keep the kernel
+    arity small we fold scs/ssc into sre/sim OUTSIDE via rank-1 structure:
+    init = sre_h + scs_k is not rank-1-foldable into an (m,1) vector, so the
+    wrapper passes scs/ssc as extra (1, n) inputs appended to sre/sim blocks.
+    """
+    m, k = a.shape
+    _, n = c.shape
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+
+    # Fold the (1, n) column corrections in by augmenting the kernel inputs:
+    # simplest faithful route -- add them after the pallas_call (linearity),
+    # but the paper injects them at accumulator init; we honor that for the
+    # row terms and add column terms at the end (algebraically identical,
+    # and the systolic array of Fig.2 does exactly this: "as soon as the
+    # first result starts to emerge ... we start to shift in Sb_j which are
+    # added and finalise the results").
+    kernel = functools.partial(cpm3_matmul_kernel, nk=nk)
+    re, im = pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), a.dtype),
+            jax.ShapeDtypeStruct((m, n), a.dtype),
+        ],
+        interpret=interpret,
+    )(a, b, c, s, sre, sim)
+    # Column corrections, halved to match the already-halved planes.
+    return re + 0.5 * scs, im + 0.5 * ssc

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: complex matmul with 4 squares per multiply (paper §6).
+
+The CPM block of Fig.9a as a K-blocked Pallas grid: four real operand planes
+stream through; real/imag accumulators stay VMEM-resident and are
+initialized with the shared corrections ``Sx_h + Sy_k`` (eq 18) -- note
+CPM4's real and imaginary parts share ONE correction pair, unlike CPM3's
+four distinct terms.
+
+Per (h, i, k):
+    re += (a + c)^2 + (b - s)^2        (eq 21)
+    im += (b + c)^2 + (a + s)^2        (eq 22)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["cpm4_matmul_kernel", "cpm4_matmul_pallas"]
+
+
+def cpm4_matmul_kernel(a_ref, b_ref, c_ref, s_ref, sx_ref, re_ref, im_ref,
+                       *, nk: int):
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        # both planes start from the row correction Sx_h (col term added
+        # by the wrapper, mirroring Fig.2's staggered Sb_j injection)
+        re_ref[...] = sx_ref[:, 0][:, None] + jnp.zeros_like(re_ref)
+        im_ref[...] = sx_ref[:, 0][:, None] + jnp.zeros_like(im_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    c = c_ref[...]
+    s = s_ref[...]
+    bk = a.shape[1]
+
+    def body(kk, carry):
+        re, im = carry
+        ak = a[:, kk][:, None]
+        bk_ = b[:, kk][:, None]
+        ck = c[kk, :][None, :]
+        sk = s[kk, :][None, :]
+        t1 = ak + ck
+        t2 = bk_ - sk
+        t3 = bk_ + ck
+        t4 = ak + sk
+        return re + (t1 * t1 + t2 * t2), im + (t3 * t3 + t4 * t4)
+
+    re, im = jax.lax.fori_loop(0, bk, body, (re_ref[...], im_ref[...]))
+    re_ref[...] = re
+    im_ref[...] = im
+
+    @pl.when(k_step == nk - 1)
+    def _finalize():
+        re_ref[...] = re_ref[...] * 0.5
+        im_ref[...] = im_ref[...] * 0.5
+
+
+def cpm4_matmul_pallas(a, b, c, s, sx, sy, *, bm: int = 256, bn: int = 256,
+                       bk: int = 128, interpret: bool = False):
+    """sx: (m, 1) row corrections; sy: (1, n) column corrections (eq 18),
+    added post-kernel (linearity; see cpm3_matmul.py for the Fig.2 note)."""
+    m, k = a.shape
+    _, n = c.shape
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    nk = k // bk
+    kernel = functools.partial(cpm4_matmul_kernel, nk=nk)
+    re, im = pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), a.dtype),
+            jax.ShapeDtypeStruct((m, n), a.dtype),
+        ],
+        interpret=interpret,
+    )(a, b, c, s, sx)
+    return re + 0.5 * sy, im + 0.5 * sy

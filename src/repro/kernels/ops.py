@@ -1,0 +1,169 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles: dtype widening (paper's bit-growth rules), padding to tile
+multiples, correction-term precomputation, tile-size selection, and the
+interpret-mode fallback on CPU (kernels target TPU; interpret=True executes
+the kernel body in Python for bit-faithful validation).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import squares as sq
+from repro.kernels.sq_matmul import sq_matmul_pallas
+from repro.kernels.cpm3_matmul import cpm3_matmul_pallas
+from repro.kernels.cpm4_matmul import cpm4_matmul_pallas
+from repro.kernels.sq_conv import sq_conv_pallas
+
+__all__ = ["sq_matmul", "cpm3_matmul", "cpm4_matmul", "sq_conv",
+           "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pick_tiles(m, n, k, bm, bn, bk):
+    """Shrink default tiles for small operands (keep 128-lane alignment when
+    the operand allows it; interpret mode tolerates smaller)."""
+    bm = min(bm, max(8, m))
+    bn = min(bn, max(128 if n >= 128 else n, 1))
+    bk = min(bk, max(128 if k >= 128 else k, 1))
+    return bm, bn, bk
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _sq_matmul_impl(a, b, bm, bn, bk, interpret):
+    acc = sq.accum_dtype(a.dtype)
+    aw = a.astype(acc)
+    bw = b.astype(acc)
+    m, k = aw.shape
+    n = bw.shape[1]
+    bm, bn, bk = _pick_tiles(m, n, k, bm, bn, bk)
+    # corrections BEFORE padding (padded zeros contribute zero anyway)
+    sa = sq.row_correction(aw, axis=-1)[:, None]            # (m, 1)
+    sb = sq.col_correction(bw, axis=0)[None, :]             # (1, n)
+    aw = _pad_to(_pad_to(aw, bm, 0), bk, 1)
+    bw = _pad_to(_pad_to(bw, bk, 0), bn, 1)
+    sa = _pad_to(sa, bm, 0)
+    sb = _pad_to(sb, bn, 1)
+    out = sq_matmul_pallas(aw, bw, sa, sb, bm=bm, bn=bn, bk=bk,
+                           interpret=interpret)
+    return out[:m, :n]
+
+
+def sq_matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 128,
+              interpret: bool | None = None):
+    """Square-based matmul via the Pallas systolic-emulation kernel.
+
+    a: (m, k), b: (k, n); any float or int8/int16 dtype; returns the
+    accumulator dtype (f32 for floats, int32 for small ints).
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        # collapse leading batch dims to rows (dense-layer convention)
+        lead = a.shape[:-1]
+        out = sq_matmul(a.reshape(-1, a.shape[-1]), b, bm=bm, bn=bn, bk=bk,
+                        interpret=interpret)
+        return out.reshape(*lead, b.shape[-1])
+    interpret = default_interpret() if interpret is None else interpret
+    return _sq_matmul_impl(a, b, bm, bn, bk, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _cpm3_impl(a, b, c, s, bm, bn, bk, interpret):
+    acc = sq.accum_dtype(a.dtype)
+    a, b, c, s = (t.astype(acc) for t in (a, b, c, s))
+    m, k = a.shape
+    n = c.shape[1]
+    bm, bn, bk = _pick_tiles(m, n, k, bm, bn, bk)
+    # corrections, paper eqs 33 / 35
+    sre = jnp.sum(-sq.square(a + b) + sq.square(b), axis=-1)[:, None]
+    sim = jnp.sum(-sq.square(a + b) - sq.square(a), axis=-1)[:, None]
+    scs = jnp.sum(-sq.square(c) + sq.square(c + s), axis=0)[None, :]
+    ssc = jnp.sum(-sq.square(c) - sq.square(s - c), axis=0)[None, :]
+    a = _pad_to(_pad_to(a, bm, 0), bk, 1)
+    b = _pad_to(_pad_to(b, bm, 0), bk, 1)
+    c = _pad_to(_pad_to(c, bk, 0), bn, 1)
+    s = _pad_to(_pad_to(s, bk, 0), bn, 1)
+    sre = _pad_to(sre, bm, 0)
+    sim = _pad_to(sim, bm, 0)
+    scs_p = _pad_to(scs, bn, 1)
+    ssc_p = _pad_to(ssc, bn, 1)
+    re, im = cpm3_matmul_pallas(a, b, c, s, sre, sim, scs_p, ssc_p,
+                                bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return re[:m, :n], im[:m, :n]
+
+
+def cpm3_matmul(x, y, *, bm: int = 256, bn: int = 256, bk: int = 128,
+                interpret: bool | None = None):
+    """Complex matmul with 3 squares per multiply via the Pallas kernel.
+
+    x: (m, k) complex, y: (k, n) complex; returns (re, im) planes.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    return _cpm3_impl(jnp.real(x), jnp.imag(x), jnp.real(y), jnp.imag(y),
+                      bm, bn, bk, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _cpm4_impl(a, b, c, s, bm, bn, bk, interpret):
+    acc = sq.accum_dtype(a.dtype)
+    a, b, c, s = (t.astype(acc) for t in (a, b, c, s))
+    m, k = a.shape
+    n = c.shape[1]
+    bm, bn, bk = _pick_tiles(m, n, k, bm, bn, bk)
+    # shared corrections, paper eq 18
+    sx = -jnp.sum(sq.square(a) + sq.square(b), axis=-1)[:, None]
+    sy = -jnp.sum(sq.square(c) + sq.square(s), axis=0)[None, :]
+    a = _pad_to(_pad_to(a, bm, 0), bk, 1)
+    b = _pad_to(_pad_to(b, bm, 0), bk, 1)
+    c = _pad_to(_pad_to(c, bk, 0), bn, 1)
+    s = _pad_to(_pad_to(s, bk, 0), bn, 1)
+    sx = _pad_to(sx, bm, 0)
+    sy_p = _pad_to(sy, bn, 1)
+    re, im = cpm4_matmul_pallas(a, b, c, s, sx, sy_p, bm=bm, bn=bn, bk=bk,
+                                interpret=interpret)
+    return re[:m, :n], im[:m, :n]
+
+
+def cpm4_matmul(x, y, *, bm: int = 256, bn: int = 256, bk: int = 128,
+                interpret: bool | None = None):
+    """Complex matmul with 4 squares per multiply via the Pallas kernel."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _cpm4_impl(jnp.real(x), jnp.imag(x), jnp.real(y), jnp.imag(y),
+                      bm, bn, bk, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bo", "interpret"))
+def _sq_conv_impl(x, w, bo, interpret):
+    acc = sq.accum_dtype(x.dtype)
+    xw = x.astype(acc)
+    ww = w.astype(acc)
+    L = xw.shape[0]
+    n = ww.shape[0]
+    k_out = L - n + 1
+    bo = min(bo, k_out) if k_out < bo else bo
+    pad = (-k_out) % bo
+    if pad:
+        xw = jnp.pad(xw, (0, pad))       # zero samples -> discarded outputs
+    out = sq_conv_pallas(xw, ww, bo=bo, interpret=interpret)
+    return out[:k_out]
+
+
+def sq_conv(x, w, *, bo: int = 256, interpret: bool | None = None):
+    """Square-based valid 1D correlation via the Pallas kernel."""
+    interpret = default_interpret() if interpret is None else interpret
+    return _sq_conv_impl(x, w, bo, interpret)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for the Pallas kernels (shape-for-shape, dtype-for-dtype).
+
+These are the ground truth for the per-kernel allclose sweeps in
+tests/test_kernels.py.  They reuse the core algebra so the oracle and the
+production code share one implementation of the paper's equations.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import squares as sq
+from repro.core.matmul import pm_matmul_exact
+from repro.core.complexmm import cpm3_matmul
+from repro.core.conv import correlate1d
+
+__all__ = ["sq_matmul_ref", "cpm3_matmul_ref", "sq_conv_ref"]
+
+
+def sq_matmul_ref(a, b):
+    """Oracle for kernels.ops.sq_matmul: exact square-based matmul."""
+    return pm_matmul_exact(a, b)
+
+
+def cpm3_matmul_ref(x, y):
+    """Oracle for kernels.ops.cpm3_matmul: planes out."""
+    return cpm3_matmul(x, y, planes_out=True)
+
+
+def sq_conv_ref(x, w):
+    """Oracle for kernels.ops.sq_conv: valid square-based correlation."""
+    return correlate1d(x, w, mode="square")

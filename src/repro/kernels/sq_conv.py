@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: square-based 1D correlation (paper §5, Fig.8).
+
+The paper's Fig.8 engine broadcasts each incoming sample to all N taps,
+forms ``(w_i + x)``, squares, and accumulates into per-output registers; the
+shared ``x^2`` is computed once and subtracted at every tap.
+
+TPU adaptation: outputs are tiled over a 1D grid (``bo`` outputs per step);
+for each tap ``t`` the kernel loads the shifted input window with a dynamic
+slice (the VMEM-resident input block covers ``bo + n_taps - 1`` samples) and
+accumulates ``(x_shift + w_t)^2``.  The data-side correction (the sliding sum
+of squares, shared-x^2 term) and the kernel-side ``Sw`` are accumulated in
+the same pass, so the kernel is self-contained.
+
+The input block uses an ELEMENT-indexed BlockSpec trick: we pass a padded
+input whose block size equals ``bo`` but read across the boundary via
+``pl.load`` on an un-blocked (whole-array) ref -- on real TPU silicon this
+block would be double-buffered by the pipeline; sizes here are
+filter-engine scale (n_taps <= a few hundred), so a whole-stream VMEM
+residency is realistic for DSP workloads the paper targets.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["sq_conv_kernel", "sq_conv_pallas"]
+
+
+def sq_conv_kernel(x_ref, w_ref, out_ref, *, n_taps: int, bo: int):
+    i = pl.program_id(0)
+    start = i * bo
+    w = w_ref[...]                                   # (n_taps,)
+    sw = -jnp.sum(w * w)                             # Sw (paper eq 11)
+    acc = jnp.full((bo,), sw, dtype=out_ref.dtype)   # init with correction
+
+    def body(t, acc):
+        xs = pl.load(x_ref, (pl.ds(start + t, bo),))   # shifted window
+        wt = w[t]
+        pm = (xs + wt) * (xs + wt)                     # operand add + square
+        return acc + pm - xs * xs                      # shared x^2 subtracted
+
+    acc = jax.lax.fori_loop(0, n_taps, body, acc)
+    out_ref[...] = acc * 0.5                           # the final right shift
+
+
+def sq_conv_pallas(x, w, *, bo: int = 256, interpret: bool = False):
+    """Valid square-based correlation ``y_k = sum_i w_i x_{i+k}``.
+
+    x: (L,) pre-widened samples; w: (n,) taps.  Output length L - n + 1,
+    padded by the ops wrapper to a multiple of ``bo``.
+    """
+    L = x.shape[0]
+    n = w.shape[0]
+    k_out = L - n + 1
+    assert k_out % bo == 0, (k_out, bo)
+    kernel = functools.partial(sq_conv_kernel, n_taps=n, bo=bo)
+    return pl.pallas_call(
+        kernel,
+        grid=(k_out // bo,),
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0,)),    # stream-resident input
+            pl.BlockSpec(w.shape, lambda i: (0,)),    # taps stationary
+        ],
+        out_specs=pl.BlockSpec((bo,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k_out,), x.dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: square-based matmul (paper §3.2 systolic array, adapted).
+
+TPU adaptation of the paper's weight-stationary square-based systolic array
+(Fig.2/3).  The hardware streams staggered operands through PEs holding
+``REGA``; on TPU the same dataflow is a K-blocked accumulation over a
+(M/bm, N/bn, K/bk) grid with the output tile resident in VMEM across the
+K axis (grid minor dimension), exactly like a weight-stationary pass:
+
+- accumulator tile initialized with the corrections ``Sa_i + Sb_j`` at the
+  first K step -- the paper's "initialise the register with Sa_i + Sb_j"
+  (Fig.1b / Fig.5b);
+- every K step accumulates PM terms ``(a_ik + b_kj)^2`` (the PE array);
+- the final K step applies the paper's "simple right shift" (x0.5 / >>1).
+
+BlockSpec tiling: A (bm, bk), B (bk, bn), out (bm, bn) in VMEM; the inner
+``fori_loop`` walks the bk axis in rank-1 steps so the live PM intermediate
+is a single (bm, bn) plane (VMEM: 3 tiles + accumulator; with the default
+bm = bn = 256, bk = 128 and f32 accumulation that is ~1.2 MB -- well inside
+the ~16 MB v5e VMEM budget).  Minor axes are multiples of 128 (lane width).
+
+The squares execute on the VPU; on the paper's silicon they are the half-area
+squarer circuits.  This kernel is the bit-faithful *emulation* used for
+verification (float and int8 paths); the production MXU-routed path is
+``core.matmul`` mode ``square_virtual``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["sq_matmul_kernel", "sq_matmul_pallas"]
+
+
+def sq_matmul_kernel(a_ref, b_ref, sa_ref, sb_ref, out_ref, *, nk: int,
+                     is_int: bool):
+    """One (i, j, k) grid step of the square-based matmul."""
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        # Accumulator init = Sa_i + Sb_j (paper Fig.1b: "initialise its
+        # register first with Sa_i + Sb_j").
+        out_ref[...] = sa_ref[:, 0][:, None] + sb_ref[0, :][None, :]
+
+    a = a_ref[...]                       # (bm, bk) already in accum dtype
+    b = b_ref[...]                       # (bk, bn)
+    bk = a.shape[1]
+
+    def body(kk, acc):
+        s = a[:, kk][:, None] + b[kk, :][None, :]   # PE operand adder
+        return acc + s * s                           # squarer + accumulate
+
+    out_ref[...] = jax.lax.fori_loop(0, bk, body, out_ref[...])
+
+    @pl.when(k_step == nk - 1)
+    def _finalize():
+        # The paper's final right shift: 2*c_ij -> c_ij.
+        if is_int:
+            out_ref[...] = jax.lax.shift_right_arithmetic(
+                out_ref[...], jnp.ones_like(out_ref[...]))
+        else:
+            out_ref[...] = out_ref[...] * 0.5
+
+
+def sq_matmul_pallas(a, b, sa, sb, *, bm: int = 256, bn: int = 256,
+                     bk: int = 128, interpret: bool = False):
+    """Raw pallas_call wrapper.  Operands must be pre-widened to the
+    accumulator dtype and pre-padded to tile multiples (see kernels.ops)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and sa.shape == (m, 1) and sb.shape == (1, n)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    nk = k // bk
+    is_int = jnp.issubdtype(a.dtype, jnp.integer)
+
+    kernel = functools.partial(sq_matmul_kernel, nk=nk, is_int=is_int)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=interpret,
+    )(a, b, sa, sb)

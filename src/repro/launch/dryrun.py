@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+# Multi-pod dry-run: lower + compile every (architecture x input-shape x
+# mesh) cell with ShapeDtypeStruct stand-ins (no allocation), record
+# memory_analysis / cost_analysis / collective bytes for the roofline.
+#
+# Usage:
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-7b \
+#         --shape train_4k [--multi-pod] [--out results.json]
+#     PYTHONPATH=src python -m repro.launch.dryrun --all
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.data.pipeline import make_batch_specs
+from repro.distributed import context as dctx
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import build_model
+from repro.optim import adamw
+from repro.train import step as step_mod
+
+__all__ = ["dryrun_cell", "collective_bytes", "input_specs"]
+
+_COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^=]*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "c64": 8, "c128": 16}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum output-operand sizes of every collective op in the HLO."""
+    out: Dict[str, float] = {}
+    for m in _COLLECTIVE_RE.finditer(hlo_text):
+        kind, dt, dims = m.group(1), m.group(2), m.group(3)
+        if kind.endswith("-start"):
+            kind = kind[:-6]
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        out[kind] = out.get(kind, 0.0) + float(n * nbytes)
+    return out
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    return make_batch_specs(cfg, SHAPES[shape_name])
+
+
+def _abstract_opt_state(abstract_params):
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {"step": jax.ShapeDtypeStruct((), jnp.int32),
+            "m": jax.tree.map(f32, abstract_params),
+            "v": jax.tree.map(f32, abstract_params)}
+
+
+def _abstract_cache(model, batch: int, cache_len: int, mesh):
+    cache = jax.eval_shape(lambda: model.init_cache(batch, cache_len))
+    kv = model.cfg.n_kv_heads
+    specs = jax.tree.map(lambda a: _cache_sharding(mesh, a, kv, batch), cache)
+    return cache, specs
+
+
+def _cache_sharding(mesh, a, kv_heads: int = 0, batch: int = 0):
+    """KV caches: the BATCH axis (identified by size, never the leading
+    layer-stack axis) over (pod, data); kv-head axis over model when it
+    divides (GQA archs); otherwise replicated over model (kv=1 archs -- the
+    cache is small there).  Sharding the layer-stack axis would force the
+    decode layer-scan to gather its slice every step (observed 2.1 GB x 96
+    on moonshot before the batch axis was matched by size)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    data_axes = tuple(ax for ax in ("pod", "data") if ax in mesh.axis_names)
+    dsize = int(np.prod([mesh.shape[ax] for ax in data_axes])) if data_axes else 1
+    msize = int(mesh.shape["model"]) if "model" in mesh.axis_names else 1
+    entries = [None] * len(a.shape)
+    batch_ax = -1
+    if batch and dsize > 1 and batch % dsize == 0:
+        for i, d in enumerate(a.shape):
+            if d == batch:
+                entries[i] = data_axes
+                batch_ax = i
+                break
+    if msize > 1 and kv_heads and kv_heads % msize == 0:
+        # the LAST axis equal to kv_heads (avoids batch/layer collisions)
+        for i in range(len(a.shape) - 1, -1, -1):
+            if i != batch_ax and a.shape[i] == kv_heads and entries[i] is None:
+                entries[i] = "model"
+                break
+    return NamedSharding(mesh, P(*entries))
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                matmul_mode: Optional[str] = None,
+                overrides: Optional[Dict[str, Any]] = None,
+                verbose: bool = True) -> Dict[str, Any]:
+    """Lower + compile one (arch x shape x mesh) cell; return roofline terms."""
+    import dataclasses as dc
+    cfg = get_config(arch)
+    overrides = dict(overrides or {})
+    microbatch = overrides.pop("_microbatch", 64)
+    zero1 = overrides.pop("_zero1", False)
+    lockstep = overrides.pop("_lockstep", True)   # scalar-pos decode (SPMD)
+    if matmul_mode:
+        cfg = dc.replace(cfg, matmul_mode=matmul_mode)
+    if overrides:
+        cfg = dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if not cfg.supports_shape(shape_name):
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": "full-attention arch: long_500k needs "
+                          "sub-quadratic attention (see DESIGN.md)"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    aparams = model.abstract_params()
+    pshard = shd.param_shardings(mesh, model.spec())
+    batch_specs = make_batch_specs(cfg, shape)
+    in_batch_shard = shd.input_shardings(mesh, batch_specs)
+
+    t0 = time.time()
+    with mesh, dctx.use_mesh(mesh):
+        if shape.kind == "train":
+            # grad accumulation: 64-sequence microbatches (4 per data shard)
+            # keep activation memory inside HBM at seq 4k
+            tcfg = step_mod.TrainConfig(microbatch=microbatch)
+            fn = step_mod.make_train_step(model, tcfg)
+            aopt = _abstract_opt_state(aparams)
+            mv_shard = (shd.zero1_shardings(mesh, model.spec()) if zero1
+                        else shd.param_shardings(mesh, model.spec()))
+            oshard = {"step": shd.input_shardings(mesh, {"s": aopt["step"]})["s"],
+                      "m": mv_shard, "v": mv_shard}
+            # donate params + optimizer state: updates are in-place
+            jfn = jax.jit(fn, in_shardings=(pshard, oshard, in_batch_shard),
+                          out_shardings=(pshard, oshard, None),
+                          donate_argnums=(0, 1))
+            lowered = jfn.lower(aparams, aopt, batch_specs)
+        elif shape.kind == "prefill":
+            fn = step_mod.make_prefill_step(model, cache_len=shape.seq_len)
+            jfn = jax.jit(fn, in_shardings=(pshard, in_batch_shard))
+            lowered = jfn.lower(aparams, batch_specs)
+        else:                                   # decode
+            fn = step_mod.make_decode_step(model)
+            cache, cshard = _abstract_cache(model, shape.global_batch,
+                                            shape.seq_len, mesh)
+            pos = (jax.ShapeDtypeStruct((), jnp.int32) if lockstep else
+                   jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32))
+            # donate the cache: in-place KV update, halves decode memory
+            jfn = jax.jit(fn, in_shardings=(pshard, cshard, None, None),
+                          out_shardings=(None, cshard), donate_argnums=(1,))
+            lowered = jfn.lower(aparams, cache, batch_specs["tokens"], pos)
+        compiled = lowered.compile()
+    lower_s = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    from repro.roofline.hlo_analysis import analyze_hlo
+    hc = analyze_hlo(hlo)                     # trip-count-aware, per device
+    n_dev = mesh.size
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "matmul_mode": cfg.matmul_mode if not matmul_mode else matmul_mode,
+        # per-device, trip-count corrected (see roofline/hlo_analysis.py)
+        "dot_flops_per_device": hc.dot_flops,
+        "elem_flops_per_device": hc.elem_flops,
+        "bytes_per_device": hc.bytes,
+        "bytes_lb_per_device": hc.bytes_lb,
+        "collective_bytes": dict(hc.collectives),
+        "collective_bytes_total": hc.collective_bytes,
+        # raw XLA numbers for reference (while bodies counted once!)
+        "xla_flops": float(cost.get("flops", 0.0)),
+        "xla_bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", 0),
+        "output_bytes_per_device": getattr(mem, "output_size_in_bytes", 0),
+        "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", 0),
+        "peak_bytes_per_device": (getattr(mem, "argument_size_in_bytes", 0)
+                                  + getattr(mem, "output_size_in_bytes", 0)
+                                  + getattr(mem, "temp_size_in_bytes", 0)),
+        "n_params": model.n_params(),
+        "n_active_params": model.n_active_params(),
+        "lower_compile_seconds": lower_s,
+    }
+    if verbose:
+        print(json.dumps(result, indent=None), flush=True)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--matmul-mode", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            if arch == "fairsquare-demo":
+                continue
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        cells.append((args.arch, args.shape))
+
+    results = []
+    for arch, shape in cells:
+        try:
+            results.append(dryrun_cell(arch, shape, multi_pod=args.multi_pod,
+                                       matmul_mode=args.matmul_mode))
+        except Exception as e:  # noqa: BLE001 -- a failing cell is a bug; record it
+            results.append({"arch": arch, "shape": shape, "error": repr(e)})
+            print(f"FAIL {arch} x {shape}: {e!r}", file=sys.stderr, flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2)
+    ok = sum(1 for r in results if "error" not in r)
+    print(f"# dry-run: {ok}/{len(results)} cells ok", flush=True)
+    return 0 if ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

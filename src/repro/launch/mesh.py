@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod stacks 2 pods = 512 chips.
+
+    Axes: ``pod`` (cross-pod data parallelism over DCN), ``data``
+    (in-pod data parallelism), ``model`` (tensor parallelism over ICI).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist locally, as a 1D data mesh (smoke tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,78 @@
+"""Parameter specification system (metadata-first, MaxText-style).
+
+Models are described as trees of :class:`ParamSpec` (shape, dtype, logical
+axes, initializer).  From one spec tree we derive:
+
+- ``init_tree``      -- materialized random params (smoke tests, examples);
+- ``abstract_tree``  -- ShapeDtypeStructs (the multi-pod dry-run never
+                        allocates a single parameter);
+- ``axes_tree``      -- logical-axis names per tensor, consumed by
+                        repro.distributed.sharding to build NamedShardings;
+- ``count_params``   -- exact parameter counts for MODEL_FLOPS = 6*N*D.
+
+Logical axis vocabulary (see distributed/sharding.py for the mesh rules):
+``batch, seq, embed, mlp, heads, kv_heads, head_dim, vocab, expert, layers,
+conv, rnn``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamSpec", "init_tree", "abstract_tree", "axes_tree",
+           "count_params", "is_spec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis per dim
+    dtype: Any = jnp.float32
+    init: str = "normal"                     # normal | zeros | ones | embed
+    fan_in: Optional[int] = None             # for scaled-normal init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _materialize(spec: ParamSpec, key) -> jnp.ndarray:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    fan = spec.fan_in or (spec.shape[0] if spec.shape else 1)
+    # "embed" also uses 1/sqrt(d): with the sqrt(d) input multiplier the
+    # embedded stream and the tied-logit scale both start at unit RMS.
+    scale = 1.0 / math.sqrt(max(1, fan))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(spec.dtype)
+
+
+def init_tree(spec_tree, key):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_materialize(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(spec_tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        spec_tree, is_leaf=is_spec)
+
+
+def axes_tree(spec_tree):
+    return jax.tree.map(lambda s: s.axes, spec_tree, is_leaf=is_spec)
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)

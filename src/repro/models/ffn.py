@@ -1,0 +1,38 @@
+"""Feed-forward blocks (gated and plain), fair-square routed."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.layers import basic
+
+__all__ = ["ffn_spec", "ffn_apply"]
+
+
+def ffn_spec(cfg, stack: int = 0):
+    d, f = cfg.d_model, cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    bias = cfg.ffn_bias
+    gated = cfg.activation in ("swiglu", "geglu")
+    spec = {
+        "w_up": basic.dense_spec(d, f, ("embed", "mlp"), dt, bias, stack),
+        "w_down": basic.dense_spec(f, d, ("mlp", "embed"), dt, bias, stack),
+    }
+    if gated:
+        spec["w_gate"] = basic.dense_spec(d, f, ("embed", "mlp"), dt, bias, stack)
+    return spec
+
+
+def ffn_apply(p, x, *, cfg, mode: Optional[str] = None):
+    up = basic.dense_apply(p["w_up"], x, mode=mode)
+    if "w_gate" in p:
+        gate = basic.dense_apply(p["w_gate"], x, mode=mode)
+        h = basic.activation(cfg.activation, up, gate)
+    else:
+        h = basic.activation(cfg.activation, up)
+    h = h.astype(x.dtype)
+    if cfg.tp_bf16_reduce:
+        return basic.dense_tp_reduce(p["w_down"], h, mode=mode,
+                                     out_dtype=x.dtype)
+    return basic.dense_apply(p["w_down"], h, mode=mode, out_dtype=x.dtype)

@@ -1,0 +1,301 @@
+"""Model assembly: decoder LM, enc-dec (whisper), VLM-prefixed LM.
+
+Layer stacks are grouped into *periods* (one cycle of ``cfg.block_pattern``)
+and scanned with ``jax.lax.scan`` over stacked params -- HLO size and compile
+time stay O(period) instead of O(layers), the standard MaxText approach.
+Pattern tails that don't fill a period are unrolled.
+
+The same period/scan machinery drives decode: caches are stacked trees with
+a leading period axis and are threaded through the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import basic
+from repro.layers.param import ParamSpec, init_tree, abstract_tree, count_params
+from repro.models import blocks as blk
+
+__all__ = ["LM", "build_model"]
+
+
+def _period_split(cfg) -> Tuple[int, Tuple[str, ...], Tuple[str, ...]]:
+    """n_scan periods of the full pattern + unrolled tail kinds."""
+    kinds = cfg.layer_kinds
+    plen = len(cfg.block_pattern)
+    if not cfg.scan_layers:
+        return 0, (), kinds
+    n_scan = len(kinds) // plen
+    tail = kinds[n_scan * plen:]
+    return n_scan, cfg.block_pattern, tail
+
+
+@dataclasses.dataclass
+class LM:
+    cfg: Any
+
+    # ------------------------------------------------------------- spec
+    def spec(self):
+        cfg = self.cfg
+        n_scan, period, tail = _period_split(cfg)
+        s: Dict[str, Any] = {
+            "embed": basic.embed_spec(cfg.padded_vocab, cfg.d_model,
+                                      jnp.dtype(cfg.dtype)),
+            "final_norm": (basic.layernorm_spec(cfg.d_model)
+                           if cfg.norm == "layernorm"
+                           else basic.rmsnorm_spec(cfg.d_model)),
+        }
+        dec_kind = {"attn": "xdec"} if cfg.encoder_layers else {}
+        if n_scan:
+            s["scan"] = {f"pos{i}": blk.block_spec(dec_kind.get(k, k), cfg, n_scan)
+                         for i, k in enumerate(period)}
+        if tail:
+            s["tail"] = {f"layer{i}": blk.block_spec(dec_kind.get(k, k), cfg)
+                         for i, k in enumerate(tail)}
+        if cfg.encoder_layers:
+            s["encoder"] = {
+                "blocks": {"pos0": blk.block_spec("attn", cfg, cfg.encoder_layers)},
+                "norm": (basic.layernorm_spec(cfg.d_model)
+                         if cfg.norm == "layernorm"
+                         else basic.rmsnorm_spec(cfg.d_model)),
+            }
+        return s
+
+    def init(self, key):
+        return init_tree(self.spec(), key)
+
+    def abstract_params(self):
+        return abstract_tree(self.spec())
+
+    def n_params(self) -> int:
+        return count_params(self.spec())
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE discounts inactive experts)."""
+        cfg = self.cfg
+        total = self.n_params()
+        if not cfg.n_experts:
+            return total
+        expert_p = 3 * cfg.d_model * cfg.d_ff     # gate+up+down per expert
+        per_layer_inactive = (cfg.n_experts - cfg.topk) * expert_p
+        n_moe_layers = sum(1 for k in cfg.layer_kinds if k == "moe")
+        return total - n_moe_layers * per_layer_inactive
+
+    # ------------------------------------------------------- embedding
+    def _embed_in(self, params, batch):
+        cfg = self.cfg
+        x = basic.embed_apply(params["embed"], batch["tokens"])
+        x = x * (cfg.d_model ** 0.5)
+        x = x.astype(jnp.dtype(cfg.dtype))
+        if cfg.prefix_tokens:
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+        return x
+
+    def _encode(self, params, batch, mode):
+        """Whisper-style encoder over precomputed frame embeddings (stub
+        frontend per spec): non-causal attention stack."""
+        cfg = self.cfg
+        x = batch["frames"].astype(jnp.dtype(cfg.dtype))
+        S = x.shape[1]
+        ctx = {"cfg": cfg, "mode": mode, "positions": jnp.arange(S),
+               "causal": False}
+
+        def body(x, p):
+            x, _, _ = blk.block_forward("attn", p, x, ctx)
+            return x, None
+
+        if cfg.remat != "none":
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"]["pos0"])
+        if cfg.norm == "layernorm":
+            x = basic.layernorm_apply(params["encoder"]["norm"], x)
+        else:
+            x = basic.rmsnorm_apply(params["encoder"]["norm"], x)
+        return x
+
+    # ----------------------------------------------------- full forward
+    def forward(self, params, batch, *, collect_cache: bool = False):
+        """Teacher-forced full-sequence pass -> (hidden, aux_loss, cache).
+
+        ``collect_cache=True`` (prefill) also returns per-layer cache seeds.
+        """
+        cfg = self.cfg
+        mode = cfg.matmul_mode
+        n_scan, period, tail = _period_split(cfg)
+        x = self._embed_in(params, batch)
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        ctx = {"cfg": cfg, "mode": mode, "positions": positions, "causal": True}
+        if cfg.encoder_layers:
+            enc = self._encode(params, batch, mode)
+            ctx["cross_x"] = enc
+            ctx["cross_positions"] = jnp.arange(enc.shape[1])
+        dec_kind = {"attn": "xdec"} if cfg.encoder_layers else {}
+        aux_total = jnp.zeros((), jnp.float32)
+        caches = {}
+
+        if n_scan:
+            def body(x, pslice):
+                aux_p = jnp.zeros((), jnp.float32)
+                cache_p = {}
+                for i, k in enumerate(period):
+                    kk = dec_kind.get(k, k)
+                    x, c, aux = blk.block_forward(kk, pslice[f"pos{i}"], x, ctx)
+                    aux_p = aux_p + aux
+                    if collect_cache:
+                        cache_p[f"pos{i}"] = c
+                return x, (aux_p, cache_p)
+
+            if cfg.remat == "dots":
+                # save GEMM outputs, recompute elementwise: trades activation
+                # memory for removing the full-forward recompute
+                body = jax.checkpoint(
+                    body, prevent_cse=False,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            elif cfg.remat != "none":
+                body = jax.checkpoint(body, prevent_cse=False)
+            x, (auxs, cache_scan) = jax.lax.scan(
+                body, x, {k: params["scan"][k] for k in params["scan"]})
+            aux_total = aux_total + jnp.sum(auxs)
+            if collect_cache:
+                caches["scan"] = cache_scan
+        for i, k in enumerate(tail):
+            kk = dec_kind.get(k, k)
+            x, c, aux = blk.block_forward(kk, params["tail"][f"layer{i}"], x, ctx)
+            aux_total = aux_total + aux
+            if collect_cache:
+                caches.setdefault("tail", {})[f"layer{i}"] = c
+
+        if cfg.norm == "layernorm":
+            x = basic.layernorm_apply(params["final_norm"], x)
+        else:
+            x = basic.rmsnorm_apply(params["final_norm"], x)
+        if cfg.encoder_layers and collect_cache:
+            caches["enc_out"] = ctx["cross_x"]
+        return x, aux_total, caches
+
+    # ------------------------------------------------------------ logits
+    def logits(self, params, hidden):
+        """Full logits (small models / tests only -- training uses the
+        chunked fused loss in repro.train.loss)."""
+        table = params["embed"]["table"]
+        return jnp.einsum("bsd,vd->bsv", hidden.astype(jnp.float32),
+                          table.astype(jnp.float32))
+
+    # ------------------------------------------------------------- cache
+    def init_cache(self, batch_size: int, cache_len: int):
+        cfg = self.cfg
+        n_scan, period, tail = _period_split(cfg)
+        dec_kind = {"attn": "xdec"} if cfg.encoder_layers else {}
+        enc_len = cfg.encoder_seq
+        cache: Dict[str, Any] = {}
+        if n_scan:
+            def stack(kind):
+                one = blk.block_init_cache(kind, cfg, batch_size, cache_len, enc_len)
+                return jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (n_scan,) + a.shape).copy(), one)
+            cache["scan"] = {f"pos{i}": stack(dec_kind.get(k, k))
+                             for i, k in enumerate(period)}
+        if tail:
+            cache["tail"] = {f"layer{i}": blk.block_init_cache(
+                dec_kind.get(k, k), cfg, batch_size, cache_len, enc_len)
+                for i, k in enumerate(tail)}
+        return cache
+
+    # ------------------------------------------------------------ decode
+    def decode_step(self, params, cache, tokens, pos):
+        """One decode step.  tokens: (B, 1) int32; pos: (B,) absolute.
+        Returns (logits (B, V), new_cache)."""
+        cfg = self.cfg
+        mode = cfg.matmul_mode
+        n_scan, period, tail = _period_split(cfg)
+        dec_kind = {"attn": "xdec"} if cfg.encoder_layers else {}
+        x = basic.embed_apply(params["embed"], tokens)
+        x = (x * (cfg.d_model ** 0.5)).astype(jnp.dtype(cfg.dtype))
+        ctx = {"cfg": cfg, "mode": mode, "pos": pos}
+
+        if n_scan:
+            def body(x, sl):
+                pslice, cslice = sl
+                new_c = {}
+                for i, k in enumerate(period):
+                    kk = dec_kind.get(k, k)
+                    x, nc = blk.block_decode(kk, pslice[f"pos{i}"], x,
+                                             cslice[f"pos{i}"], ctx)
+                    new_c[f"pos{i}"] = nc
+                return x, new_c
+
+            x, new_scan = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+            cache = dict(cache)
+            cache["scan"] = new_scan
+        for i, k in enumerate(tail):
+            kk = dec_kind.get(k, k)
+            x, nc = blk.block_decode(kk, params["tail"][f"layer{i}"], x,
+                                     cache["tail"][f"layer{i}"], ctx)
+            cache = dict(cache)
+            cache["tail"] = dict(cache["tail"])
+            cache["tail"][f"layer{i}"] = nc
+
+        if cfg.norm == "layernorm":
+            x = basic.layernorm_apply(params["final_norm"], x)
+        else:
+            x = basic.rmsnorm_apply(params["final_norm"], x)
+        logits = self.logits(params, x)[:, 0]
+        return logits, cache
+
+    # ----------------------------------------------------------- prefill
+    def prefill(self, params, batch, cache_len: int):
+        """Process a prompt, return (last_hidden, decode-ready cache)."""
+        cfg = self.cfg
+        hidden, _, seeds = self.forward(params, batch, collect_cache=True)
+        B = hidden.shape[0]
+        cache = self.init_cache(B, cache_len)
+
+        def fill(dst, seed):
+            if isinstance(seed, dict) and "k" in seed:      # attention seed
+                S = seed["k"].shape[1]
+                T = dst["k"].shape[1]
+                out = dict(dst)
+                if S >= T:
+                    # ring roll-in: keep the last T entries at slot pos % T
+                    ks, vs = seed["k"][:, -T:], seed["v"][:, -T:]
+                    ps = jnp.arange(S - T, S)
+                    idx = ps % T
+                    out["k"] = dst["k"].at[:, idx].set(ks)
+                    out["v"] = dst["v"].at[:, idx].set(vs)
+                    out["pos"] = dst["pos"].at[:, idx].set(ps[None, :])
+                else:
+                    out["k"] = dst["k"].at[:, :S].set(seed["k"])
+                    out["v"] = dst["v"].at[:, :S].set(seed["v"])
+                    out["pos"] = dst["pos"].at[:, :S].set(
+                        jnp.arange(S)[None, :])
+                if "xk" in dst:
+                    out["xk"], out["xv"] = seed["xk"], seed["xv"]
+                return out
+            return seed                                     # recurrent state
+
+        new_cache: Dict[str, Any] = {}
+        if "scan" in cache:
+            new_cache["scan"] = {}
+            for key in cache["scan"]:
+                dst = cache["scan"][key]
+                seed = seeds["scan"][key]
+                if isinstance(seed, dict) and "k" in seed:
+                    # both stacked on leading period axis
+                    new_cache["scan"][key] = jax.vmap(fill)(dst, seed)
+                else:
+                    new_cache["scan"][key] = seed
+        if "tail" in cache:
+            new_cache["tail"] = {
+                key: fill(cache["tail"][key], seeds["tail"][key])
+                for key in cache["tail"]}
+        return hidden, new_cache
+
+
+def build_model(cfg) -> LM:
+    return LM(cfg)

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts block: top-k routing, capacity-bounded sort-based
+dispatch, batched-expert GEMMs (GShard/Switch style, dropless up to the
+capacity factor).
+
+Dispatch is plain gather/scatter over a *local* token set, so under the
+production mesh the block runs inside ``shard_map`` (tokens sharded over
+(pod, data); expert weights tensor-parallel over 'model' on the hidden
+axis with a single psum after the down-projection — the same collective
+pattern as a dense FFN, so MoE inherits the dense comm roofline).  The
+expert GEMMs are batched einsums over the expert axis: FLOPs are exactly
+``topk * tokens * capacity_factor`` worth of expert compute — no E/topk
+dense-compute inflation.
+
+Router aux (load-balance) loss follows Switch: E * sum_e f_e * P_e.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import basic
+from repro.layers.param import ParamSpec
+
+__all__ = ["moe_spec", "moe_apply_local", "moe_capacity"]
+
+
+def moe_spec(cfg, stack: int = 0):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    shape = (e, d, f)
+    axes = ("expert", "embed", "mlp")
+    dshape = (e, f, d)
+    daxes = ("expert", "mlp", "embed")
+    if stack:
+        shape = (stack,) + shape
+        axes = ("layers",) + axes
+        dshape = (stack,) + dshape
+        daxes = ("layers",) + daxes
+    rshape = (stack, d, e) if stack else (d, e)
+    raxes = ("layers", "embed", None) if stack else ("embed", None)
+    return {
+        "router": {"w": ParamSpec(rshape, raxes, dtype=jnp.float32, fan_in=d)},
+        "w_gate": {"w": ParamSpec(shape, axes, dtype=dt, fan_in=d)},
+        "w_up": {"w": ParamSpec(shape, axes, dtype=dt, fan_in=d)},
+        "w_down": {"w": ParamSpec(dshape, daxes, dtype=dt, fan_in=f)},
+    }
+
+
+def moe_capacity(n_tokens: int, cfg) -> int:
+    cap = int(n_tokens * cfg.topk * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(4, cap + (-cap) % 4)
+
+
+def moe_apply_local(p, x, *, cfg, mode: Optional[str] = None,
+                    psum_axes=None):
+    """MoE over a local token block.  x: (T, D) (callers flatten B*S).
+
+    ``psum_axes``: mesh axis names to psum the down-projection over when the
+    expert hidden axis is tensor-sharded inside shard_map; None outside.
+    Returns (out (T, D), aux_loss scalar).
+    """
+    T, D = x.shape
+    E, K = cfg.n_experts, cfg.topk
+    C = moe_capacity(T, cfg)
+
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)              # (T, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)        # renorm
+
+    # ---- flatten assignments and sort by expert ----
+    flat_expert = expert_idx.reshape(-1)                         # (T*K,)
+    flat_token = jnp.repeat(jnp.arange(T), K)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    counts = jnp.bincount(se, length=E)                          # (E,)
+    offsets = jnp.cumsum(counts) - counts                        # exclusive
+    rank = jnp.arange(T * K) - offsets[se]                       # slot in expert
+    keep = rank < C
+    dest = jnp.where(keep, se * C + rank, E * C)                 # drop -> sink
+
+    # ---- dispatch: (E*C + 1 sink, D) buffer ----
+    xt = x.astype(jnp.dtype(cfg.dtype))
+    buf = jnp.zeros((E * C + 1, D), xt.dtype).at[dest].set(xt[st])
+    eb = buf[: E * C].reshape(E, C, D)
+
+    # ---- batched expert GEMMs (einsum over the expert axis) ----
+    gate_h = jnp.einsum("ecd,edf->ecf", eb, p["w_gate"]["w"])
+    up_h = jnp.einsum("ecd,edf->ecf", eb, p["w_up"]["w"])
+    h = (jax.nn.silu(gate_h.astype(jnp.float32)) * up_h.astype(jnp.float32))
+    h = h.astype(xt.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"]["w"]).astype(jnp.float32)
+    if psum_axes:
+        y = jax.lax.psum(y, psum_axes)                           # TP combine
+
+    # ---- combine: gather back and weight by gates ----
+    y_flat = jnp.concatenate([y.reshape(E * C, D),
+                              jnp.zeros((1, D), y.dtype)], axis=0)
+    contrib = y_flat[dest] * (sg * keep)[:, None]
+    out = jnp.zeros((T, D), jnp.float32).at[st].add(contrib)
+
+    # ---- Switch aux loss: E * sum_e fraction_e * router_prob_e ----
+    frac = counts.astype(jnp.float32) / jnp.maximum(1, T * K)
+    pmean = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * pmean)
+    return out.astype(x.dtype), aux

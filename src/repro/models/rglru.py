@@ -1,0 +1,125 @@
+"""RecurrentGemma / Griffin recurrent block (arXiv:2402.19427).
+
+Block: x -> [branch1: linear -> causal depthwise conv1d(w=4) -> RG-LRU]
+            [branch2: linear -> GeLU]
+       merge = branch1 * branch2 -> linear down.
+
+RG-LRU (real-gated linear recurrent unit), diagonal recurrence:
+    r_t = sigmoid(W_r x_t)         i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(L) * r_t)            (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over the diagonal linear
+recurrence (log-depth, parallel); decode is the sequential step.  The conv
+keeps a (width-1)-sample state for decode.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import basic
+from repro.layers.param import ParamSpec
+
+__all__ = ["rglru_spec", "rglru_forward", "rglru_decode", "rglru_init_state"]
+
+_C = 8.0
+
+
+def rglru_spec(cfg, stack: int = 0):
+    d = cfg.d_model
+    r = cfg.rnn_width or d
+    w = cfg.conv_width
+    dt = jnp.dtype(cfg.dtype)
+
+    def dn(i, o, ax):
+        return basic.dense_spec(i, o, ax, dt, False, stack)
+
+    lam_shape = (stack, r) if stack else (r,)
+    lam_axes = ("layers", "rnn") if stack else ("rnn",)
+    conv_shape = (stack, w, r) if stack else (w, r)
+    conv_axes = ("layers", None, "rnn") if stack else (None, "rnn")
+    return {
+        "w_x": dn(d, r, ("embed", "rnn")),            # branch 1
+        "w_gate": dn(d, r, ("embed", "rnn")),         # branch 2
+        "conv": {"w": ParamSpec(conv_shape, conv_axes, dtype=dt, fan_in=w)},
+        "w_r": dn(r, r, ("rnn", "mlp")),              # recurrence gate
+        "w_i": dn(r, r, ("rnn", "mlp")),              # input gate
+        "lam": {"w": ParamSpec(lam_shape, lam_axes, dtype=jnp.float32,
+                               init="ones")},
+        "w_out": dn(r, d, ("rnn", "embed")),
+    }
+
+
+def _conv1d_causal(x, w, state=None):
+    """Depthwise causal conv.  x: (B, S, R); w: (W, R); state: (B, W-1, R)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xx = jnp.concatenate([state, x], axis=1)
+    out = sum(xx[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xx[:, -(W - 1):] if W > 1 else state
+    return out, new_state
+
+
+def _gates(p, xb):
+    r = jax.nn.sigmoid(basic.dense_apply(p["w_r"], xb).astype(jnp.float32))
+    i = jax.nn.sigmoid(basic.dense_apply(p["w_i"], xb).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]["w"]) * r        # (B, S, R), <= 0
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * xb.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_init_state(cfg, batch: int):
+    r = cfg.rnn_width or cfg.d_model
+    return {"h": jnp.zeros((batch, r), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, r),
+                              jnp.dtype(cfg.dtype))}
+
+
+def rglru_forward(p, x, *, cfg, state=None, mode: Optional[str] = None):
+    """Full-sequence forward.  Returns (y, final_state)."""
+    B, S, D = x.shape
+    if state is None:
+        state = rglru_init_state(cfg, B)
+    xb = basic.dense_apply(p["w_x"], x, mode=mode, out_dtype=x.dtype)
+    gate = basic.dense_apply(p["w_gate"], x, mode=mode)
+    xb, conv_state = _conv1d_causal(xb, p["conv"]["w"], state["conv"])
+    a, gx = _gates(p, xb)
+    # h_t = a_t h_{t-1} + gx_t  -- diagonal linear recurrence, assoc. scan.
+    # Fold the carried-in state as an extra leading step.
+    a0 = jnp.ones((B, 1, a.shape[-1]), a.dtype)
+    aa = jnp.concatenate([a0, a], axis=1)
+    bb = jnp.concatenate([state["h"][:, None, :], gx], axis=1)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, br + ar * bl
+
+    _, hs = jax.lax.associative_scan(combine, (aa, bb), axis=1)
+    h = hs[:, 1:]                                            # drop seed step
+    new_state = {"h": h[:, -1], "conv": conv_state}
+    merged = h.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
+    y = basic.dense_apply(p["w_out"], merged, mode=mode, out_dtype=x.dtype)
+    return y, new_state
+
+
+def rglru_decode(p, x, state, *, cfg, mode: Optional[str] = None):
+    """Single-token decode (sequential step)."""
+    B, S, D = x.shape                       # S == 1
+    xb = basic.dense_apply(p["w_x"], x, mode=mode, out_dtype=x.dtype)
+    gate = basic.dense_apply(p["w_gate"], x, mode=mode)
+    xb, conv_state = _conv1d_causal(xb, p["conv"]["w"], state["conv"])
+    a, gx = _gates(p, xb)
+    h = a[:, 0] * state["h"] + gx[:, 0]
+    new_state = {"h": h, "conv": conv_state}
+    merged = h[:, None].astype(x.dtype) * jax.nn.gelu(
+        gate.astype(jnp.float32)).astype(x.dtype)
+    y = basic.dense_apply(p["w_out"], merged, mode=mode, out_dtype=x.dtype)
+    return y, new_state

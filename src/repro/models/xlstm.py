@@ -1,0 +1,250 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, chunkwise-parallel)
+and sLSTM (scalar memory, strictly sequential scan).
+
+mLSTM recurrence (stabilized, per head):
+    C_t = f_t C_{t-1} + i_t v_t k_t^T      n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+with exponential gating i_t = exp(i~_t), f_t = exp(f~_t) and running
+stabilizer m_t.  Training/prefill uses the chunkwise-parallel form (intra-
+chunk attention-like matrix + inter-chunk state carry); decode uses the
+sequential step.  Both are tested against the naive scan.
+
+sLSTM has recurrent (h_{t-1}) connections and therefore no parallel form --
+``lax.scan`` over time (the reason xLSTM uses few sLSTM layers; our assigned
+xlstm-350m config follows the paper's 7:1-style sparse placement).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import basic
+from repro.layers.param import ParamSpec
+
+__all__ = ["mlstm_spec", "mlstm_forward", "mlstm_decode", "mlstm_init_state",
+           "slstm_spec", "slstm_forward", "slstm_decode", "slstm_init_state"]
+
+
+# =============================================================== mLSTM block
+
+def mlstm_spec(cfg, stack: int = 0):
+    d = cfg.d_model
+    di = int(cfg.inner_factor * d)
+    h = cfg.n_heads
+    dt = jnp.dtype(cfg.dtype)
+
+    def dn(i, o, ax):
+        return basic.dense_spec(i, o, ax, dt, False, stack)
+
+    gshape = (stack, di, 2) if stack else (di, 2)
+    gaxes = ("layers", "mlp", None) if stack else ("mlp", None)
+    return {
+        "w_in": dn(d, 2 * di, ("embed", "mlp")),       # up-proj: x branch + gate
+        # q/k/v stay replicated: mLSTM keeps per-head (hd x hd) matrix state;
+        # sharding hd would turn every state update into a cross-device sum
+        "wq": dn(di, di, ("mlp", None)),
+        "wk": dn(di, di, ("mlp", None)),
+        "wv": dn(di, di, ("mlp", None)),
+        "w_if": {"w": ParamSpec(gshape, gaxes, dtype=jnp.float32, fan_in=di)},
+        "norm": basic.rmsnorm_spec(di, stack),
+        "w_out": dn(di, d, ("mlp", "embed")),
+    }
+
+
+def _mlstm_gates(p, xi):
+    g = jnp.einsum("...d,dg->...g", xi.astype(jnp.float32), p["w_if"]["w"])
+    it = g[..., 0]                                   # log input gate
+    ft = jax.nn.log_sigmoid(g[..., 1])               # log forget gate
+    return it, ft
+
+
+def _heads(x, h):
+    return x.reshape(*x.shape[:-1], h, x.shape[-1] // h)
+
+
+def mlstm_chunk_scan(q, k, v, it, ft, state, chunk: int):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B, H, S, hd) f32; it, ft: (B, H, S) log-gates;
+    state: (C (B,H,hd,hd), n (B,H,hd), m (B,H)).
+    Returns h_out (B, H, S, hd), final state.
+    """
+    B, H, S, hd = q.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                   for t in (q, k, v))
+        it = jnp.pad(it, ((0, 0), (0, 0), (0, pad)), constant_values=-1e30)
+        ft = jnp.pad(ft, ((0, 0), (0, 0), (0, pad)))
+    nc = q.shape[2] // c
+    qs = jnp.moveaxis(q.reshape(B, H, nc, c, hd), 2, 0)     # (nc,B,H,c,hd)
+    ks = jnp.moveaxis(k.reshape(B, H, nc, c, hd), 2, 0)
+    vs = jnp.moveaxis(v.reshape(B, H, nc, c, hd), 2, 0)
+    its = jnp.moveaxis(it.reshape(B, H, nc, c), 2, 0)
+    fts = jnp.moveaxis(ft.reshape(B, H, nc, c), 2, 0)
+    scale = hd ** -0.5
+
+    def step(carry, blk):
+        C, n, m = carry
+        qc, kc, vc, ic, fc = blk
+        b = jnp.cumsum(fc, axis=-1)                          # (B,H,c)
+        g = b[..., -1]                                       # total decay
+        # stabilizers
+        cmax = jax.lax.cummax(ic - b, axis=ic.ndim - 1)      # max_j<=t (i_j - b_j)
+        m_loc = b + cmax
+        m_new = jnp.maximum(m[..., None] + b, m_loc)         # (B,H,c)
+        # inter-chunk
+        q_eff = qc * (scale * jnp.exp(m[..., None] + b - m_new))[..., None]
+        h_inter = jnp.einsum("bhcx,bhxd->bhcd", q_eff, C)
+        n_inter = jnp.einsum("bhcx,bhx->bhc", q_eff, n)
+        # intra-chunk
+        dmat = (b[..., :, None] - b[..., None, :] + ic[..., None, :]
+                - m_new[..., :, None])                       # (B,H,c,c)
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        dmat = jnp.where(tri, dmat, -1e30)
+        s = jnp.einsum("bhcx,bhdx->bhcd", qc * scale, kc) * jnp.exp(dmat)
+        h_intra = jnp.einsum("bhcd,bhdx->bhcx", s, vc)
+        n_intra = jnp.sum(s, axis=-1)
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_new))
+        h_out = (h_inter + h_intra) / denom[..., None]
+        # carry to next chunk
+        m_end = jnp.maximum(m + g, g + cmax[..., -1])
+        w_old = jnp.exp(m + g - m_end)
+        w_new = jnp.exp(g[..., None] - b + ic - m_end[..., None])   # (B,H,c)
+        C_new = C * w_old[..., None, None] + jnp.einsum(
+            "bhck,bhcv,bhc->bhkv", kc, vc, w_new)
+        n_new = n * w_old[..., None] + jnp.einsum("bhck,bhc->bhk", kc, w_new)
+        return (C_new, n_new, m_end), h_out
+
+    state, hs = jax.lax.scan(step, state, (qs, ks, vs, its, fts))
+    hs = jnp.moveaxis(hs, 0, 2).reshape(B, H, nc * c, hd)
+    return hs[:, :, :S], state
+
+
+def mlstm_seq_scan(q, k, v, it, ft, state):
+    """Naive sequential mLSTM (oracle for tests + decode single step)."""
+    scale = q.shape[-1] ** -0.5
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, i_t, f_t = xs
+        m_new = jnp.maximum(f_t + m, i_t)
+        fw = jnp.exp(f_t + m - m_new)
+        iw = jnp.exp(i_t - m_new)
+        C = C * fw[..., None, None] + iw[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = n * fw[..., None] + iw[..., None] * kt
+        qs = qt * scale
+        num = jnp.einsum("bhk,bhkv->bhv", qs, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n)),
+                          jnp.exp(-m_new))
+        return (C, n, m_new), num / den[..., None]
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (q, k, v)) + tuple(
+        jnp.moveaxis(t, 2, 0) for t in (it, ft))
+    state, hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 2), state
+
+
+def mlstm_init_state(cfg, batch: int):
+    h = cfg.n_heads
+    hd = int(cfg.inner_factor * cfg.d_model) // h
+    return (jnp.zeros((batch, h, hd, hd), jnp.float32),
+            jnp.zeros((batch, h, hd), jnp.float32),
+            jnp.full((batch, h), -1e30, jnp.float32))
+
+
+def mlstm_forward(p, x, *, cfg, state=None, mode: Optional[str] = None,
+                  chunk: int = 256, sequential: bool = False):
+    """mLSTM block forward over a sequence.  Returns (y, final_state)."""
+    B, S, D = x.shape
+    di = int(cfg.inner_factor * D)
+    H = cfg.n_heads
+    up = basic.dense_apply(p["w_in"], x, mode=mode)
+    xi, gate = up[..., :di], up[..., di:]
+    q = jnp.swapaxes(_heads(basic.dense_apply(p["wq"], xi, mode=mode), H), 1, 2)
+    k = jnp.swapaxes(_heads(basic.dense_apply(p["wk"], xi, mode=mode), H), 1, 2)
+    v = jnp.swapaxes(_heads(basic.dense_apply(p["wv"], xi, mode=mode), H), 1, 2)
+    q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
+    itg, ftg = _mlstm_gates(p, xi)                        # (B, S)... per pos
+    it = jnp.broadcast_to(itg[:, None, :], (B, H, S))
+    ft = jnp.broadcast_to(ftg[:, None, :], (B, H, S))
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+    if sequential:
+        h, state = mlstm_seq_scan(q, k, v, it, ft, state)
+    else:
+        h, state = mlstm_chunk_scan(q, k, v, it, ft, state, chunk)
+    h = jnp.swapaxes(h, 1, 2).reshape(B, S, di).astype(x.dtype)
+    h = basic.rmsnorm_apply(p["norm"], h)
+    h = h * jax.nn.silu(gate.astype(jnp.float32)).astype(h.dtype)
+    return basic.dense_apply(p["w_out"], h, mode=mode, out_dtype=x.dtype), state
+
+
+def mlstm_decode(p, x, state, *, cfg, mode: Optional[str] = None):
+    y, state = mlstm_forward(p, x, cfg=cfg, state=state, mode=mode,
+                             sequential=True)
+    return y, state
+
+
+# =============================================================== sLSTM block
+
+def slstm_spec(cfg, stack: int = 0):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    dt = jnp.dtype(cfg.dtype)
+    rshape = (stack, h, hd, 4 * hd) if stack else (h, hd, 4 * hd)
+    raxes = ("layers", "q_heads", None, None) if stack else ("q_heads", None, None)
+    return {
+        "w_x": basic.dense_spec(d, 4 * d, ("embed", "mlp"), dt, True, stack),
+        "r": {"w": ParamSpec(rshape, raxes, dtype=jnp.float32, fan_in=hd)},
+        "norm": basic.rmsnorm_spec(d, stack),
+        "w_out": basic.dense_spec(d, d, ("mlp", "embed"), dt, False, stack),
+    }
+
+
+def slstm_init_state(cfg, batch: int):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, jnp.full((batch, d), -1e30, jnp.float32))  # c, n, h, m
+
+
+def slstm_forward(p, x, *, cfg, state=None, mode: Optional[str] = None):
+    """Sequential sLSTM over (B, S, D).  Returns (y, final_state)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    hd = D // H
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    wx = basic.dense_apply(p["w_x"], x, mode=mode).astype(jnp.float32)  # (B,S,4D)
+    rmat = p["r"]["w"]                                                  # (H,hd,4hd)
+
+    def step(carry, wxt):
+        c, n, h, m = carry
+        hh = h.reshape(B, H, hd)
+        rec = jnp.einsum("bhx,hxy->bhy", hh, rmat).reshape(B, 4 * D)
+        pre = wxt + rec
+        zt = jnp.tanh(pre[:, 0 * D:1 * D])
+        it = pre[:, 1 * D:2 * D]                    # log-space input gate
+        ft = jax.nn.log_sigmoid(pre[:, 2 * D:3 * D])
+        ot = jax.nn.sigmoid(pre[:, 3 * D:4 * D])
+        m_new = jnp.maximum(ft + m, it)
+        fw = jnp.exp(ft + m - m_new)
+        iw = jnp.exp(it - m_new)
+        c_new = fw * c + iw * zt
+        n_new = fw * n + iw
+        h_new = ot * c_new / jnp.maximum(n_new, jnp.exp(-m_new))
+        return (c_new, n_new, h_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    hs = basic.rmsnorm_apply(p["norm"], hs)
+    return basic.dense_apply(p["w_out"], hs, mode=mode, out_dtype=x.dtype), state
+
+
+def slstm_decode(p, x, state, *, cfg, mode: Optional[str] = None):
+    return slstm_forward(p, x, cfg=cfg, state=state, mode=mode)

@@ -1,0 +1,422 @@
+"""Trip-count-aware HLO cost analyzer (the dry-run "profiler").
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, which silently
+undercounts everything we scan over (layer stacks, attention KV chunks, the
+chunked loss, microbatch accumulation).  This walker parses the post-SPMD
+per-device HLO text, multiplies each while body by its trip count (XLA
+annotates ``backend_config={"known_trip_count":{"n": ...}}`` on canonical
+scan-lowered loops), and accumulates:
+
+- ``dot_flops``      MXU-bound flops (dot/convolution), 2 * out * contraction
+- ``elem_flops``     VPU-bound elementwise/reduce flops (1 per output elem)
+- ``bytes``          dataflow bytes: per materialized op, operands + outputs
+                     (fusion internals excluded -- they live in registers)
+- ``collectives``    bytes by kind (all-gather / all-reduce / reduce-scatter /
+                     all-to-all / collective-permute), trip-multiplied
+
+All numbers are PER DEVICE (the post-partitioning module is the per-device
+program).  Validated against unrolled-vs-scanned lowerings in
+tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HloCost", "analyze_hlo", "analyze_compiled"]
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([^\s=]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([^\s(]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_CALL_ATTR_RE = re.compile(r"(?:calls|body|condition|to_apply)=%?([^\s,)]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPCODE_RE = re.compile(r"([a-z][a-z0-9\-]*)\(")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "token": 0, "opaque": 0}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ZERO_COST_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "after-all", "iota", "reshape", "partition-id",
+                  "replica-id", "custom-call", "rng-bit-generator"}
+
+# Ops that force HBM materialization on TPU.  Pure elementwise ops are
+# assumed fused into a neighboring materializing op (XLA:TPU behavior), so
+# they contribute flops but not bytes; everything in this set contributes
+# operand + output bytes at its call site.
+_MATERIALIZING = {"dot", "convolution", "reduce", "reduce-window", "scatter",
+                  "gather", "dynamic-slice", "dynamic-update-slice", "slice",
+                  "concatenate", "pad", "copy", "transpose", "sort",
+                  "custom-call", "cholesky", "triangular-solve", "fft",
+                  "select-and-scatter"}
+
+_ELEMENTWISE_HINT = {"add", "multiply", "subtract", "divide", "maximum",
+                     "minimum", "exponential", "log", "tanh", "rsqrt", "sqrt",
+                     "power", "compare", "select", "convert", "negate", "abs",
+                     "and", "or", "xor", "not", "sign", "floor", "ceil",
+                     "clamp", "remainder", "atan2", "logistic", "sine",
+                     "cosine", "expm1", "log1p", "shift-right-arithmetic",
+                     "shift-left", "shift-right-logical", "round-nearest-even",
+                     "cbrt", "erf", "is-finite", "clz", "popcnt", "map",
+                     "exponential-minus-one"}
+
+
+_SCOPE_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _scope_of(body: str, depth: int = 3) -> str:
+    m = _SCOPE_RE.search(body)
+    if not m:
+        return "<none>"
+    parts = m.group(1).split("/")
+    keep = [p for p in parts if p not in ("closed_call",)]
+    return "/".join(keep[:depth]) if keep else "<none>"
+
+
+@dataclasses.dataclass
+class HloCost:
+    dot_flops: float = 0.0
+    elem_flops: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # dot-flops by jax scope prefix (profiling view; trip-multiplied)
+    by_scope: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # bytes by "opcode:scope" (trip-multiplied)
+    bytes_by: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # lower-bound bytes: irreducible traffic (dot/conv operands+outputs,
+    # slicing, copies, collectives) -- excludes fusion-boundary traffic that
+    # XLA:TPU would fuse away.  True TPU HBM traffic lies in [lb, bytes].
+    bytes_lb: float = 0.0
+
+    def __add__(self, o: "HloCost") -> "HloCost":
+        coll = dict(self.collectives)
+        for k, v in o.collectives.items():
+            coll[k] = coll.get(k, 0.0) + v
+        sc = dict(self.by_scope)
+        for k, v in o.by_scope.items():
+            sc[k] = sc.get(k, 0.0) + v
+        bb = dict(self.bytes_by)
+        for k, v in o.bytes_by.items():
+            bb[k] = bb.get(k, 0.0) + v
+        return HloCost(self.dot_flops + o.dot_flops,
+                       self.elem_flops + o.elem_flops,
+                       self.bytes + o.bytes, coll, sc, bb,
+                       self.bytes_lb + o.bytes_lb)
+
+    def scaled(self, n: float) -> "HloCost":
+        return HloCost(self.dot_flops * n, self.elem_flops * n,
+                       self.bytes * n,
+                       {k: v * n for k, v in self.collectives.items()},
+                       {k: v * n for k, v in self.by_scope.items()},
+                       {k: v * n for k, v in self.bytes_by.items()},
+                       self.bytes_lb * n)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collectives.values())
+
+    def to_dict(self) -> Dict:
+        return {"dot_flops": self.dot_flops, "elem_flops": self.elem_flops,
+                "bytes": self.bytes, "collectives": dict(self.collectives),
+                "collective_bytes": self.collective_bytes}
+
+
+def _first_shape(text: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return "opaque", []
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _all_shapes(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def _nbytes(dtype: str, dims: List[int]) -> float:
+    n = 1
+    for d in dims:
+        n *= d
+    return float(n) * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _nelems(dims: List[int]) -> float:
+    n = 1
+    for d in dims:
+        n *= d
+    return float(n)
+
+
+class _Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        self.shapes: Dict[str, Tuple[str, List[int]]] = {}
+
+
+_MAT_CACHE: Dict[int, Dict[str, bool]] = {}
+
+
+def _comp_has_materializing(name: str, comps: Dict[str, "_Computation"]) -> bool:
+    """True if the computation (transitively) contains a materializing op."""
+    cache = _MAT_CACHE.setdefault(id(comps), {})
+    if name in cache:
+        return cache[name]
+    cache[name] = False                      # cycle guard
+    comp = comps.get(name)
+    if comp is None:
+        return False
+    out = False
+    for line in comp.lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        op = _line_opcode(m.group(2))
+        if op in _MATERIALIZING or op == "reduce":
+            out = True
+            break
+        if op == "fusion":
+            for c in _CALL_ATTR_RE.findall(m.group(2)):
+                if _comp_has_materializing(c, comps):
+                    out = True
+                    break
+            if out:
+                break
+    cache[name] = out
+    return out
+
+
+def _split_computations(hlo: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    entry_name = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = _Computation(m.group(1))
+                if line.strip().startswith("ENTRY"):
+                    entry_name = m.group(1)
+                continue
+        else:
+            if line.strip() == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            cur.lines.append(line)
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _operand_names(body: str) -> List[str]:
+    """Names referenced as operands in the op's argument list."""
+    paren = body.find("(")
+    if paren < 0:
+        return []
+    depth = 0
+    end = paren
+    for i in range(paren, len(body)):
+        if body[i] == "(":
+            depth += 1
+        elif body[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    arglist = body[paren + 1:end]
+    return re.findall(r"%([^\s,()]+)", arglist)
+
+
+def _dot_flops(body: str, out_dims: List[int], comp: _Computation) -> float:
+    """2 * prod(out) * contraction_size for dot ops."""
+    ops = _operand_names(body)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", body)
+    contract = 1.0
+    if m and ops:
+        lhs_shape = comp.shapes.get(ops[0])
+        if lhs_shape:
+            for d in (int(x) for x in m.group(1).split(",") if x):
+                if d < len(lhs_shape[1]):
+                    contract *= lhs_shape[1][d]
+    return 2.0 * _nelems(out_dims) * contract
+
+
+def _conv_flops(body: str, out_dims: List[int], comp: _Computation) -> float:
+    ops = _operand_names(body)
+    if len(ops) >= 2 and ops[1] in comp.shapes:
+        kdims = comp.shapes[ops[1]][1]
+        return 2.0 * _nelems(out_dims) * _nelems(kdims[:-1] or [1])
+    return 2.0 * _nelems(out_dims)
+
+
+def _op_bytes(opcode: str, body: str, out_dt: str, out_dims: List[int],
+              comp: "_Computation") -> float:
+    """HBM traffic estimate for one materializing op.
+
+    Slicing ops move only the slice, not the (possibly layer-stacked) source
+    buffer; dynamic-update-slice writes only the update region.  Everything
+    else moves operands + output.  For fusion call sites, operands that are
+    >= 8x the output are assumed to be sliced inside the fusion (the common
+    stacked-parameter dynamic-slice pattern) and counted at output size.
+    """
+    out_b = _nbytes(out_dt, out_dims)
+    names = _operand_names(body)
+    opb = []
+    for op in names:
+        if op in comp.shapes:
+            dt, dims = comp.shapes[op]
+            opb.append(_nbytes(dt, dims))
+    if opcode in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * out_b
+    if opcode in ("dynamic-update-slice", "scatter", "select-and-scatter"):
+        upd = opb[1] if len(opb) > 1 else out_b
+        return 2.0 * min(upd, out_b)
+    if opcode == "fusion":
+        total = out_b
+        for b in opb:
+            total += out_b if b >= 8.0 * out_b else b
+        return total
+    return out_b + sum(opb)
+
+
+def _line_opcode(body: str) -> Optional[str]:
+    # body looks like: "f32[2,32]{1,0} multiply(%a, %b), meta..."
+    # strip the leading shape then read the opcode token.
+    m = _SHAPE_RE.match(body.strip())
+    rest = body
+    # find first "word(" after any shape/tuple prefix
+    m2 = _OPCODE_RE.search(body)
+    return m2.group(1) if m2 else None
+
+
+def _analyze_comp(name: str, comps: Dict[str, _Computation], memo: Dict,
+                  fusion_ctx: bool) -> HloCost:
+    key = (name, fusion_ctx)
+    if key in memo:
+        return memo[key]
+    memo[key] = HloCost()            # cycle guard
+    comp = comps.get(name)
+    if comp is None:
+        return memo[key]
+    # first pass: symbol table
+    for line in comp.lines:
+        m = _DEF_RE.match(line)
+        if m:
+            comp.shapes[m.group(1)] = _first_shape(m.group(2))
+    total = HloCost()
+    for line in comp.lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        body = m.group(2)
+        opcode = _line_opcode(body)
+        if opcode is None or opcode in _ZERO_COST_OPS:
+            # custom-calls: count bytes only (topk etc.), not flops
+            if opcode == "custom-call" and not fusion_ctx:
+                dt, dims = _first_shape(body)
+                total = total + HloCost(bytes=_nbytes(dt, dims) * 2)
+            continue
+        out_dt, out_dims = _first_shape(body)
+
+        if opcode == "while":
+            trips = 1.0
+            tm = _TRIP_RE.search(body)
+            if tm:
+                trips = float(tm.group(1))
+            calls = _CALL_ATTR_RE.findall(body)
+            inner = HloCost()
+            for c in calls:
+                inner = inner + _analyze_comp(c, comps, memo, False)
+            total = total + inner.scaled(trips)
+            continue
+        if opcode == "conditional":
+            calls = _CALL_ATTR_RE.findall(body)
+            branches = [_analyze_comp(c, comps, memo, False) for c in calls]
+            if branches:
+                # worst-case branch
+                best = max(branches, key=lambda c: c.dot_flops + c.elem_flops)
+                total = total + best
+            continue
+        if opcode == "fusion":
+            calls = _CALL_ATTR_RE.findall(body)
+            heavy = False
+            for c in calls:
+                total = total + _analyze_comp(c, comps, memo, True)
+                heavy = heavy or _comp_has_materializing(c, comps)
+            # A pure-elementwise fusion's traffic fuses into its producer /
+            # consumer on TPU -- only fusions around materializing ops
+            # (dot epilogues, reduces, slicing) count as HBM boundaries.
+            if not fusion_ctx and heavy:
+                nb = _op_bytes("fusion", body, out_dt, out_dims, comp)
+                total = total + HloCost(
+                    bytes=nb, bytes_by={f"fusion:{_scope_of(body)}": nb})
+            continue
+        if opcode.startswith("all-") or opcode.startswith("reduce-scatter") \
+                or opcode.startswith("collective-permute"):
+            kind = opcode.replace("-start", "").replace("-done", "")
+            if kind.endswith(".1"):
+                kind = kind[:-2]
+            for c in _COLLECTIVES:
+                if kind.startswith(c):
+                    kind = c
+                    break
+            if opcode.endswith("-done"):
+                continue                         # counted at -start
+            nb = sum(_nbytes(dt, dims) for dt, dims in _all_shapes(body.split("(")[0]))
+            total = total + HloCost(collectives={kind: nb},
+                                    bytes=(0.0 if fusion_ctx else nb * 2),
+                                    bytes_lb=(0.0 if fusion_ctx else nb * 2))
+            continue
+
+        # generic op costing
+        flops = HloCost()
+        if opcode == "dot":
+            flops.dot_flops = _dot_flops(body, out_dims, comp)
+            flops.by_scope = {_scope_of(body): flops.dot_flops}
+            if fusion_ctx:
+                flops.bytes_lb = _op_bytes(opcode, body, out_dt, out_dims, comp)
+        elif opcode == "convolution":
+            flops.dot_flops = _conv_flops(body, out_dims, comp)
+            flops.by_scope = {_scope_of(body): flops.dot_flops}
+        elif opcode in ("reduce", "reduce-window"):
+            in_elems = 0.0
+            for op in _operand_names(body):
+                if op in comp.shapes:
+                    in_elems = max(in_elems, _nelems(comp.shapes[op][1]))
+            flops.elem_flops = in_elems
+        elif opcode in _ELEMENTWISE_HINT:
+            flops.elem_flops = _nelems(out_dims)
+        # bytes: only materializing ops at a non-fusion level count as HBM
+        # traffic (elementwise chains fuse on TPU)
+        if not fusion_ctx and opcode in _MATERIALIZING:
+            nb = _op_bytes(opcode, body, out_dt, out_dims, comp)
+            flops.bytes = nb
+            flops.bytes_by = {f"{opcode}:{_scope_of(body)}": nb}
+            if opcode not in ("reduce", "reduce-window"):
+                flops.bytes_lb = nb
+        total = total + flops
+    memo[key] = total
+    return total
+
+
+def analyze_hlo(hlo_text: str) -> HloCost:
+    comps = _split_computations(hlo_text)
+    memo: Dict = {}
+    return _analyze_comp("__entry__", comps, memo, False)
+
+
+def analyze_compiled(compiled) -> HloCost:
+    return analyze_hlo(compiled.as_text())

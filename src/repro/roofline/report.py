@@ -1,0 +1,133 @@
+"""Three-term roofline report from dry-run JSON.
+
+Terms (seconds, per device == per step since SPMD is bulk-synchronous):
+    compute    = dot_flops_per_device / PEAK_FLOPS
+    memory     = bytes_per_device / HBM_BW
+    collective = weighted collective bytes / LINK_BW
+
+Hardware model: TPU v5e -- 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(constants from the assignment).  Collective weights approximate ring-
+algorithm link traffic per chip: all-reduce 2x, others 1x.
+
+MODEL_FLOPS = 6 * N * D (dense) or 6 * N_active * D (MoE) for training;
+2 * N * D for inference shapes (forward only), where D = tokens processed
+per step per device.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, get_config
+
+__all__ = ["HW", "roofline_row", "build_report", "format_table"]
+
+HW = {
+    "peak_flops": 197e12,     # bf16 / chip
+    "hbm_bw": 819e9,          # B/s
+    "link_bw": 50e9,          # B/s per ICI link
+}
+
+_COLL_WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    from repro.models.lm import build_model
+    model = build_model(cfg)
+    n_active = model.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:
+        tokens = shape.global_batch          # one new token each
+        factor = 2.0
+    return factor * n_active * tokens / n_devices
+
+
+def roofline_row(cell: Dict) -> Optional[Dict]:
+    if cell.get("skipped") or "error" in cell:
+        return None
+    n = cell["n_devices"]
+    compute_s = cell["dot_flops_per_device"] / HW["peak_flops"]
+    # elementwise work runs on the VPU: v5e ~ 4 TFLOP/s f32 vector -- fold it
+    # into the compute term so VPU-bound recurrent archs are not invisible.
+    vpu_s = cell["elem_flops_per_device"] / 4e12
+    memory_ub_s = cell["bytes_per_device"] / HW["hbm_bw"]
+    # lower bound: irreducible traffic (GEMM operands, slicing, collectives);
+    # true TPU HBM time lies in [lb, ub] (CPU HLO fuses less than TPU)
+    memory_s = cell.get("bytes_lb_per_device",
+                        cell["bytes_per_device"]) / HW["hbm_bw"]
+    coll_s = sum(_COLL_WEIGHT.get(k, 1.0) * v
+                 for k, v in cell["collective_bytes"].items()) / HW["link_bw"]
+    mf = model_flops_per_device(cell["arch"], cell["shape"], n)
+    terms = {"compute": compute_s + vpu_s, "memory": memory_s,
+             "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mfu = (mf / HW["peak_flops"]) / step_s if step_s > 0 else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"], "mesh": cell["mesh"],
+        "compute_s": compute_s, "vpu_s": vpu_s, "memory_s": memory_s,
+        "memory_ub_s": memory_ub_s,
+        "collective_s": coll_s, "bottleneck": bottleneck,
+        "model_flops_per_device": mf,
+        "useful_flops_ratio": (mf / cell["dot_flops_per_device"]
+                               if cell["dot_flops_per_device"] else 0.0),
+        "roofline_fraction_mfu": mfu,
+        "peak_bytes_per_device": cell.get("peak_bytes_per_device", 0),
+    }
+
+
+def build_report(path: str) -> List[Dict]:
+    with open(path) as f:
+        cells = json.load(f)
+    rows = []
+    for c in cells:
+        r = roofline_row(c)
+        if r is not None:
+            rows.append(r)
+        elif c.get("skipped"):
+            rows.append({"arch": c["arch"], "shape": c["shape"],
+                         "skipped": True, "reason": c.get("reason", "")})
+    return rows
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = (f"| {'arch':22s} | {'shape':11s} | {'compute_s':>9s} | "
+           f"{'memory_s':>9s} | {'coll_s':>9s} | {'bound':>7s} | "
+           f"{'useful':>6s} | {'MFU':>6s} |")
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    out = [hdr, sep]
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']:22s} | {r['shape']:11s} | "
+                       f"{'skipped: ' + r['reason'][:60]:s}")
+            continue
+        out.append(
+            f"| {r['arch']:22s} | {r['shape']:11s} | {r['compute_s']:9.4f} | "
+            f"{r['memory_s']:9.4f} | {r['collective_s']:9.4f} | "
+            f"{r['bottleneck']:>7s}"[:120] +
+            f" | {r['useful_flops_ratio']:6.2f} | "
+            f"{r['roofline_fraction_mfu']:6.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json", nargs="+")
+    args = ap.parse_args()
+    for p in args.json:
+        rows = build_report(p)
+        print(f"\n## {p}\n")
+        print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

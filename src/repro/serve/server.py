@@ -1,0 +1,119 @@
+"""Batched serving loop: continuous prefill + decode over a request queue.
+
+Single-host reference implementation of the production serving layer:
+- fixed decode batch with slot recycling (a finished sequence's slot is
+  refilled from the queue -- continuous batching);
+- prefill runs one request at a time and its KV is inserted into the decode
+  batch slot (per-slot cache write);
+- greedy or temperature sampling;
+- per-request max_new_tokens / EOS termination.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ServeConfig", "Request", "Server"]
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 4
+    cache_len: int = 256
+    max_new_tokens: int = 32
+    eos_id: int = -1              # -1: never terminates early
+    temperature: float = 0.0      # 0 = greedy
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray            # (prompt_len,)
+    extras: Optional[Dict[str, np.ndarray]] = None
+    out: Optional[List[int]] = None
+
+
+class Server:
+    def __init__(self, model, params, cfg: ServeConfig, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(model.decode_step)
+
+    def _sample(self, logits):
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.cfg.temperature)
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Serve all requests to completion; returns {rid: generated ids}."""
+        cfg = self.cfg
+        queue = list(requests)
+        results: Dict[int, List[int]] = {}
+        # batch-of-one prefill, slot-batched decode
+        active: List[Optional[Request]] = [None] * cfg.max_batch
+        pos = np.zeros(cfg.max_batch, np.int32)
+        last_tok = np.zeros(cfg.max_batch, np.int32)
+        remaining = np.zeros(cfg.max_batch, np.int32)
+        cache = self.model.init_cache(cfg.max_batch, cfg.cache_len)
+
+        def insert(slot: int, req: Request):
+            batch = {"tokens": jnp.asarray(req.tokens[None, :])}
+            for k, v in (req.extras or {}).items():
+                batch[k] = jnp.asarray(v[None])
+            hidden, pcache = self.model.prefill(self.params, batch,
+                                                cfg.cache_len)
+            logits = self.model.logits(self.params, hidden[:, -1:])[:, 0]
+            tok = int(np.asarray(self._sample(logits))[0])
+            nonlocal cache
+
+            def slot_set(full, one):
+                # batch axis = first axis where prefill has 1, batch has B
+                for ax in range(full.ndim):
+                    if one.shape[ax] == 1 and full.shape[ax] == cfg.max_batch:
+                        idx = [slice(None)] * full.ndim
+                        idx[ax] = slot
+                        oidx = [slice(None)] * one.ndim
+                        oidx[ax] = 0
+                        return full.at[tuple(idx)].set(
+                            one[tuple(oidx)].astype(full.dtype))
+                return full
+
+            cache = jax.tree.map(slot_set, cache, pcache)
+            active[slot] = req
+            req.out = [tok]
+            prefix = self.model.cfg.prefix_tokens or 0
+            pos[slot] = len(req.tokens) + prefix
+            last_tok[slot] = tok
+            remaining[slot] = cfg.max_new_tokens - 1
+
+        while queue or any(a is not None for a in active):
+            for slot in range(cfg.max_batch):
+                if active[slot] is None and queue:
+                    insert(slot, queue.pop(0))
+            live = [s for s in range(cfg.max_batch) if active[s] is not None]
+            if not live:
+                break
+            toks = jnp.asarray(last_tok[:, None])
+            logits, cache = self._decode(self.params, cache, toks,
+                                         jnp.asarray(pos))
+            nxt = np.asarray(self._sample(logits))
+            for slot in live:
+                req = active[slot]
+                tok = int(nxt[slot])
+                req.out.append(tok)
+                pos[slot] += 1
+                last_tok[slot] = tok
+                remaining[slot] -= 1
+                if tok == cfg.eos_id or remaining[slot] <= 0:
+                    results[req.rid] = req.out
+                    active[slot] = None
+        for req in [a for a in active if a is not None]:
+            results[req.rid] = req.out or []
+        return results

@@ -1,0 +1,82 @@
+"""Chunked vocab-fused cross-entropy.
+
+For 256k vocabularies the (tokens, vocab) logits tensor dominates activation
+memory (and its f32 softmax temporaries).  We never materialize it: the loss
+scans over token chunks, computing ``chunk_hidden @ embed.T`` and its xent
+inside the scan body, so live memory is O(chunk * vocab) instead of
+O(seq * vocab).  The backward pass recomputes per-chunk logits (remat) --
+this trades ~1 extra vocab GEMM for the full logits buffer, the standard
+large-vocab trick.  Memory-roofline effect recorded in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_xent", "full_xent"]
+
+
+def _chunk_xent(hidden, labels, mask, table):
+    """hidden (T, D) f32-ready; labels (T,); mask (T,); table (V, D)."""
+    logits = jnp.einsum("td,vd->tv", hidden.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    nll = (lse - gold) * mask
+    correct = (jnp.argmax(logits, axis=-1) == labels) * mask
+    return jnp.sum(nll), jnp.sum(correct)
+
+
+def chunked_xent(hidden, labels, table, *, mask=None, chunk: int = 2048):
+    """Mean next-token xent without materializing full logits.
+
+    hidden: (B, S, D); labels: (B, S) int32; table: (V, D) embedding
+    (tied LM head); mask: (B, S) float (0 for pad/prefix).
+    Returns (loss, metrics dict).
+
+    SHARDING NOTE: chunking is along the SEQUENCE axis, keeping the batch
+    axis intact.  Chunking over flattened tokens would make each scan step a
+    single data-shard's rows, forcing GSPMD to replicate the vocab GEMM
+    across the model axis (measured 16x flops inflation on the production
+    mesh -- see EXPERIMENTS.md §Perf iteration 0).
+    """
+    B, S, D = hidden.shape
+    c = min(chunk, S)
+    pad = (-S) % c
+    h, y = hidden, labels
+    m = (jnp.ones((B, S), jnp.float32) if mask is None
+         else mask.astype(jnp.float32))
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        y = jnp.pad(y, ((0, 0), (0, pad)))
+        m = jnp.pad(m, ((0, 0), (0, pad)))
+    n = h.shape[1] // c
+    # (n, B, c, ...) scan layout: batch stays the (pod, data)-sharded axis
+    hc = jnp.moveaxis(h.reshape(B, n, c, D), 1, 0)
+    yc = jnp.moveaxis(y.reshape(B, n, c), 1, 0)
+    mc = jnp.moveaxis(m.reshape(B, n, c), 1, 0)
+
+    def body(carry, xs):
+        tot, corr = carry
+        hh, yy, mm = xs
+        nll, ok = _chunk_xent(hh.reshape(-1, D), yy.reshape(-1),
+                              mm.reshape(-1), table)
+        return (tot + nll, corr + ok), None
+
+    body = jax.checkpoint(body)   # recompute chunk logits in backward
+    (tot, corr), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                  (hc, yc, mc))
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+    return tot / denom, {"acc": corr / denom, "tokens": denom}
+
+
+def full_xent(hidden, labels, table, *, mask=None):
+    """Reference unchunked xent (tests)."""
+    logits = jnp.einsum("bsd,vd->bsv", hidden.astype(jnp.float32),
+                        table.astype(jnp.float32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    m = jnp.ones(labels.shape, jnp.float32) if mask is None else mask.astype(jnp.float32)
+    return jnp.sum((lse - gold) * m) / jnp.maximum(jnp.sum(m), 1.0)

@@ -1,0 +1,130 @@
+"""train_step / prefill_step / decode_step builders.
+
+These are the functions the launcher jits (and the dry-run lowers).  They
+close over (model, train config) and take pytrees only, so the same builder
+serves smoke tests (1 CPU device) and the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+from repro.train import loss as loss_mod
+
+__all__ = ["TrainConfig", "make_train_step", "make_prefill_step",
+           "make_decode_step", "make_loss_fn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: adamw.AdamWConfig = adamw.AdamWConfig()
+    aux_loss_weight: float = 0.01         # MoE load-balance
+    microbatch: int = 0                   # 0 = no gradient accumulation
+    grad_compression: bool = False        # int8 + error feedback (cross-pod)
+
+
+def _batch_mask(model, batch):
+    """Loss mask: next-token targets, zero on VLM patch prefix."""
+    cfg = model.cfg
+    tokens = batch["tokens"]
+    B, S1 = tokens.shape
+    return jnp.ones((B, S1 - 1), jnp.float32)
+
+
+def make_loss_fn(model, tcfg: TrainConfig):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        tokens = batch["tokens"]                      # (B, S+1)
+        inp = dict(batch)
+        inp["tokens"] = tokens[:, :-1]
+        labels = tokens[:, 1:]
+        hidden, aux, _ = model.forward(params, inp)
+        if cfg.prefix_tokens:
+            hidden = hidden[:, cfg.prefix_tokens:]    # only text positions
+        loss, metrics = loss_mod.chunked_xent(
+            hidden, labels, params["embed"]["table"],
+            mask=_batch_mask(model, batch), chunk=cfg.loss_chunk)
+        total = loss + tcfg.aux_loss_weight * aux
+        metrics = dict(metrics, xent=loss, aux=aux)
+        return total, metrics
+
+    return loss_fn
+
+
+def make_train_step(model, tcfg: TrainConfig):
+    loss_fn = make_loss_fn(model, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatch and tcfg.microbatch < batch["tokens"].shape[0]:
+            # gradient accumulation over microbatches (scan keeps HLO small)
+            from repro.distributed import context as dctx
+            from repro.distributed import sharding as shd
+            B = batch["tokens"].shape[0]
+            mb = tcfg.microbatch
+            n = B // mb
+            mesh = dctx.current_mesh()
+
+            def to_micro(x):
+                x = x.reshape(n, mb, *x.shape[1:])
+                if mesh is not None:
+                    # keep the batch shard on the microbatch axis -- without
+                    # this GSPMD replicates the whole step (see §Perf log)
+                    axes = (None, "batch") + (None,) * (x.ndim - 2)
+                    x = shd.constrain(x, mesh, *axes)
+                return x
+
+            mbatch = jax.tree.map(to_micro, batch)
+
+            def acc_body(carry, mb_batch):
+                g_acc, l_acc = carry
+                (l, met), g = grad_fn(params, mb_batch)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l), met
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, lsum), mets = jax.lax.scan(
+                acc_body, (g0, jnp.zeros(())), mbatch)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = lsum / n
+            metrics = jax.tree.map(lambda m: m[-1], mets)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        if tcfg.grad_compression:
+            opt_state = dict(opt_state)
+            ef = opt_state.get("error_feedback")
+            if ef is None:
+                ef = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ef = adamw.compressed_grad_tree(grads, ef)
+            opt_state["error_feedback"] = ef
+        new_params, new_opt, opt_metrics = adamw.adamw_update(
+            tcfg.opt, params, grads,
+            {k: opt_state[k] for k in ("step", "m", "v")})
+        if tcfg.grad_compression:
+            new_opt["error_feedback"] = opt_state["error_feedback"]
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, cache_len: int):
+    def prefill_step(params, batch):
+        hidden, cache = model.prefill(params, batch, cache_len)
+        # next-token logits for the last position (sampling seed)
+        logits = model.logits(params, hidden[:, -1:])[:, 0]
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+    return decode_step

@@ -1,0 +1,76 @@
+"""Optimization paths must be bit-compatible with their baselines:
+causal block-skip, q-chunk folding, lockstep decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.layers.param import init_tree
+from repro.models import attention as attn
+
+RNG = np.random.default_rng(11)
+
+
+def _qkv(B=2, S=70, KV=2, G=2, hd=8):
+    q = jnp.asarray(RNG.normal(size=(B, S, KV, G, hd)).astype(np.float32))
+    k = jnp.asarray(RNG.normal(size=(B, S, KV, hd)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(size=(B, S, KV, hd)).astype(np.float32))
+    return q, k, v
+
+
+def test_block_skip_exact():
+    q, k, v = _qkv()
+    pos = jnp.arange(q.shape[1])
+    base = attn.chunked_attention(q, k, v, pos, pos, causal=True, window=None,
+                                  chunk_q=16, chunk_kv=8)
+    skip = attn.chunked_attention(q, k, v, pos, pos, causal=True, window=None,
+                                  chunk_q=16, chunk_kv=8, block_skip=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(skip))
+
+
+def test_fold_q_exact():
+    q, k, v = _qkv()
+    pos = jnp.arange(q.shape[1])
+    base = attn.chunked_attention(q, k, v, pos, pos, causal=True, window=None,
+                                  chunk_q=16, chunk_kv=8)
+    fold = attn.chunked_attention(q, k, v, pos, pos, causal=True, window=None,
+                                  chunk_q=16, chunk_kv=8, fold_q=True)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(fold))
+
+
+def test_fold_q_noncausal_and_window():
+    q, k, v = _qkv()
+    pos = jnp.arange(q.shape[1])
+    for causal, window in [(False, None), (True, 9)]:
+        base = attn.chunked_attention(q, k, v, pos, pos, causal=causal,
+                                      window=window, chunk_q=16, chunk_kv=8)
+        fold = attn.chunked_attention(q, k, v, pos, pos, causal=causal,
+                                      window=window, chunk_q=16, chunk_kv=8,
+                                      fold_q=True)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(fold),
+                                   rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("window", [None, 8])
+def test_lockstep_decode_matches_ragged(window):
+    """Scalar-pos (SPMD-friendly DUS) decode == per-row scatter decode when
+    positions are uniform."""
+    import dataclasses as dc
+    cfg = dc.replace(get_config("deepseek-7b").reduced(), window=window)
+    params = init_tree(attn.attn_spec(cfg), jax.random.PRNGKey(0))
+    B = 3
+    cache0 = attn.init_kv_cache(cfg, B, max_len=32, window=window)
+    x = jnp.asarray(RNG.normal(size=(B, 1, cfg.d_model)).astype(np.float32))
+    pos = 5
+    out_s, cache_s = attn.attn_decode(params, x, cache0, jnp.asarray(pos),
+                                      cfg=cfg, window=window)
+    out_v, cache_v = attn.attn_decode(params, x, cache0,
+                                      jnp.full((B,), pos, jnp.int32),
+                                      cfg=cfg, window=window)
+    np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_v),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cache_s["k"]),
+                               np.asarray(cache_v["k"]), rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(cache_s["pos"]),
+                                  np.asarray(cache_v["pos"]))

@@ -1,0 +1,110 @@
+"""Paper §6-§11: complex matmul (CPM4/CPM3), transforms, convolutions."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import complexmm as C
+from repro.core import conv as CV
+from repro.core import transforms as T
+
+RNG = np.random.default_rng(1)
+
+
+def _cplx(*shape):
+    return (RNG.normal(size=shape) + 1j * RNG.normal(size=shape)).astype(np.complex64)
+
+
+@pytest.mark.parametrize("mode", ["cpm4", "cpm3"])
+@pytest.mark.parametrize("shape", [(1, 1, 1), (4, 7, 5), (16, 32, 8)])
+def test_complex_matmul(mode, shape):
+    m, k, n = shape
+    x, y = _cplx(m, k), _cplx(k, n)
+    ref = x @ y
+    out = np.asarray(C.complex_matmul(jnp.asarray(x), jnp.asarray(y), mode=mode))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-3 * k)
+
+
+def test_cpm_planes_out():
+    x, y = _cplx(3, 4), _cplx(4, 5)
+    re, im = C.cpm3_matmul(jnp.asarray(x), jnp.asarray(y), planes_out=True)
+    ref = x @ y
+    np.testing.assert_allclose(np.asarray(re), ref.real, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(im), ref.imag, rtol=1e-4, atol=1e-4)
+
+
+# ------------------------------------------------------------------ transforms
+
+def test_real_transform_square():
+    w = RNG.normal(size=(8, 8)).astype(np.float32)
+    x = RNG.normal(size=(8,)).astype(np.float32)
+    out = np.asarray(T.real_transform(jnp.asarray(w), jnp.asarray(x), mode="square"))
+    np.testing.assert_allclose(out, w @ x, rtol=1e-5, atol=1e-5)
+
+
+def test_square_transform_engine_real_and_complex_coeff():
+    x = RNG.normal(size=(16,)).astype(np.float32)
+    wr = RNG.normal(size=(16, 16)).astype(np.float32)
+    eng = T.SquareTransform(jnp.asarray(wr))
+    np.testing.assert_allclose(np.asarray(eng(jnp.asarray(x))), wr @ x,
+                               rtol=1e-5, atol=1e-5)
+    # complex coefficients over real inputs (paper §4 end: covers real DFT)
+    wc = np.asarray(T.dft_matrix(16))
+    eng = T.SquareTransform(jnp.asarray(wc))
+    np.testing.assert_allclose(np.asarray(eng(jnp.asarray(x))),
+                               np.fft.fft(x), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["cpm4", "cpm3"])
+def test_complex_transform_is_dft(mode):
+    n = 16
+    z = _cplx(n)
+    eng = T.ComplexSquareTransform(T.dft_matrix(n), mode=mode)
+    np.testing.assert_allclose(np.asarray(eng(jnp.asarray(z))),
+                               np.fft.fft(z), rtol=1e-4, atol=1e-3)
+
+
+def test_unit_modulus_simplification():
+    """Paper §6/§7: for unit-modulus coefficient rows, S_k == -N."""
+    n = 32
+    eng = T.ComplexSquareTransform(T.dft_matrix(n), mode="cpm4")
+    np.testing.assert_allclose(np.asarray(eng.sk), -n * np.ones(n), rtol=1e-4)
+
+
+# ---------------------------------------------------------------- convolutions
+
+def test_conv1d_square_modes():
+    x = RNG.normal(size=(100,)).astype(np.float32)
+    w = RNG.normal(size=(9,)).astype(np.float32)
+    ref = np.correlate(x, w, mode="valid")
+    for mode in ("square", "square_virtual"):
+        out = np.asarray(CV.correlate1d(jnp.asarray(x), jnp.asarray(w), mode=mode))
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+    # convolution = flipped-kernel correlation
+    out = np.asarray(CV.convolve1d(jnp.asarray(x), jnp.asarray(w), mode="square"))
+    np.testing.assert_allclose(out, np.convolve(x, w, mode="valid"),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_square():
+    x = RNG.normal(size=(12, 14)).astype(np.float32)
+    w = RNG.normal(size=(3, 5)).astype(np.float32)
+    ref = np.asarray(CV.correlate2d(jnp.asarray(x), jnp.asarray(w)))
+    out = np.asarray(CV.correlate2d(jnp.asarray(x), jnp.asarray(w), mode="square"))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("mode", ["cpm4", "cpm3"])
+def test_complex_conv(mode):
+    x = _cplx(60)
+    w = _cplx(7)
+    ref = np.asarray(CV.complex_correlate1d(jnp.asarray(x), jnp.asarray(w)))
+    out = np.asarray(CV.complex_correlate1d(jnp.asarray(x), jnp.asarray(w),
+                                            mode=mode))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-3)
+
+
+def test_sliding_sum_squares():
+    x = RNG.normal(size=(30,)).astype(np.float32)
+    out = np.asarray(CV.sliding_sum_squares(jnp.asarray(x), 5))
+    ref = np.array([np.sum(x[i:i + 5] ** 2) for i in range(26)])
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)

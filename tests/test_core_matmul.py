@@ -1,0 +1,78 @@
+"""Paper §3: square-based real matmul == standard matmul, all modes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import matmul as M
+from repro.core import squares as sq
+
+RNG = np.random.default_rng(0)
+SQUARE_MODES = ["square_virtual", "square_exact", "square_scan"]
+
+
+@pytest.mark.parametrize("mode", SQUARE_MODES)
+@pytest.mark.parametrize("shape", [(1, 1, 1), (3, 5, 7), (16, 16, 16),
+                                   (33, 63, 17), (128, 256, 64)])
+def test_square_matmul_matches_standard(mode, shape):
+    m, k, n = shape
+    a = RNG.normal(size=(m, k)).astype(np.float32)
+    b = RNG.normal(size=(k, n)).astype(np.float32)
+    ref = a @ b
+    out = np.asarray(M.matmul(jnp.asarray(a), jnp.asarray(b), mode=mode))
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4 * k)
+
+
+@pytest.mark.parametrize("mode", ["square_exact", "square_scan"])
+def test_int8_bit_exact(mode):
+    """The paper's substitution is EXACT in integer arithmetic: 2ab is even."""
+    a = RNG.integers(-128, 128, (40, 70)).astype(np.int8)
+    b = RNG.integers(-128, 128, (70, 30)).astype(np.int8)
+    ref = a.astype(np.int32) @ b.astype(np.int32)
+    out = np.asarray(M.matmul(jnp.asarray(a), jnp.asarray(b), mode=mode))
+    assert out.dtype == np.int32
+    np.testing.assert_array_equal(out, ref)
+
+
+def test_batched_lhs():
+    a = RNG.normal(size=(2, 3, 5, 8)).astype(np.float32)
+    b = RNG.normal(size=(8, 6)).astype(np.float32)
+    ref = a @ b
+    for mode in SQUARE_MODES:
+        out = np.asarray(M.matmul(jnp.asarray(a), jnp.asarray(b), mode=mode))
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=1e-3)
+
+
+def test_square_modes_differentiable():
+    a = jnp.asarray(RNG.normal(size=(4, 6)).astype(np.float32))
+    b = jnp.asarray(RNG.normal(size=(6, 5)).astype(np.float32))
+    gref = jax.grad(lambda a, b: jnp.sum(jnp.tanh(a @ b)), (0, 1))(a, b)
+    for mode in SQUARE_MODES:
+        g = jax.grad(lambda a, b: jnp.sum(jnp.tanh(
+            M.matmul(a, b, mode=mode))), (0, 1))(a, b)
+        np.testing.assert_allclose(np.asarray(g[0]), np.asarray(gref[0]),
+                                   rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(g[1]), np.asarray(gref[1]),
+                                   rtol=1e-3, atol=1e-4)
+
+
+def test_bf16_accumulates_in_f32():
+    a = jnp.asarray(RNG.normal(size=(8, 512)), jnp.bfloat16)
+    b = jnp.asarray(RNG.normal(size=(512, 8)), jnp.bfloat16)
+    out = M.matmul(a, b, mode="square_virtual")
+    assert out.dtype == jnp.float32
+
+
+def test_correction_terms_definition():
+    """Sa_i and Sb_j are negative row/col sums of squares (paper eq 5)."""
+    a = RNG.normal(size=(3, 4)).astype(np.float32)
+    sa = np.asarray(sq.row_correction(jnp.asarray(a)))
+    np.testing.assert_allclose(sa, -np.sum(a * a, axis=1), rtol=1e-6)
+
+
+def test_mode_registry_and_default():
+    assert M.get_default_mode() == "standard"
+    with pytest.raises(ValueError):
+        M.matmul(jnp.zeros((2, 2)), jnp.zeros((2, 2)), mode="bogus")
+    with pytest.raises(ValueError):
+        M.set_default_mode("bogus")

@@ -1,0 +1,85 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode) vs ref.py oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+MM_SHAPES = [(1, 1, 1), (7, 13, 9), (64, 128, 32), (130, 257, 140),
+             (256, 256, 256), (33, 512, 129)]
+
+
+@pytest.mark.parametrize("shape", MM_SHAPES)
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_sq_matmul_sweep(shape, dtype):
+    m, k, n = shape
+    a = RNG.normal(size=(m, k)).astype(dtype)
+    b = RNG.normal(size=(k, n)).astype(dtype)
+    out = np.asarray(ops.sq_matmul(jnp.asarray(a), jnp.asarray(b)))
+    oracle = np.asarray(ref.sq_matmul_ref(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(out, oracle, rtol=5e-3, atol=5e-3 * k)
+    np.testing.assert_allclose(out, a.astype(np.float64) @ b.astype(np.float64),
+                               rtol=5e-3, atol=5e-3 * k)
+
+
+def test_sq_matmul_bf16():
+    a = jnp.asarray(RNG.normal(size=(32, 64)), jnp.bfloat16)
+    b = jnp.asarray(RNG.normal(size=(64, 16)), jnp.bfloat16)
+    out = np.asarray(ops.sq_matmul(a, b))
+    ref_ = np.asarray(a, np.float32) @ np.asarray(b, np.float32)
+    np.testing.assert_allclose(out, ref_, rtol=5e-2, atol=0.5)
+
+
+@pytest.mark.parametrize("shape", [(5, 9, 4), (64, 64, 64), (100, 200, 50)])
+def test_sq_matmul_int8_exact(shape):
+    m, k, n = shape
+    a = RNG.integers(-128, 128, (m, k)).astype(np.int8)
+    b = RNG.integers(-128, 128, (k, n)).astype(np.int8)
+    out = np.asarray(ops.sq_matmul(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_array_equal(out, a.astype(np.int32) @ b.astype(np.int32))
+
+
+def test_sq_matmul_batched():
+    a = RNG.normal(size=(3, 4, 32)).astype(np.float32)
+    b = RNG.normal(size=(32, 8)).astype(np.float32)
+    out = np.asarray(ops.sq_matmul(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(out, a @ b, rtol=2e-3, atol=1e-2)
+
+
+@pytest.mark.parametrize("shape", [(4, 6, 5), (40, 80, 24), (128, 128, 128)])
+def test_cpm3_matmul_sweep(shape):
+    m, k, n = shape
+    x = (RNG.normal(size=(m, k)) + 1j * RNG.normal(size=(m, k))).astype(np.complex64)
+    y = (RNG.normal(size=(k, n)) + 1j * RNG.normal(size=(k, n))).astype(np.complex64)
+    re, im = ops.cpm3_matmul(jnp.asarray(x), jnp.asarray(y))
+    rre, rim = ref.cpm3_matmul_ref(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(re), np.asarray(rre), rtol=1e-3,
+                               atol=1e-3 * k)
+    np.testing.assert_allclose(np.asarray(im), np.asarray(rim), rtol=1e-3,
+                               atol=1e-3 * k)
+    z = x @ y
+    np.testing.assert_allclose(np.asarray(re), z.real, rtol=1e-3, atol=1e-3 * k)
+
+
+@pytest.mark.parametrize("L,n", [(64, 3), (300, 11), (1000, 64), (257, 7)])
+def test_sq_conv_sweep(L, n):
+    x = RNG.normal(size=(L,)).astype(np.float32)
+    w = RNG.normal(size=(n,)).astype(np.float32)
+    out = np.asarray(ops.sq_conv(jnp.asarray(x), jnp.asarray(w)))
+    oracle = np.asarray(ref.sq_conv_ref(jnp.asarray(x), jnp.asarray(w)))
+    np.testing.assert_allclose(out, oracle, rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(out, np.correlate(x, w, mode="valid"),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_kernel_tile_shape_variants():
+    """BlockSpec tiling must not change results."""
+    a = RNG.normal(size=(100, 200)).astype(np.float32)
+    b = RNG.normal(size=(200, 60)).astype(np.float32)
+    base = np.asarray(ops.sq_matmul(jnp.asarray(a), jnp.asarray(b)))
+    for bm, bn, bk in [(32, 128, 32), (64, 256, 64), (8, 128, 128)]:
+        out = np.asarray(ops.sq_matmul(jnp.asarray(a), jnp.asarray(b),
+                                       bm=bm, bn=bn, bk=bk))
+        np.testing.assert_allclose(out, base, rtol=1e-4, atol=1e-3)

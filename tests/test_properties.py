@@ -1,0 +1,89 @@
+"""Hypothesis property tests on the paper's core invariants."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import counting as CT
+from repro.core import matmul as M
+from repro.core import squares as sq
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+floats = hnp.arrays(np.float32, shape=st.tuples(
+    st.integers(1, 8), st.integers(1, 8)),
+    elements=st.floats(-100, 100, width=32))
+
+
+@hypothesis.given(shape=st.tuples(st.integers(1, 6), st.integers(1, 6)),
+                  data=st.data())
+def test_pm_identity_elementwise(shape, data):
+    """(a+b)^2 - a^2 - b^2 == 2ab for arbitrary operand pairs (f32 tolerance:
+    the squares grow to ~4e6 so absolute error scales with eps * max^2)."""
+    elems = st.floats(-1e3, 1e3)
+    a = data.draw(hnp.arrays(np.float64, shape, elements=elems))
+    b = data.draw(hnp.arrays(np.float64, shape, elements=elems))
+    pm = np.asarray(sq.pm(jnp.asarray(a, dtype=jnp.float32),
+                          jnp.asarray(b, dtype=jnp.float32)), np.float64)
+    lhs = pm - a * a - b * b
+    np.testing.assert_allclose(lhs, 2 * a * b, rtol=1e-4, atol=2.0)
+
+
+@hypothesis.given(
+    m=st.integers(1, 5), k=st.integers(1, 5), n=st.integers(1, 5),
+    data=st.data())
+def test_square_matmul_property(m, k, n, data):
+    a = data.draw(hnp.arrays(np.float64, (m, k), elements=st.floats(-50, 50)))
+    b = data.draw(hnp.arrays(np.float64, (k, n), elements=st.floats(-50, 50)))
+    out = np.asarray(M.pm_matmul_exact(jnp.asarray(a, dtype=jnp.float32),
+                                       jnp.asarray(b, dtype=jnp.float32)))
+    np.testing.assert_allclose(out, a @ b, rtol=1e-3, atol=1e-2)
+
+
+@hypothesis.given(
+    m=st.integers(1, 6), k=st.integers(1, 6), n=st.integers(1, 6),
+    data=st.data())
+def test_int_matmul_always_exact(m, k, n, data):
+    """Integer square-form matmul is bit-exact for the full int8 range."""
+    a = data.draw(hnp.arrays(np.int8, (m, k)))
+    b = data.draw(hnp.arrays(np.int8, (k, n)))
+    out = np.asarray(M.pm_matmul_scan(jnp.asarray(a), jnp.asarray(b)))
+    ref = a.astype(np.int64) @ b.astype(np.int64)
+    np.testing.assert_array_equal(out, ref.astype(np.int32))
+
+
+@hypothesis.given(m=st.integers(1, 6), k=st.integers(1, 6), n=st.integers(1, 6))
+def test_square_count_matches_paper_formula(m, k, n):
+    """Measured squarer firings == MNP + MN + NP exactly (paper eq 6)."""
+    ctr = CT.OpCounter()
+    a = np.ones((m, k))
+    b = np.ones((k, n))
+    CT.pm_matmul_counted(a, b, ctr)
+    assert ctr.squares == CT.real_matmul_square_count(m, k, n)
+    assert ctr.mults == 0               # NO multiplier fires in the datapath
+
+
+@hypothesis.given(m=st.integers(1, 4), k=st.integers(1, 4), n=st.integers(1, 4))
+def test_cpm_counts_match_paper(m, k, n):
+    x = np.ones((m, k)) + 1j
+    y = np.ones((k, n)) - 1j
+    c4 = CT.OpCounter()
+    CT.cpm4_matmul_counted(x, y, c4)
+    assert c4.squares == CT.cpm4_square_count(m, k, n)     # eq 20 numerator
+    c3 = CT.OpCounter()
+    CT.cpm3_matmul_counted(x, y, c3)
+    assert c3.squares == CT.cpm3_square_count(m, k, n)     # eq 36 numerator
+    # CPM3 beats CPM4 exactly when 1/M + 1/P < 1 (asymptotic claim, §9)
+    if 1 / m + 1 / n < 1:
+        assert c3.squares < c4.squares
+
+
+@hypothesis.given(data=st.data(), n=st.integers(1, 5))
+def test_halve_exact_for_even_ints(data, n):
+    x = data.draw(hnp.arrays(np.int32, (n,), elements=st.integers(-2**20, 2**20)))
+    out = np.asarray(sq.halve(jnp.asarray(2 * x)))
+    np.testing.assert_array_equal(out, x)
