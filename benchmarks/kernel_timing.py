@@ -1,6 +1,16 @@
 """Kernel wall-time microbenchmarks (CPU interpret mode for Pallas; jnp for
 the algebraic paths).  Interpret-mode timings validate correctness cost, not
-TPU performance -- TPU projections come from the roofline (§Roofline)."""
+TPU performance -- TPU projections come from the roofline (§Roofline).
+
+Row contract: every row dict carries ``name``, ``us_per_call``, ``shape``
+and ``mode`` (plus optional extras) -- the same fields ``benchmarks/run.py
+--json`` writes to ``BENCH_kernels.json`` so kernel speedups are trackable
+across PRs.
+
+``time_plan`` is the hook the empirical autotuner
+(:func:`repro.kernels.tuning.autotune_matmul`) drives: it times one kernel
+call under an explicit tile plan.
+"""
 from __future__ import annotations
 
 import time
@@ -11,12 +21,51 @@ import numpy as np
 
 
 def _time(fn, *args, reps=5, warmup=2):
+    """Min-of-reps wall time in us (min is robust to scheduler noise on the
+    shared CPU runners these benches execute on)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps * 1e6      # us
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6      # us
+
+
+def _plan_kwargs(plan):
+    """kwargs for kernels.ops wrappers from a TilePlan (or a bare tuple)."""
+    if hasattr(plan, "astuple"):
+        bm, bn, bk, kc = plan.astuple()
+        return dict(bm=bm, bn=bn, bk=bk, kc=kc,
+                    pm_layout=getattr(plan, "pm_layout", None))
+    bm, bn, bk, kc = plan
+    return dict(bm=bm, bn=bn, bk=bk, kc=kc)
+
+
+def time_plan(kind, m, n, k, dtype, plan, *, reps=3):
+    """Wall-time one kernel call under an explicit tile plan (autotune hook).
+
+    kind: "sq_matmul" | "cpm3_matmul" | "cpm4_matmul".
+    """
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    kwargs = _plan_kwargs(plan)
+    if kind == "sq_matmul":
+        a = jnp.asarray(rng.normal(size=(m, k)).astype(np.dtype(dtype)))
+        b = jnp.asarray(rng.normal(size=(k, n)).astype(np.dtype(dtype)))
+        fn = lambda a, b: ops.sq_matmul(a, b, **kwargs)
+        return _time(fn, a, b, reps=reps)
+    if kind in ("cpm3_matmul", "cpm4_matmul"):
+        x = jnp.asarray((rng.normal(size=(m, k))
+                         + 1j * rng.normal(size=(m, k))).astype(np.complex64))
+        y = jnp.asarray((rng.normal(size=(k, n))
+                         + 1j * rng.normal(size=(k, n))).astype(np.complex64))
+        op = getattr(ops, kind)
+        fn = lambda x, y: op(x, y, **kwargs)[0]
+        return _time(fn, x, y, reps=reps)
+    raise ValueError(f"unknown kernel kind {kind!r}")
 
 
 def matmul_modes(m=256, k=256, n=256):
@@ -28,25 +77,50 @@ def matmul_modes(m=256, k=256, n=256):
     for mode in ("standard", "square_virtual", "square_scan"):
         f = jax.jit(lambda a, b, mode=mode: M.matmul(a, b, mode=mode))
         rows.append({"name": f"matmul[{mode}]", "us_per_call": _time(f, a, b),
-                     "derived": f"{m}x{k}x{n}"})
+                     "shape": f"{m}x{k}x{n}", "mode": mode})
     return rows
 
 
 def pallas_kernels():
+    """The tracked Pallas kernel timings (planner-default tile plans), plus
+    a rank-1 reference row (kc=1, "mkn" -- the seed kernels' dataflow) so
+    the chunked-vs-rank-1 speedup is measured in-process, immune to
+    machine-load drift between benchmark runs."""
     from repro.kernels import ops
+
     rng = np.random.default_rng(1)
     a = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
     b = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
     x = jnp.asarray(rng.normal(size=(2048,)).astype(np.float32))
     w = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
-    zx = jnp.asarray((rng.normal(size=(64, 64)) + 1j * rng.normal(size=(64, 64))).astype(np.complex64))
-    zy = jnp.asarray((rng.normal(size=(64, 64)) + 1j * rng.normal(size=(64, 64))).astype(np.complex64))
+    xi = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    wi = jnp.asarray(rng.normal(size=(5, 5)).astype(np.float32))
+    zx = jnp.asarray((rng.normal(size=(64, 64))
+                      + 1j * rng.normal(size=(64, 64))).astype(np.complex64))
+    zy = jnp.asarray((rng.normal(size=(64, 64))
+                      + 1j * rng.normal(size=(64, 64))).astype(np.complex64))
+    reps = 15
     return [
         {"name": "pallas_sq_matmul[interp]",
-         "us_per_call": _time(ops.sq_matmul, a, b), "derived": "128^3 f32"},
+         "us_per_call": _time(ops.sq_matmul, a, b, reps=reps),
+         "shape": "128x128x128", "mode": "f32"},
+        {"name": "pallas_sq_matmul_rank1[interp]",
+         "us_per_call": _time(
+             lambda a, b: ops.sq_matmul(a, b, kc=1, pm_layout="mkn"),
+             a, b, reps=reps),
+         "shape": "128x128x128", "mode": "f32/rank1-ref"},
         {"name": "pallas_cpm3_matmul[interp]",
-         "us_per_call": _time(lambda x, y: ops.cpm3_matmul(x, y)[0], zx, zy),
-         "derived": "64^3 c64"},
+         "us_per_call": _time(lambda x, y: ops.cpm3_matmul(x, y)[0], zx, zy,
+                              reps=reps),
+         "shape": "64x64x64", "mode": "c64"},
+        {"name": "pallas_cpm4_matmul[interp]",
+         "us_per_call": _time(lambda x, y: ops.cpm4_matmul(x, y)[0], zx, zy,
+                              reps=reps),
+         "shape": "64x64x64", "mode": "c64"},
         {"name": "pallas_sq_conv[interp]",
-         "us_per_call": _time(ops.sq_conv, x, w), "derived": "L=2048 taps=16"},
+         "us_per_call": _time(ops.sq_conv, x, w, reps=reps),
+         "shape": "L=2048 taps=16", "mode": "f32"},
+        {"name": "pallas_sq_conv2d[interp]",
+         "us_per_call": _time(ops.sq_conv2d, xi, wi, reps=reps),
+         "shape": "64x64 k5x5", "mode": "f32/im2col"},
     ]

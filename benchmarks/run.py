@@ -1,14 +1,39 @@
 """Benchmark harness: one function per paper claim/table.
 
-Prints ``name,us_per_call,derived`` CSV rows (timing benches) and claim
+Prints ``name,us_per_call,shape,mode`` CSV rows (timing benches) and claim
 tables (op-count ratios, gate-cost model).  Roofline benches read the
 dry-run JSON if present.
+
+``--json`` additionally writes ``BENCH_kernels.json``: the machine-readable
+perf trajectory (current kernel timings alongside the frozen seed-commit
+baselines, with speedup ratios) that future PRs use to track kernel
+speedups against this baseline.
 """
 from __future__ import annotations
 
 import json
 import os
 import sys
+
+# Frozen interpret-mode timings of the rank-1 seed kernels: the
+# denominators for the speedup column in BENCH_kernels.json.  Do not
+# update them when kernels get faster; they are the baseline.
+#
+# Derivation: measured with kernel_timing._time's min-of-15 statistic on
+# seed-EQUIVALENT plans (kc=1 "mkn" matmuls, tb=1 conv -- the chunked
+# kernels degenerate to exactly the seed dataflow there, and
+# tests/test_kernel_tuning.py proves the equivalence), so numerator and
+# denominator use the same statistic.  The seed commit (ae5dab9) itself
+# timed mean-of-5: 1423.8 / 1096.2 / 115.2 us respectively -- consistent
+# with these, but not statistic-compatible with the current harness.
+SEED_BASELINE = [
+    {"name": "pallas_sq_matmul[interp]", "us_per_call": 1515.0,
+     "shape": "128x128x128", "mode": "f32"},
+    {"name": "pallas_cpm3_matmul[interp]", "us_per_call": 1011.8,
+     "shape": "64x64x64", "mode": "c64"},
+    {"name": "pallas_sq_conv[interp]", "us_per_call": 84.9,
+     "shape": "L=2048 taps=16", "mode": "f32"},
+]
 
 
 def _print_rows(title, rows):
@@ -23,8 +48,41 @@ def _print_rows(title, rows):
                        for k in keys))
 
 
-def main() -> None:
+def write_bench_json(timing_rows, path="BENCH_kernels.json"):
+    """Write the perf-trajectory JSON: current rows + seed baseline +
+    per-kernel speedup (seed_us / current_us) where names match."""
+    seed_by_name = {r["name"]: r for r in SEED_BASELINE}
+    by_name = {r["name"]: r for r in timing_rows}
+    rank1 = by_name.get("pallas_sq_matmul_rank1[interp]")
+    rows = []
+    for r in timing_rows:
+        row = dict(r)
+        seed = seed_by_name.get(r["name"])
+        if seed is not None:
+            row["seed_us_per_call"] = seed["us_per_call"]
+            row["speedup_vs_seed"] = seed["us_per_call"] / r["us_per_call"]
+        if r["name"] == "pallas_sq_matmul[interp]" and rank1 is not None:
+            # same-process rank-1 reference: load-drift-immune ratio
+            row["speedup_vs_rank1"] = rank1["us_per_call"] / r["us_per_call"]
+        rows.append(row)
+    payload = {"seed_baseline": SEED_BASELINE, "rows": rows}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"\nwrote {path}")
+    return payload
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    emit_json = "--json" in argv
+
     from benchmarks import gatecost, kernel_timing, ratios
+
+    # Timing rows are measured FIRST, while the process is cold: the claim
+    # tables below burn ~a minute of sustained compute, and on quota-
+    # throttled runners (cgroup cpu-shares) that depresses any timing
+    # measured afterwards by 1.5-2x.  Printed in their usual spot below.
+    timing_rows = kernel_timing.matmul_modes() + kernel_timing.pallas_kernels()
 
     # --- Paper claim 1: real matmul, eq (6): ratio -> 1 ---
     rows = ratios.real_matmul_ratio()
@@ -53,10 +111,14 @@ def main() -> None:
     _print_rows("approximate (bf16) squarers: float matmul error",
                 approx.approx_float_error())
 
-    # --- timing microbenches (CSV contract: name,us_per_call,derived) ---
-    print("\n# timing (name,us_per_call,derived)")
-    for row in kernel_timing.matmul_modes() + kernel_timing.pallas_kernels():
-        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    # --- timing microbenches (CSV contract: name,us_per_call,shape,mode) ---
+    print("\n# timing (name,us_per_call,shape,mode)")
+    for row in timing_rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['shape']},"
+              f"{row['mode']}")
+
+    if emit_json:
+        write_bench_json(timing_rows)
 
     # --- roofline summary from the dry-run, if present ---
     for path in ("dryrun_single_pod.json", "dryrun_multi_pod.json"):

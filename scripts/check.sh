@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# Tier-1 gate + smoke bench.  Usage: scripts/check.sh
+#   CHECK_TIMEOUT   seconds allotted to the pytest run (default 1200)
+#   SKIP_BENCH=1    skip the benchmark smoke pass
+set -euo pipefail
+cd "$(dirname "$0")/.."
+# src for the package, repo root for the benchmarks/ harness package
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+timeout "${CHECK_TIMEOUT:-1200}" python -m pytest -x -q
+
+if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
+  echo "== smoke bench (writes BENCH_kernels.json) =="
+  python benchmarks/run.py --json
+fi
+
+echo "check.sh: OK"

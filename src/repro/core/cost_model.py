@@ -27,7 +27,9 @@ import math
 
 __all__ = ["ArithCost", "mac_cost", "pm_mac_cost", "complex_mac_cost",
            "cpm4_cost", "cpm3_cost", "systolic_array_cost",
-           "tensor_core_cost", "savings_table"]
+           "tensor_core_cost", "savings_table",
+           "TileCost", "pm_tile_vmem_bytes", "pm_tile_vpu_ops",
+           "pm_grid_cost"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +130,82 @@ def tensor_core_cost(m: int, n_dim: int, k: int, n: int, square: bool,
     return ArithCost("sq_tensor_core" if square else "mac_tensor_core", area,
                      squarers=(k * m * n_dim if square else 0),
                      multipliers=(0 if square else k * m * n_dim))
+
+
+# --------------------------------------------------------------------------
+# Kernel-tile cost terms (TPU mapping of the PM datapaths).
+#
+# The gate-level model above prices the paper's silicon; the terms below
+# price our Pallas *emulation* of it: a (bm, bn) output tile walked along K
+# in bk-wide grid steps, each step processing the slab in kc-wide chunks of
+# rank-2 broadcast squaring.  kernels/tuning.py consumes these to rank
+# candidate (bm, bn, bk, kc) plans -- the same area-vs-throughput accounting
+# style as the FA-equivalent model, but in VMEM bytes and VPU lane-ops.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TileCost:
+    """Cost of one (bm, bn, bk, kc) kernel plan over a full (m, n, k) call."""
+    vmem_bytes: int      # peak VMEM residency of one grid step
+    vpu_ops: float       # total VPU lane-ops across the whole grid
+    grid_steps: int      # total grid invocations (pipeline overhead proxy)
+    chunk_steps: int     # total inner-loop chunk iterations (issue overhead)
+
+    @property
+    def weighted(self) -> float:
+        """Scalar ranking: lane-ops plus fixed per-step issue overheads.
+
+        The constants are deliberately coarse -- they only need to order
+        plans, not predict wall time.  Each grid step costs ~one tile of
+        pipeline work; each chunk iteration costs a loop-issue bubble.
+        """
+        return self.vpu_ops + 4096.0 * self.grid_steps + 256.0 * self.chunk_steps
+
+
+def pm_tile_vmem_bytes(bm: int, bn: int, bk: int, kc: int, itemsize: int = 4,
+                       n_row_ops: int = 1, n_col_ops: int = 1,
+                       n_acc: int = 1) -> int:
+    """Peak VMEM bytes of one grid step of the chunked PM kernel.
+
+    Counts the streamed operand slabs (``n_row_ops`` of (bm, bk) and
+    ``n_col_ops`` of (bk, bn)), the scratch accumulator planes
+    (``n_acc`` of (bm, bn)), the live rank-3 PM intermediate
+    (bm, kc, bn), and the (bm, 1)/(1, bn) correction vectors.
+    Double-buffering of the streamed slabs is included (x2).
+    """
+    slabs = 2 * (n_row_ops * bm * bk + n_col_ops * bk * bn)
+    accs = n_acc * bm * bn * 2                 # scratch + out block
+    interm = bm * kc * bn
+    corr = 2 * (bm + bn)
+    return (slabs + accs + interm + corr) * itemsize
+
+
+def pm_tile_vpu_ops(m: int, n: int, k: int, kc: int,
+                    ops_per_pm: int = 3) -> float:
+    """Total VPU lane-ops for the PM contraction of an (m, n, k) call.
+
+    Every (i, j, kk) PM term costs ``ops_per_pm`` lane-ops (operand add,
+    square, accumulate -- the Fig.1b PE datapath); the kc-chunked reduction
+    adds one extra (bm, bn)-plane add per chunk to fold the partial sums,
+    i.e. ``1/kc`` extra ops per PM term.
+    """
+    return float(m) * n * k * (ops_per_pm + 1.0 / max(1, kc))
+
+
+def pm_grid_cost(m: int, n: int, k: int, bm: int, bn: int, bk: int, kc: int,
+                 itemsize: int = 4, n_row_ops: int = 1, n_col_ops: int = 1,
+                 n_acc: int = 1, ops_per_pm: int = 3) -> TileCost:
+    """Full-call cost of a (bm, bn, bk, kc) plan (padded-shape accounting)."""
+    gm = -(-m // bm)
+    gn = -(-n // bn)
+    gk = -(-k // bk)
+    grid = gm * gn * gk
+    chunks = grid * (-(-bk // kc))
+    pm = pm_tile_vpu_ops(gm * bm, gn * bn, gk * bk, kc, ops_per_pm)
+    vmem = pm_tile_vmem_bytes(bm, bn, bk, kc, itemsize, n_row_ops,
+                              n_col_ops, n_acc)
+    return TileCost(vmem_bytes=vmem, vpu_ops=pm, grid_steps=grid,
+                    chunk_steps=chunks)
 
 
 def savings_table(bitwidths=(8, 16, 32), depth: int = 1024):

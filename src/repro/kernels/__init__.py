@@ -1,3 +1,15 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU emulation kernels for the paper's square-based datapaths.
+
+Layout:
+- ``sq_matmul`` / ``cpm3_matmul`` / ``cpm4_matmul`` / ``sq_conv``: raw
+  kernels (chunked block-PM accumulation, VMEM scratch accumulators);
+- ``ops``: jit'd public wrappers (widening, padding, corrections, planner);
+- ``tuning``: the (bm, bn, bk, kc) tile planner + autotune cache;
+- ``ref``: pure-jnp oracles for the test sweeps.
+"""
+from repro.kernels.ops import (sq_matmul, cpm3_matmul, cpm4_matmul, sq_conv,
+                               sq_conv2d, default_interpret)
+from repro.kernels.tuning import TilePlan, plan_matmul, plan_conv
+
+__all__ = ["sq_matmul", "cpm3_matmul", "cpm4_matmul", "sq_conv", "sq_conv2d",
+           "default_interpret", "TilePlan", "plan_matmul", "plan_conv"]

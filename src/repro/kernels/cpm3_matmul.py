@@ -2,16 +2,26 @@
 
 Implements the CPM3 accumulator array (paper Fig.12b) as a K-blocked Pallas
 grid.  Four real input planes (a, b = Re/Im of X; c, s = Re/Im of Y) stream
-through; two output planes (re, im) stay VMEM-resident across the K axis.
+through; two output planes (re, im) accumulate in dedicated VMEM scratch
+buffers for the whole K walk (out refs are written once, at the final K
+step).  The grid is ``dimension_semantics=("parallel", "parallel",
+"arbitrary")`` -- only K is sequential.
 
 Per (h, i, k) the three squares are:
     shared = (c + a + b)^2            -- computed ONCE, used by both planes
     re    += shared - (b + c + s)^2   (paper eq 32)
     im    += shared + (a + s - c)^2   (paper eq 34)
 
-Accumulators are initialized with the corrections (paper §9.1):
-    re0 = Sab_h + Scs_k       im0 = Sba_h + Ssc_k
-and the final K step halves both planes (the x2 output scale).
+The contraction is chunked exactly like kernels.sq_matmul: each grid step
+processes its K slab in ``kc``-wide rank-2 broadcast chunks (PM blocks of
+shape (bm, kc, bn) for the "mkn" layout or (bm, bn, kc) for the
+minor-axis-reduce "mnk" layout -- see sq_matmul.py for the trade-off).
+
+Accumulators are initialized with the row corrections (paper §9.1):
+    re0 = Sab_h       im0 = Sba_h
+and the final K step halves both planes (the x2 output scale); column
+corrections (Scs_k / Ssc_k) are added by the wrapper after the kernel
+(algebraically identical -- Fig.2's staggered Sb_j injection).
 """
 from __future__ import annotations
 
@@ -20,73 +30,72 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.pm_blocks import pm_chunked_reduce
 
 __all__ = ["cpm3_matmul_kernel", "cpm3_matmul_pallas"]
 
 
+def _cpm3_body(rs, cs, axis, carry):
+    """One chunk's three squares (paper eqs 32/34) on pre-broadcast slabs."""
+    re, im = carry
+    a_s, b_s = rs
+    c_s, s_s = cs
+    t = c_s + a_s + b_s
+    shared = t * t                      # the square shared by Re and Im
+    u = b_s + c_s + s_s
+    v = a_s + s_s - c_s
+    re = re + jnp.sum(shared - u * u, axis)
+    im = im + jnp.sum(shared + v * v, axis)
+    return re, im
+
+
 def cpm3_matmul_kernel(a_ref, b_ref, c_ref, s_ref, sre_ref, sim_ref,
-                       re_ref, im_ref, *, nk: int):
+                       re_ref, im_ref, re_acc, im_acc, *, nk: int, kc: int,
+                       pm_layout: str):
     k_step = pl.program_id(2)
 
     @pl.when(k_step == 0)
     def _init():
-        re_ref[...] = sre_ref[:, 0][:, None] + jnp.zeros_like(re_ref)
-        im_ref[...] = sim_ref[:, 0][:, None] + jnp.zeros_like(im_ref)
+        re_acc[...] = sre_ref[:, 0][:, None] + jnp.zeros_like(re_acc)
+        im_acc[...] = sim_ref[:, 0][:, None] + jnp.zeros_like(im_acc)
 
-    a = a_ref[...]            # (bm, bk)
-    b = b_ref[...]
-    c = c_ref[...]            # (bk, bn)
-    s = s_ref[...]
-    bk = a.shape[1]
-
-    def body(kk, carry):
-        re, im = carry
-        ak = a[:, kk][:, None]
-        bk_ = b[:, kk][:, None]
-        ck = c[kk, :][None, :]
-        sk = s[kk, :][None, :]
-        t = ck + ak + bk_
-        shared = t * t                      # the square shared by Re and Im
-        u = bk_ + ck + sk
-        v = ak + sk - ck
-        return re + (shared - u * u), im + (shared + v * v)
-
-    re, im = jax.lax.fori_loop(0, bk, body, (re_ref[...], im_ref[...]))
-    re_ref[...] = re
-    im_ref[...] = im
+    re, im = pm_chunked_reduce(
+        (re_acc[...], im_acc[...]),
+        (a_ref[...], b_ref[...]), (c_ref[...], s_ref[...]),
+        kc=kc, pm_layout=pm_layout, body=_cpm3_body)
+    re_acc[...] = re
+    im_acc[...] = im
 
     @pl.when(k_step == nk - 1)
     def _finalize():
-        re_ref[...] = re_ref[...] * 0.5
-        im_ref[...] = im_ref[...] * 0.5
+        re_ref[...] = re_acc[...] * 0.5
+        im_ref[...] = im_acc[...] * 0.5
 
 
 def cpm3_matmul_pallas(a, b, c, s, sre, sim, scs, ssc, *, bm: int = 256,
-                       bn: int = 256, bk: int = 128, interpret: bool = False):
-    """Raw pallas_call wrapper; column corrections (scs, ssc) are folded into
-    the accumulator at init via broadcast rows.
+                       bn: int = 256, bk: int = 128, kc: int | None = None,
+                       pm_layout: str = "mkn", interpret: bool = False):
+    """Raw pallas_call wrapper.
 
     sre: (m, 1) row corrections Sab_h; sim: (m, 1) Sba_h;
-    scs: (1, n) Scs_k; ssc: (1, n) Ssc_k.
-    The column terms enter through the init of the first K step: we pre-add
-    them into broadcast blocks by passing (sre + 0*...) -- to keep the kernel
-    arity small we fold scs/ssc into sre/sim OUTSIDE via rank-1 structure:
-    init = sre_h + scs_k is not rank-1-foldable into an (m,1) vector, so the
-    wrapper passes scs/ssc as extra (1, n) inputs appended to sre/sim blocks.
+    scs: (1, n) Scs_k; ssc: (1, n) Ssc_k.  Row terms are injected at
+    accumulator init (the paper's Fig.1b register preload); the (1, n)
+    column terms are added after the pallas_call, halved to match the
+    already-halved planes (linearity -- the systolic array of Fig.2 does
+    the same: "as soon as the first result starts to emerge ... we start
+    to shift in Sb_j which are added and finalise the results").
     """
     m, k = a.shape
     _, n = c.shape
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    kc = bk if kc is None else kc
+    assert bk % kc == 0, (bk, kc)
     nk = k // bk
 
-    # Fold the (1, n) column corrections in by augmenting the kernel inputs:
-    # simplest faithful route -- add them after the pallas_call (linearity),
-    # but the paper injects them at accumulator init; we honor that for the
-    # row terms and add column terms at the end (algebraically identical,
-    # and the systolic array of Fig.2 does exactly this: "as soon as the
-    # first result starts to emerge ... we start to shift in Sb_j which are
-    # added and finalise the results").
-    kernel = functools.partial(cpm3_matmul_kernel, nk=nk)
+    kernel = functools.partial(cpm3_matmul_kernel, nk=nk, kc=kc,
+                               pm_layout=pm_layout)
     re, im = pl.pallas_call(
         kernel,
         grid=(m // bm, n // bn, nk),
@@ -106,6 +115,12 @@ def cpm3_matmul_pallas(a, b, c, s, sre, sim, scs, ssc, *, bm: int = 256,
             jax.ShapeDtypeStruct((m, n), a.dtype),
             jax.ShapeDtypeStruct((m, n), a.dtype),
         ],
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), a.dtype),
+            pltpu.VMEM((bm, bn), a.dtype),
+        ],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, c, s, sre, sim)
     # Column corrections, halved to match the already-halved planes.

@@ -1,9 +1,18 @@
 """Jit'd public wrappers around the Pallas kernels.
 
 Handles: dtype widening (paper's bit-growth rules), padding to tile
-multiples, correction-term precomputation, tile-size selection, and the
+multiples, correction-term precomputation, tile planning (via
+kernels.tuning -- cost-model ranked, autotune-cache aware), and the
 interpret-mode fallback on CPU (kernels target TPU; interpret=True executes
 the kernel body in Python for bit-faithful validation).
+
+All four matmul-family wrappers share one prep pipeline
+(:func:`_widen` + :func:`_pad_operands`): widen operands to the
+accumulator dtype, compute corrections BEFORE padding (padded zeros
+contribute zero anyway), pad every operand to its tile multiple, run the
+kernel, slice the result back.  The PM-block layout ("mnk" on
+interpret/CPU, "mkn" on TPU -- see kernels.sq_matmul) is resolved here
+and baked into the plan.
 """
 from __future__ import annotations
 
@@ -13,12 +22,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import squares as sq
+from repro.kernels import tuning
 from repro.kernels.sq_matmul import sq_matmul_pallas
 from repro.kernels.cpm3_matmul import cpm3_matmul_pallas
 from repro.kernels.cpm4_matmul import cpm4_matmul_pallas
 from repro.kernels.sq_conv import sq_conv_pallas
 
-__all__ = ["sq_matmul", "cpm3_matmul", "cpm4_matmul", "sq_conv",
+__all__ = ["sq_matmul", "cpm3_matmul", "cpm4_matmul", "sq_conv", "sq_conv2d",
            "default_interpret"]
 
 
@@ -36,134 +46,222 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
-def _pick_tiles(m, n, k, bm, bn, bk):
-    """Shrink default tiles for small operands (keep 128-lane alignment when
-    the operand allows it; interpret mode tolerates smaller)."""
-    bm = min(bm, max(8, m))
-    bn = min(bn, max(128 if n >= 128 else n, 1))
-    bk = min(bk, max(128 if k >= 128 else k, 1))
-    return bm, bn, bk
+def _widen(*ts):
+    """Widen operands to the shared accumulator dtype (bit-growth rules)."""
+    acc = sq.accum_dtype(ts[0].dtype)
+    return tuple(t.astype(acc) for t in ts)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def _sq_matmul_impl(a, b, bm, bn, bk, interpret):
-    acc = sq.accum_dtype(a.dtype)
-    aw = a.astype(acc)
-    bw = b.astype(acc)
+def _pad_operands(plan, row_ops, col_ops, row_corrs, col_corrs):
+    """Pad (m, k) row operands, (k, n) col operands and their (m, 1)/(1, n)
+    correction vectors to the plan's tile multiples."""
+    row_ops = [_pad_to(_pad_to(t, plan.bm, 0), plan.bk, 1) for t in row_ops]
+    col_ops = [_pad_to(_pad_to(t, plan.bk, 0), plan.bn, 1) for t in col_ops]
+    row_corrs = [_pad_to(t, plan.bm, 0) for t in row_corrs]
+    col_corrs = [_pad_to(t, plan.bn, 1) for t in col_corrs]
+    return row_ops, col_ops, row_corrs, col_corrs
+
+
+def _resolve_plan(m, n, k, dtype, *, bm, bn, bk, kc, pm_layout, interpret,
+                  kind, n_row_ops=1, n_col_ops=1, n_acc=1):
+    """Backend-aware plan resolution (see module docstring)."""
+    layout = pm_layout or ("mnk" if interpret else "mkn")
+    return tuning.plan_matmul(
+        m, n, k, sq.accum_dtype(dtype), bm=bm, bn=bn, bk=bk, kc=kc,
+        pm_layout=layout, kind=kind, n_row_ops=n_row_ops,
+        n_col_ops=n_col_ops, n_acc=n_acc)
+
+
+# --------------------------------------------------------------------------
+# Real square-based matmul
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def _sq_matmul_impl(a, b, plan, interpret):
+    aw, bw = _widen(a, b)
     m, k = aw.shape
     n = bw.shape[1]
-    bm, bn, bk = _pick_tiles(m, n, k, bm, bn, bk)
     # corrections BEFORE padding (padded zeros contribute zero anyway)
     sa = sq.row_correction(aw, axis=-1)[:, None]            # (m, 1)
     sb = sq.col_correction(bw, axis=0)[None, :]             # (1, n)
-    aw = _pad_to(_pad_to(aw, bm, 0), bk, 1)
-    bw = _pad_to(_pad_to(bw, bk, 0), bn, 1)
-    sa = _pad_to(sa, bm, 0)
-    sb = _pad_to(sb, bn, 1)
-    out = sq_matmul_pallas(aw, bw, sa, sb, bm=bm, bn=bn, bk=bk,
+    (aw,), (bw,), (sa,), (sb,) = _pad_operands(plan, [aw], [bw], [sa], [sb])
+    out = sq_matmul_pallas(aw, bw, sa, sb, bm=plan.bm, bn=plan.bn,
+                           bk=plan.bk, kc=plan.kc, pm_layout=plan.pm_layout,
                            interpret=interpret)
     return out[:m, :n]
 
 
-def sq_matmul(a, b, *, bm: int = 256, bn: int = 256, bk: int = 128,
-              interpret: bool | None = None):
+def sq_matmul(a, b, *, bm: int | None = None, bn: int | None = None,
+              bk: int | None = None, kc: int | None = None,
+              pm_layout: str | None = None, interpret: bool | None = None):
     """Square-based matmul via the Pallas systolic-emulation kernel.
 
     a: (m, k), b: (k, n); any float or int8/int16 dtype; returns the
-    accumulator dtype (f32 for floats, int32 for small ints).
+    accumulator dtype (f32 for floats, int32 for small ints).  Tile sizes
+    default to the kernels.tuning planner; explicit values are honored
+    (clamped to the operand and alignment granules).
     """
-    if a.ndim != 2 or b.ndim != 2:
+    if b.ndim != 2:
+        raise ValueError(f"rhs must be 2D (K, N), got {b.shape}")
+    if a.ndim != 2:
         # collapse leading batch dims to rows (dense-layer convention)
         lead = a.shape[:-1]
         out = sq_matmul(a.reshape(-1, a.shape[-1]), b, bm=bm, bn=bn, bk=bk,
-                        interpret=interpret)
+                        kc=kc, pm_layout=pm_layout, interpret=interpret)
         return out.reshape(*lead, b.shape[-1])
     interpret = default_interpret() if interpret is None else interpret
-    return _sq_matmul_impl(a, b, bm, bn, bk, interpret)
+    m, k = a.shape
+    n = b.shape[1]
+    plan = _resolve_plan(m, n, k, a.dtype, bm=bm, bn=bn, bk=bk, kc=kc,
+                         pm_layout=pm_layout, interpret=interpret,
+                         kind="sq_matmul")
+    return _sq_matmul_impl(a, b, plan, interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def _cpm3_impl(a, b, c, s, bm, bn, bk, interpret):
-    acc = sq.accum_dtype(a.dtype)
-    a, b, c, s = (t.astype(acc) for t in (a, b, c, s))
+# --------------------------------------------------------------------------
+# Complex square-based matmuls (CPM3 / CPM4)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def _cpm3_impl(a, b, c, s, plan, interpret):
+    a, b, c, s = _widen(a, b, c, s)
     m, k = a.shape
     n = c.shape[1]
-    bm, bn, bk = _pick_tiles(m, n, k, bm, bn, bk)
     # corrections, paper eqs 33 / 35
     sre = jnp.sum(-sq.square(a + b) + sq.square(b), axis=-1)[:, None]
     sim = jnp.sum(-sq.square(a + b) - sq.square(a), axis=-1)[:, None]
     scs = jnp.sum(-sq.square(c) + sq.square(c + s), axis=0)[None, :]
     ssc = jnp.sum(-sq.square(c) - sq.square(s - c), axis=0)[None, :]
-    a = _pad_to(_pad_to(a, bm, 0), bk, 1)
-    b = _pad_to(_pad_to(b, bm, 0), bk, 1)
-    c = _pad_to(_pad_to(c, bk, 0), bn, 1)
-    s = _pad_to(_pad_to(s, bk, 0), bn, 1)
-    sre = _pad_to(sre, bm, 0)
-    sim = _pad_to(sim, bm, 0)
-    scs_p = _pad_to(scs, bn, 1)
-    ssc_p = _pad_to(ssc, bn, 1)
-    re, im = cpm3_matmul_pallas(a, b, c, s, sre, sim, scs_p, ssc_p,
-                                bm=bm, bn=bn, bk=bk, interpret=interpret)
+    (a, b), (c, s), (sre, sim), (scs, ssc) = _pad_operands(
+        plan, [a, b], [c, s], [sre, sim], [scs, ssc])
+    re, im = cpm3_matmul_pallas(a, b, c, s, sre, sim, scs, ssc,
+                                bm=plan.bm, bn=plan.bn, bk=plan.bk,
+                                kc=plan.kc, pm_layout=plan.pm_layout,
+                                interpret=interpret)
     return re[:m, :n], im[:m, :n]
 
 
-def cpm3_matmul(x, y, *, bm: int = 256, bn: int = 256, bk: int = 128,
-                interpret: bool | None = None):
+def cpm3_matmul(x, y, *, bm: int | None = None, bn: int | None = None,
+                bk: int | None = None, kc: int | None = None,
+                pm_layout: str | None = None, interpret: bool | None = None):
     """Complex matmul with 3 squares per multiply via the Pallas kernel.
 
     x: (m, k) complex, y: (k, n) complex; returns (re, im) planes.
     """
     interpret = default_interpret() if interpret is None else interpret
+    m, k = x.shape
+    n = y.shape[1]
+    plan = _resolve_plan(m, n, k, jnp.real(x).dtype, bm=bm, bn=bn, bk=bk,
+                         kc=kc, pm_layout=pm_layout, interpret=interpret,
+                         kind="cpm3_matmul", n_row_ops=2, n_col_ops=2,
+                         n_acc=2)
     return _cpm3_impl(jnp.real(x), jnp.imag(x), jnp.real(y), jnp.imag(y),
-                      bm, bn, bk, interpret)
+                      plan, interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
-def _cpm4_impl(a, b, c, s, bm, bn, bk, interpret):
-    acc = sq.accum_dtype(a.dtype)
-    a, b, c, s = (t.astype(acc) for t in (a, b, c, s))
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def _cpm4_impl(a, b, c, s, plan, interpret):
+    a, b, c, s = _widen(a, b, c, s)
     m, k = a.shape
     n = c.shape[1]
-    bm, bn, bk = _pick_tiles(m, n, k, bm, bn, bk)
     # shared corrections, paper eq 18
     sx = -jnp.sum(sq.square(a) + sq.square(b), axis=-1)[:, None]
     sy = -jnp.sum(sq.square(c) + sq.square(s), axis=0)[None, :]
-    a = _pad_to(_pad_to(a, bm, 0), bk, 1)
-    b = _pad_to(_pad_to(b, bm, 0), bk, 1)
-    c = _pad_to(_pad_to(c, bk, 0), bn, 1)
-    s = _pad_to(_pad_to(s, bk, 0), bn, 1)
-    sx = _pad_to(sx, bm, 0)
-    sy_p = _pad_to(sy, bn, 1)
-    re, im = cpm4_matmul_pallas(a, b, c, s, sx, sy_p, bm=bm, bn=bn, bk=bk,
-                                interpret=interpret)
+    (a, b), (c, s), (sx,), (sy,) = _pad_operands(
+        plan, [a, b], [c, s], [sx], [sy])
+    re, im = cpm4_matmul_pallas(a, b, c, s, sx, sy, bm=plan.bm, bn=plan.bn,
+                                bk=plan.bk, kc=plan.kc,
+                                pm_layout=plan.pm_layout, interpret=interpret)
     return re[:m, :n], im[:m, :n]
 
 
-def cpm4_matmul(x, y, *, bm: int = 256, bn: int = 256, bk: int = 128,
-                interpret: bool | None = None):
+def cpm4_matmul(x, y, *, bm: int | None = None, bn: int | None = None,
+                bk: int | None = None, kc: int | None = None,
+                pm_layout: str | None = None, interpret: bool | None = None):
     """Complex matmul with 4 squares per multiply via the Pallas kernel."""
     interpret = default_interpret() if interpret is None else interpret
+    m, k = x.shape
+    n = y.shape[1]
+    plan = _resolve_plan(m, n, k, jnp.real(x).dtype, bm=bm, bn=bn, bk=bk,
+                         kc=kc, pm_layout=pm_layout, interpret=interpret,
+                         kind="cpm4_matmul", n_row_ops=2, n_col_ops=2,
+                         n_acc=2)
     return _cpm4_impl(jnp.real(x), jnp.imag(x), jnp.real(y), jnp.imag(y),
-                      bm, bn, bk, interpret)
+                      plan, interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("bo", "interpret"))
-def _sq_conv_impl(x, w, bo, interpret):
+# --------------------------------------------------------------------------
+# Square-based convolutions
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("bo", "tb", "interpret"))
+def _sq_conv_impl(x, w, bo, tb, interpret):
     acc = sq.accum_dtype(x.dtype)
     xw = x.astype(acc)
     ww = w.astype(acc)
     L = xw.shape[0]
     n = ww.shape[0]
     k_out = L - n + 1
-    bo = min(bo, k_out) if k_out < bo else bo
-    pad = (-k_out) % bo
-    if pad:
-        xw = jnp.pad(xw, (0, pad))       # zero samples -> discarded outputs
-    out = sq_conv_pallas(xw, ww, bo=bo, interpret=interpret)
+    # Zero-pad taps to the tap-block multiple (zero taps are exact no-ops)
+    # and samples so (a) every tap-block window stays in range and (b) the
+    # padded output length is a bo multiple (extra outputs are discarded).
+    n_pad = (-n) % tb
+    out_pad = (-k_out) % bo
+    if n_pad:
+        ww = jnp.pad(ww, (0, n_pad))
+    need = (k_out + out_pad) + (n + n_pad) - 1
+    if need > L:
+        xw = jnp.pad(xw, (0, need - L))
+    out = sq_conv_pallas(xw, ww, bo=bo, tb=tb, interpret=interpret)
     return out[:k_out]
 
 
-def sq_conv(x, w, *, bo: int = 256, interpret: bool | None = None):
+def sq_conv(x, w, *, bo: int | None = None, tb: int | None = None,
+            interpret: bool | None = None):
     """Square-based valid 1D correlation via the Pallas kernel."""
     interpret = default_interpret() if interpret is None else interpret
-    return _sq_conv_impl(x, w, bo, interpret)
+    L = x.shape[0]
+    n = w.shape[0]
+    pbo, ptb = tuning.plan_conv(L - n + 1, n, x.dtype, bo=bo, tb=tb,
+                                interpret=interpret)
+    return _sq_conv_impl(x, w, pbo, ptb, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def _sq_conv2d_impl(x, w, plan, interpret):
+    kh, kw = w.shape[-2:]
+    H, W = x.shape
+    oh, ow = H - kh + 1, W - kw + 1
+    ih = jnp.arange(oh)[:, None] + jnp.arange(kh)[None, :]
+    iw = jnp.arange(ow)[:, None] + jnp.arange(kw)[None, :]
+    patches = x[ih[:, None, :, None], iw[None, :, None, :]]   # (oh,ow,kh,kw)
+    pmat = patches.reshape(oh * ow, kh * kw)
+    wmat = w.reshape(-1, kh * kw).T                           # (kh*kw, co)
+    out = _sq_matmul_impl(pmat, wmat, plan, interpret)        # (oh*ow, co)
+    if w.ndim == 2:
+        return out[:, 0].reshape(oh, ow)
+    return jnp.moveaxis(out.reshape(oh, ow, -1), -1, 0)       # (co, oh, ow)
+
+
+def sq_conv2d(x, w, *, interpret: bool | None = None):
+    """Square-based valid 2D correlation via im2col + the matmul kernel.
+
+    The paper's §5.1 2D windows are exactly a matrix view of the input
+    (each output pixel's receptive field flattened to a row), so the 2D
+    conv routes through ``sq_matmul``: patches (oh*ow, kh*kw) against the
+    flattened taps.  x: (H, W); w: (kh, kw) for one output plane (oh, ow),
+    or (co, kh, kw) for a multi-filter bank returning (co, oh, ow) --
+    multiple filters widen the matmul's N axis, which is what makes the
+    im2col route lane-efficient on TPU.
+    """
+    interpret = default_interpret() if interpret is None else interpret
+    H, W = x.shape
+    kh, kw = w.shape[-2:]
+    co = 1 if w.ndim == 2 else w.shape[0]
+    oh, ow = H - kh + 1, W - kw + 1
+    if oh <= 0 or ow <= 0:
+        raise ValueError(f"kernel {w.shape} larger than input {x.shape}")
+    plan = _resolve_plan(oh * ow, co, kh * kw, x.dtype, bm=None, bn=None,
+                         bk=None, kc=None, pm_layout=None,
+                         interpret=interpret, kind="sq_matmul")
+    return _sq_conv2d_impl(x, w, plan, interpret)

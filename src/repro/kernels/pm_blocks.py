@@ -1,0 +1,75 @@
+"""Shared chunked block-PM machinery for the Pallas square kernels.
+
+All three matmul-family kernels walk a K slab in ``kc``-wide chunks of
+rank-2 broadcast squaring; they differ only in the squares computed per
+chunk (one PM term for the real kernel, three/four for CPM3/CPM4).  This
+module owns the part they share -- slab slicing, broadcast shaping, the
+layout dispatch, and the homogeneous ``fori_loop`` -- so the layout logic
+exists exactly once.
+
+Two PM-block layouts (see kernels.sq_matmul for the performance story):
+
+``"mkn"``
+    Slabs broadcast to (bm, kc, 1) x (1, kc, bn); ``body`` reduces axis 1.
+    bn stays on the 128-lane minor axis -- the TPU-native schedule.
+``"mnk"``
+    Column operands are transposed once per grid step; slabs broadcast to
+    (bm, 1, kc) x (1, bn, kc); ``body`` reduces the minor axis, which
+    fuses into a dot-product-shaped loop nest -- the CPU/interpret
+    schedule.
+
+The accumulator ``carry`` (an array or tuple of arrays) is threaded
+through one homogeneous ``fori_loop`` with no peeled first chunk -- XLA
+compiles the single loop body markedly better than a peeled-plus-loop mix.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["PM_LAYOUTS", "pm_chunked_reduce"]
+
+PM_LAYOUTS = ("mkn", "mnk")
+
+
+def pm_chunked_reduce(carry, row_ops, col_ops, *, kc: int, pm_layout: str,
+                      body):
+    """Run ``body`` over every kc-wide chunk of the K slab.
+
+    row_ops: tuple of (bm, bk) values; col_ops: tuple of (bk, bn) values
+    (already loaded from VMEM refs, pre-widened to the accumulator dtype).
+    ``body(row_slabs, col_slabs, axis, carry) -> carry`` receives the
+    chunk's slabs pre-broadcast to rank 3 (layouts above) and the
+    reduction axis; it computes the squares and accumulates.
+    """
+    bk = row_ops[0].shape[1]
+    nc = bk // kc
+
+    if pm_layout == "mkn":
+        def slabs(c):
+            rs = tuple(jax.lax.dynamic_slice_in_dim(r, c * kc, kc, 1)
+                       [:, :, None] for r in row_ops)       # (bm, kc, 1)
+            cs = tuple(jax.lax.dynamic_slice_in_dim(co, c * kc, kc, 0)
+                       [None, :, :] for co in col_ops)      # (1, kc, bn)
+            return rs, cs
+        axis = 1
+    elif pm_layout == "mnk":
+        col_t = tuple(co.T for co in col_ops)               # (bn, bk)
+
+        def slabs(c):
+            rs = tuple(jax.lax.dynamic_slice_in_dim(r, c * kc, kc, 1)
+                       [:, None, :] for r in row_ops)       # (bm, 1, kc)
+            cs = tuple(jax.lax.dynamic_slice_in_dim(ct, c * kc, kc, 1)
+                       [None, :, :] for ct in col_t)        # (1, bn, kc)
+            return rs, cs
+        axis = -1
+    else:
+        raise ValueError(f"unknown pm_layout {pm_layout!r}; "
+                         f"expected one of {PM_LAYOUTS}")
+
+    def chunk(c, carry):
+        rs, cs = slabs(c)
+        return body(rs, cs, axis, carry)
+
+    if nc == 1:
+        return chunk(0, carry)
+    return jax.lax.fori_loop(0, nc, chunk, carry)

@@ -4,12 +4,22 @@ The paper's Fig.8 engine broadcasts each incoming sample to all N taps,
 forms ``(w_i + x)``, squares, and accumulates into per-output registers; the
 shared ``x^2`` is computed once and subtracted at every tap.
 
-TPU adaptation: outputs are tiled over a 1D grid (``bo`` outputs per step);
-for each tap ``t`` the kernel loads the shifted input window with a dynamic
-slice (the VMEM-resident input block covers ``bo + n_taps - 1`` samples) and
-accumulates ``(x_shift + w_t)^2``.  The data-side correction (the sliding sum
-of squares, shared-x^2 term) and the kernel-side ``Sw`` are accumulated in
-the same pass, so the kernel is self-contained.
+TPU adaptation: outputs are tiled over a 1D grid (``bo`` outputs per step,
+``dimension_semantics=("parallel",)`` -- output tiles are independent).
+
+The tap walk is **block-vectorized**: instead of one dynamic-slice load and
+one rank-1 PM update per tap, the kernel processes ``tb`` taps per chunk.
+One chunk loads a single ``bo + tb - 1``-sample window, forms the ``tb``
+shifted views with static slices (a register-level rotation on silicon --
+no extra VMEM traffic), and accumulates the whole (tb, bo) PM block
+
+    pm[t, j] = (x[j + t] + w[t])^2 - x[j + t]^2
+
+in one rank-2 pass.  ``tb`` is chosen by kernels.tuning.plan_conv; the
+wrapper zero-pads the taps to a multiple of ``tb`` (zero taps contribute
+``(0 + x)^2 - x^2 = 0`` -- exact).  The data-side correction (the sliding
+sum of squares, shared-x^2 term) and the kernel-side ``Sw`` are accumulated
+in the same pass, so the kernel is self-contained.
 
 The input block uses an ELEMENT-indexed BlockSpec trick: we pass a padded
 input whose block size equals ``bo`` but read across the boundary via
@@ -25,38 +35,50 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["sq_conv_kernel", "sq_conv_pallas"]
 
 
-def sq_conv_kernel(x_ref, w_ref, out_ref, *, n_taps: int, bo: int):
+def sq_conv_kernel(x_ref, w_ref, out_ref, *, n_taps: int, bo: int, tb: int):
     i = pl.program_id(0)
     start = i * bo
     w = w_ref[...]                                   # (n_taps,)
     sw = -jnp.sum(w * w)                             # Sw (paper eq 11)
+    nt = n_taps // tb
+
+    def tap_block(c, acc):
+        t0 = c * tb
+        # One window load covers all tb shifted views of this chunk.
+        xwin = pl.load(x_ref, (pl.ds(start + t0, bo + tb - 1),))
+        wblk = jax.lax.dynamic_slice_in_dim(w, t0, tb)          # (tb,)
+        xs = jnp.stack([jax.lax.slice_in_dim(xwin, t, t + bo)
+                        for t in range(tb)])                    # (tb, bo)
+        pm = (xs + wblk[:, None]) * (xs + wblk[:, None])        # add + square
+        return acc + jnp.sum(pm - xs * xs, axis=0)   # shared x^2 subtracted
+
     acc = jnp.full((bo,), sw, dtype=out_ref.dtype)   # init with correction
-
-    def body(t, acc):
-        xs = pl.load(x_ref, (pl.ds(start + t, bo),))   # shifted window
-        wt = w[t]
-        pm = (xs + wt) * (xs + wt)                     # operand add + square
-        return acc + pm - xs * xs                      # shared x^2 subtracted
-
-    acc = jax.lax.fori_loop(0, n_taps, body, acc)
-    out_ref[...] = acc * 0.5                           # the final right shift
+    if nt == 1:
+        acc = tap_block(0, acc)
+    else:
+        acc = jax.lax.fori_loop(0, nt, tap_block, acc)
+    out_ref[...] = acc * 0.5                         # the final right shift
 
 
-def sq_conv_pallas(x, w, *, bo: int = 256, interpret: bool = False):
+def sq_conv_pallas(x, w, *, bo: int = 256, tb: int = 8,
+                   interpret: bool = False):
     """Valid square-based correlation ``y_k = sum_i w_i x_{i+k}``.
 
-    x: (L,) pre-widened samples; w: (n,) taps.  Output length L - n + 1,
-    padded by the ops wrapper to a multiple of ``bo``.
+    x: (L,) pre-widened samples; w: (n,) taps, n a multiple of ``tb``
+    (the ops wrapper zero-pads taps).  Output length L - n + 1, padded by
+    the ops wrapper to a multiple of ``bo``.
     """
     L = x.shape[0]
     n = w.shape[0]
     k_out = L - n + 1
     assert k_out % bo == 0, (k_out, bo)
-    kernel = functools.partial(sq_conv_kernel, n_taps=n, bo=bo)
+    assert n % tb == 0, (n, tb)
+    kernel = functools.partial(sq_conv_kernel, n_taps=n, bo=bo, tb=tb)
     return pl.pallas_call(
         kernel,
         grid=(k_out // bo,),
@@ -66,5 +88,7 @@ def sq_conv_pallas(x, w, *, bo: int = 256, interpret: bool = False):
         ],
         out_specs=pl.BlockSpec((bo,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((k_out,), x.dtype),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x, w)

@@ -6,22 +6,56 @@ TPU adaptation of the paper's weight-stationary square-based systolic array
 (M/bm, N/bn, K/bk) grid with the output tile resident in VMEM across the
 K axis (grid minor dimension), exactly like a weight-stationary pass:
 
-- accumulator tile initialized with the corrections ``Sa_i + Sb_j`` at the
+- a dedicated VMEM **scratch accumulator** (``scratch_shapes``) holds the
+  (bm, bn) tile for the whole K walk -- ``out_ref`` is written exactly once,
+  at the final K step, instead of being read-modify-written every grid step;
+- the accumulator is initialized with the corrections ``Sa_i + Sb_j`` at the
   first K step -- the paper's "initialise the register with Sa_i + Sb_j"
   (Fig.1b / Fig.5b);
 - every K step accumulates PM terms ``(a_ik + b_kj)^2`` (the PE array);
 - the final K step applies the paper's "simple right shift" (x0.5 / >>1).
 
-BlockSpec tiling: A (bm, bk), B (bk, bn), out (bm, bn) in VMEM; the inner
-``fori_loop`` walks the bk axis in rank-1 steps so the live PM intermediate
-is a single (bm, bn) plane (VMEM: 3 tiles + accumulator; with the default
-bm = bn = 256, bk = 128 and f32 accumulation that is ~1.2 MB -- well inside
-the ~16 MB v5e VMEM budget).  Minor axes are multiples of 128 (lane width).
+Dataflow (block-level PM accumulation)
+--------------------------------------
+The contraction is **chunked, not rank-1**: each (bm, bk) x (bk, bn) grid
+step processes its K slab in ``kc``-wide chunks of rank-2 broadcast
+squaring.  One chunk forms the rank-3 PM block
 
-The squares execute on the VPU; on the paper's silicon they are the half-area
-squarer circuits.  This kernel is the bit-faithful *emulation* used for
-verification (float and int8 paths); the production MXU-routed path is
-``core.matmul`` mode ``square_virtual``.
+    s[i, c, j] = a[i, c] + b[c, j]          # (bm, kc, bn) operand adders
+    acc[i, j] += sum_c s[i, c, j]^2         # squarers + block reduction
+
+so a (256, 256, 128) tile is a handful of block-wide VPU passes rather
+than 128 serialized rank-1 sweeps.  ``kc`` (which must divide ``bk``) is
+the knob trading the live intermediate's footprint (bm * kc * bn
+accumulator-dtype words) against loop-issue overhead; a ``kc == bk`` plan
+degenerates to a single unrolled chunk with no inner loop at all.
+
+Two PM-block layouts are compiled, selected by the static ``pm_layout``:
+
+``"mkn"``
+    The block is (bm, kc, bn), reduced over the middle axis.  ``bn`` stays
+    on the 128-lane minor axis, so Mosaic keeps native vreg layouts -- the
+    TPU-native schedule.
+``"mnk"``
+    ``b`` is transposed once per grid step and the block is (bm, bn, kc),
+    reduced over the *minor* axis.  Minor-axis reduction fuses into a
+    dot-product-shaped loop nest, which is what CPU interpret mode (and
+    the XLA CPU backend generally) executes fastest -- ~6x over the seed
+    rank-1 kernel at 128^3 f32.
+
+Both are the same arithmetic (one operand add + one square per PM term);
+the planner in :mod:`repro.kernels.tuning` picks ``(bm, bn, bk, kc)`` and
+the layout per call site (cost-model ranked, optionally autotuned).
+
+The grid is marked ``dimension_semantics=("parallel", "parallel",
+"arbitrary")``: M/N tiles carry no cross-step state (the scratch
+accumulator is only live along K), so Mosaic may pipeline and reorder
+them freely; only the K axis is sequential.
+
+The squares execute on the VPU; on the paper's silicon they are the
+half-area squarer circuits.  This kernel is the bit-faithful *emulation*
+used for verification (float and int8 paths); the production MXU-routed
+path is ``core.matmul`` mode ``square_virtual``.
 """
 from __future__ import annotations
 
@@ -30,53 +64,72 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["sq_matmul_kernel", "sq_matmul_pallas"]
+from repro.kernels.pm_blocks import PM_LAYOUTS, pm_chunked_reduce
+
+__all__ = ["sq_matmul_kernel", "sq_matmul_pallas", "pm_block_accum",
+           "PM_LAYOUTS"]
 
 
-def sq_matmul_kernel(a_ref, b_ref, sa_ref, sb_ref, out_ref, *, nk: int,
-                     is_int: bool):
-    """One (i, j, k) grid step of the square-based matmul."""
+def pm_block_accum(acc, a, b, *, kc: int, pm_layout: str):
+    """Chunked block PM accumulation: ``acc + sum_k (a[i,k] + b[k,j])^2``.
+
+    a: (bm, bk) and b: (bk, bn) *values* (already loaded from VMEM refs),
+    pre-widened to the accumulator dtype; acc: the carried (bm, bn)
+    accumulator plane.  The K slab is processed in ``kc``-wide chunks via
+    the shared machinery in kernels.pm_blocks.
+    """
+    def body(rs, cs, axis, acc):
+        s = rs[0] + cs[0]                    # PE operand adders
+        return acc + jnp.sum(s * s, axis)    # squarers + block reduction
+
+    return pm_chunked_reduce(acc, (a,), (b,), kc=kc, pm_layout=pm_layout,
+                             body=body)
+
+
+def sq_matmul_kernel(a_ref, b_ref, sa_ref, sb_ref, out_ref, acc_ref, *,
+                     nk: int, kc: int, pm_layout: str, is_int: bool):
+    """One (i, j, k) grid step of the chunked square-based matmul."""
     k_step = pl.program_id(2)
 
     @pl.when(k_step == 0)
     def _init():
         # Accumulator init = Sa_i + Sb_j (paper Fig.1b: "initialise its
         # register first with Sa_i + Sb_j").
-        out_ref[...] = sa_ref[:, 0][:, None] + sb_ref[0, :][None, :]
+        acc_ref[...] = sa_ref[:, 0][:, None] + sb_ref[0, :][None, :]
 
-    a = a_ref[...]                       # (bm, bk) already in accum dtype
-    b = b_ref[...]                       # (bk, bn)
-    bk = a.shape[1]
-
-    def body(kk, acc):
-        s = a[:, kk][:, None] + b[kk, :][None, :]   # PE operand adder
-        return acc + s * s                           # squarer + accumulate
-
-    out_ref[...] = jax.lax.fori_loop(0, bk, body, out_ref[...])
+    acc_ref[...] = pm_block_accum(acc_ref[...], a_ref[...], b_ref[...],
+                                  kc=kc, pm_layout=pm_layout)
 
     @pl.when(k_step == nk - 1)
     def _finalize():
         # The paper's final right shift: 2*c_ij -> c_ij.
+        acc = acc_ref[...]
         if is_int:
             out_ref[...] = jax.lax.shift_right_arithmetic(
-                out_ref[...], jnp.ones_like(out_ref[...]))
+                acc, jnp.ones_like(acc))
         else:
-            out_ref[...] = out_ref[...] * 0.5
+            out_ref[...] = acc * 0.5
 
 
 def sq_matmul_pallas(a, b, sa, sb, *, bm: int = 256, bn: int = 256,
-                     bk: int = 128, interpret: bool = False):
+                     bk: int = 128, kc: int | None = None,
+                     pm_layout: str = "mkn", interpret: bool = False):
     """Raw pallas_call wrapper.  Operands must be pre-widened to the
-    accumulator dtype and pre-padded to tile multiples (see kernels.ops)."""
+    accumulator dtype and pre-padded to tile multiples (see kernels.ops).
+    ``kc`` must divide ``bk`` (defaults to ``bk``: one unrolled chunk)."""
     m, k = a.shape
     k2, n = b.shape
     assert k == k2 and sa.shape == (m, 1) and sb.shape == (1, n)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    kc = bk if kc is None else kc
+    assert bk % kc == 0, (bk, kc)
     nk = k // bk
     is_int = jnp.issubdtype(a.dtype, jnp.integer)
 
-    kernel = functools.partial(sq_matmul_kernel, nk=nk, is_int=is_int)
+    kernel = functools.partial(sq_matmul_kernel, nk=nk, kc=kc,
+                               pm_layout=pm_layout, is_int=is_int)
     return pl.pallas_call(
         kernel,
         grid=(m // bm, n // bn, nk),
@@ -88,5 +141,8 @@ def sq_matmul_pallas(a, b, sa, sb, *, bm: int = 256, bn: int = 256,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), a.dtype)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b, sa, sb)

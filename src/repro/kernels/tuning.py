@@ -1,0 +1,322 @@
+"""Tile planner for the Pallas square-kernel suite.
+
+Picks the ``(bm, bn, bk, kc)`` block plan for every kernel call site:
+
+- ``bm`` x ``bn`` is the VMEM-resident output tile (``bm`` rounded to the
+  8-sublane granule, ``bn``/``bk`` to the 128-lane granule whenever the
+  operand is large enough to allow it);
+- ``bk`` is the K-slab streamed per grid step;
+- ``kc`` is the chunk width of the rank-2 broadcast squaring inside a step
+  (the live PM intermediate is (bm, kc, bn)).
+
+Two modes:
+
+**Model mode (default).**  Candidates are ranked by the analytical cost in
+:mod:`repro.core.cost_model` (``pm_grid_cost``): VPU lane-ops plus per-grid-
+step and per-chunk issue overheads, subject to a VMEM budget.  Deterministic,
+zero-warmup, good enough to avoid pathological plans.
+
+**Empirical mode.**  :func:`autotune_matmul` sweeps candidate plans through
+the wall-clock harness in ``benchmarks/kernel_timing.py`` and caches winners
+to a JSON table keyed by ``(kind, m, n, k, dtype)``.  The planner consults
+the cache first (path from ``$REPRO_TUNING_CACHE`` or the package-local
+``tuning_cache.json``), so a one-off autotune run upgrades every later call
+with the same shape.
+
+User-supplied ``bm``/``bn``/``bk``/``kc`` always win over both modes.
+They are clamped to the (padded) operand extent and aligned to the
+hardware granules -- which may round a value *up* to the next sublane/lane
+multiple (e.g. bm=100 -> 104): padding to an aligned tile is cheaper than
+the layout penalty of a misaligned one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+from typing import Iterable, Optional
+
+import jax.numpy as jnp
+
+from repro.core import cost_model as cm
+from repro.core import squares as sq
+
+__all__ = ["TilePlan", "plan_matmul", "plan_conv", "candidate_plans",
+           "autotune_matmul", "load_cache", "save_cache", "cache_path",
+           "clear_cache"]
+
+SUBLANE = 8            # f32 sublane granule (second-minor axis)
+LANE = 128             # lane granule (minor axis)
+VMEM_BUDGET = 12 * 1024 * 1024      # leave headroom under the ~16 MB v5e VMEM
+# For the "mnk" (minor-axis-reduce) layout the live (bm, bn, kc) chunk is
+# walked like a dot-product loop nest; keeping it inside the L2-ish working
+# set is what makes that layout fast on CPU interpret runs.  Reduction
+# depths beyond ~32 stop vectorizing well (measured: kc=32 beats both
+# kc=128 and kc=8 by 2-5x at 128^3 f32), so mnk plans cap kc there.
+CACHE_BUDGET = 2 * 1024 * 1024
+KC_MNK_MAX = 32
+KC_CANDIDATES = (8, 16, 32, 64, 128)
+# Operand/accumulator multiplicities per kernel kind: the CPM kernels
+# stream two row planes + two column planes and hold two scratch
+# accumulators, so their VMEM feasibility is ~2x a plain sq_matmul's.
+KIND_COUNTS = {
+    "sq_matmul": (1, 1, 1),
+    "cpm3_matmul": (2, 2, 2),
+    "cpm4_matmul": (2, 2, 2),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    bm: int
+    bn: int
+    bk: int
+    kc: int
+    pm_layout: str = "mkn"      # "mkn": TPU-native; "mnk": minor-axis reduce
+
+    def astuple(self):
+        return (self.bm, self.bn, self.bk, self.kc)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def _align_bm(bm: int, m: int) -> int:
+    """Clamp ``bm`` to the row extent, rounded to the sublane granule.
+
+    For m >= SUBLANE the tile is always a multiple of 8 so Mosaic layouts
+    hold (padding covers the remainder, e.g. m=100 -> bm=104, not 100);
+    tiny operands keep their exact extent (interpret mode tolerates it).
+    """
+    if m >= SUBLANE:
+        return min(_round_up(bm, SUBLANE), _round_up(m, SUBLANE))
+    return min(bm, m)
+
+
+def _align_lane(b: int, extent: int) -> int:
+    """Clamp a minor-axis tile to the extent, keeping 128-lane alignment
+    whenever the operand itself spans at least one lane group."""
+    if extent >= LANE:
+        return min(_round_up(b, LANE), _round_up(extent, LANE))
+    return min(b, extent)
+
+
+def _align_kc(kc: int, bk: int) -> int:
+    """kc must divide bk so the chunk loop has no ragged tail."""
+    kc = max(1, min(kc, bk))
+    while bk % kc:
+        kc -= 1
+    return kc
+
+
+def candidate_plans(m: int, n: int, k: int,
+                    *, itemsize: int = 4, n_row_ops: int = 1,
+                    n_col_ops: int = 1, n_acc: int = 1,
+                    pm_layout: str = "mkn",
+                    vmem_budget: int = VMEM_BUDGET) -> list[TilePlan]:
+    """Enumerate aligned, budget-feasible plans for an (m, n, k) contraction.
+
+    Every plan respects the VMEM budget; "mnk"-layout plans additionally
+    keep the live (bm, bn, kc) chunk under :data:`CACHE_BUDGET` (the layout
+    exists for cache-locality, so a chunk that spills defeats it).
+    """
+    bms = sorted({_align_bm(c, m) for c in (8, 32, 64, 128, 256, 512)})
+    bns = sorted({_align_lane(c, n) for c in (128, 256, 512)})
+    bks = sorted({_align_lane(c, k) for c in (128, 256, 512)})
+    plans = []
+    for bm in bms:
+        for bn in bns:
+            for bk in bks:
+                for kc in sorted({_align_kc(c, bk) for c in KC_CANDIDATES}):
+                    if pm_layout == "mnk" and kc > 1 and (
+                            kc > KC_MNK_MAX or
+                            bm * bn * kc * itemsize > CACHE_BUDGET):
+                        continue
+                    cost = cm.pm_grid_cost(
+                        m, n, k, bm, bn, bk, kc, itemsize=itemsize,
+                        n_row_ops=n_row_ops, n_col_ops=n_col_ops, n_acc=n_acc)
+                    if cost.vmem_bytes <= vmem_budget:
+                        plans.append(TilePlan(bm, bn, bk, kc, pm_layout))
+    if not plans:      # degenerate shapes: fall back to a single minimal plan
+        bm = _align_bm(8, m)
+        bn = _align_lane(LANE, n)
+        bk = _align_lane(LANE, k)
+        plans = [TilePlan(bm, bn, bk, _align_kc(8, bk), pm_layout)]
+    return plans
+
+
+@functools.lru_cache(maxsize=1024)
+def _model_pick(m: int, n: int, k: int, *, itemsize: int, n_row_ops: int,
+                n_col_ops: int, n_acc: int, pm_layout: str) -> TilePlan:
+    plans = candidate_plans(m, n, k, itemsize=itemsize, n_row_ops=n_row_ops,
+                            n_col_ops=n_col_ops, n_acc=n_acc,
+                            pm_layout=pm_layout)
+    costs = {
+        p: cm.pm_grid_cost(m, n, k, *p.astuple(), itemsize=itemsize,
+                           n_row_ops=n_row_ops, n_col_ops=n_col_ops,
+                           n_acc=n_acc).weighted
+        for p in plans
+    }
+    return min(plans, key=lambda p: costs[p])
+
+
+# --------------------------------------------------------------------------
+# Empirical cache
+# --------------------------------------------------------------------------
+
+# In-process memo of loaded cache files, keyed by path -- an autotune
+# against an explicit scratch path must not repoint default-path lookups.
+_CACHE: dict[str, dict] = {}
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_TUNING_CACHE",
+        os.path.join(os.path.dirname(__file__), "tuning_cache.json"))
+
+
+def _key(kind: str, m: int, n: int, k: int, dtype) -> str:
+    return f"{kind}:{m}x{n}x{k}:{jnp.dtype(dtype).name}"
+
+
+def load_cache(path: Optional[str] = None) -> dict:
+    p = path or cache_path()
+    if p not in _CACHE:
+        try:
+            with open(p) as f:
+                _CACHE[p] = json.load(f)
+        except (OSError, ValueError):
+            _CACHE[p] = {}
+    return _CACHE[p]
+
+
+def save_cache(cache: dict, path: Optional[str] = None) -> str:
+    p = path or cache_path()
+    with open(p, "w") as f:
+        json.dump(cache, f, indent=1, sort_keys=True)
+    _CACHE[p] = dict(cache)
+    return p
+
+
+def clear_cache() -> None:
+    """Drop the in-process cache memo (tests; after external file edits)."""
+    _CACHE.clear()
+
+
+# --------------------------------------------------------------------------
+# Public planning entry points
+# --------------------------------------------------------------------------
+
+def plan_matmul(m: int, n: int, k: int, dtype=jnp.float32, *,
+                bm: Optional[int] = None, bn: Optional[int] = None,
+                bk: Optional[int] = None, kc: Optional[int] = None,
+                pm_layout: str = "mkn", kind: str = "sq_matmul",
+                n_row_ops: int = 1, n_col_ops: int = 1,
+                n_acc: int = 1) -> TilePlan:
+    """Pick the (bm, bn, bk, kc, pm_layout) plan for a matmul-shaped call.
+
+    ``pm_layout`` is backend-driven, not cost-modelled: callers pass "mnk"
+    for interpret/CPU execution and "mkn" for real TPU lowering (see
+    kernels.sq_matmul for what each means).
+
+    Precedence: explicit user tiles > autotune cache > cost model.  Explicit
+    values are still clamped to the (padded) operand extent and aligned to
+    the hardware granules, which may round them up (see module docstring).
+    """
+    if bm is not None and bn is not None and bk is not None:
+        # Fully specified: no enumeration, no cache consult.  Kept cheap on
+        # purpose -- benchmark/autotune loops plan on every call.
+        pbk = _align_lane(bk, k)
+        return TilePlan(_align_bm(bm, m), _align_lane(bn, n), pbk,
+                        _align_kc(kc if kc is not None else pbk, pbk),
+                        pm_layout)
+    itemsize = jnp.dtype(dtype).itemsize
+    cached = load_cache().get(_key(kind, m, n, k, dtype))
+    if cached is not None and bm is None and bn is None and bk is None \
+            and kc is None \
+            and str(cached.get("pm_layout", pm_layout)) == pm_layout:
+        # Serve the cache only for the requested layout: an autotune run on
+        # a CPU host must not dictate "mnk" to a TPU caller.
+        return TilePlan(*(int(cached[f]) for f in ("bm", "bn", "bk", "kc")),
+                        pm_layout)
+    base = _model_pick(m, n, k, itemsize=itemsize, n_row_ops=n_row_ops,
+                       n_col_ops=n_col_ops, n_acc=n_acc, pm_layout=pm_layout)
+    pbm = _align_bm(bm if bm is not None else base.bm, m)
+    pbn = _align_lane(bn if bn is not None else base.bn, n)
+    pbk = _align_lane(bk if bk is not None else base.bk, k)
+    pkc = _align_kc(kc if kc is not None else base.kc, pbk)
+    return TilePlan(pbm, pbn, pbk, pkc, pm_layout)
+
+
+def plan_conv(k_out: int, n_taps: int, dtype=jnp.float32, *,
+              bo: Optional[int] = None, tb: Optional[int] = None,
+              interpret: bool = False) -> tuple[int, int]:
+    """Pick (bo, tb) for the 1D conv kernel: ``bo`` outputs per grid step,
+    ``tb`` taps folded per vectorized chunk (the tap-block width).
+
+    The tap-block width is backend-driven like the matmul pm_layout: on
+    TPU a tb-wide (tb, bo) PM block keeps the VPU lanes busy, but under
+    interpret/CPU execution the rank-1 tap walk is measurably faster
+    (the stacked shifted windows materialize to no benefit), so interpret
+    plans default to tb=1.
+    """
+    del dtype
+    pbo = bo if bo is not None else 256
+    pbo = max(1, min(pbo, _round_up(k_out, LANE) if k_out >= LANE else k_out))
+    ptb = tb if tb is not None else (1 if interpret else 8)
+    ptb = max(1, min(ptb, n_taps))
+    return pbo, ptb
+
+
+# --------------------------------------------------------------------------
+# Empirical autotune
+# --------------------------------------------------------------------------
+
+def autotune_matmul(shapes: Iterable[tuple[int, int, int]],
+                    dtype=jnp.float32, *, kind: str = "sq_matmul",
+                    pm_layouts: tuple[str, ...] = ("mnk", "mkn"),
+                    max_candidates: int = 8, reps: int = 3,
+                    path: Optional[str] = None,
+                    verbose: bool = False) -> dict:
+    """Sweep candidate plans through the wall-clock harness; cache winners.
+
+    For each (m, n, k) the model-ranked top ``max_candidates`` plans *per
+    layout* are timed via :func:`benchmarks.kernel_timing.time_plan` and the
+    fastest is written to the JSON cache that :func:`plan_matmul` consults.
+    Returns the updated cache dict.
+
+    ``dtype`` is the *input* dtype the kernel will be fed (operands are
+    generated in it); candidate feasibility and the cache key both use the
+    accumulator dtype, matching what kernels.ops looks up at plan time,
+    and candidate generation uses the kind's operand/accumulator counts
+    (a cpm plan is costed as a cpm plan, not as a sq_matmul one).
+    """
+    from benchmarks import kernel_timing as kt     # lazy: benchmarks optional
+
+    acc_dtype = sq.accum_dtype(jnp.dtype(dtype))
+    itemsize = jnp.dtype(acc_dtype).itemsize
+    nro, nco, nacc = KIND_COUNTS.get(kind, (1, 1, 1))
+    cache = dict(load_cache(path))
+    for (m, n, k) in shapes:
+        best, best_us = None, float("inf")
+        for layout in pm_layouts:
+            plans = candidate_plans(m, n, k, itemsize=itemsize,
+                                    n_row_ops=nro, n_col_ops=nco,
+                                    n_acc=nacc, pm_layout=layout)
+            plans.sort(key=lambda p: cm.pm_grid_cost(
+                m, n, k, *p.astuple(), itemsize=itemsize, n_row_ops=nro,
+                n_col_ops=nco, n_acc=nacc).weighted)
+            for plan in plans[:max_candidates]:
+                us = kt.time_plan(kind, m, n, k, dtype, plan, reps=reps)
+                if verbose:
+                    print(f"  {kind} {m}x{n}x{k} {plan} -> {us:.1f}us")
+                if us < best_us:
+                    best, best_us = plan, us
+        cache[_key(kind, m, n, k, acc_dtype)] = {
+            "bm": best.bm, "bn": best.bn, "bk": best.bk, "kc": best.kc,
+            "pm_layout": best.pm_layout, "us_per_call": best_us,
+        }
+    save_cache(cache, path)
+    return cache

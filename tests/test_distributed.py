@@ -133,7 +133,7 @@ def test_logical_rules_drop_indivisible():
         cfg = get_config("paligemma-3b")      # kv=1, 8 heads, big vocab/mlp
         model = build_model(cfg)
         sh = shd.param_shardings(mesh, model.spec())
-        flat = jax.tree.leaves_with_path(sh)
+        flat = jax.tree_util.tree_leaves_with_path(sh)
         out = {}
         for path, s in flat:
             key = "/".join(str(p.key) for p in path if hasattr(p, "key"))

@@ -1,0 +1,197 @@
+"""Equivalence + planner tests for the vectorized (chunked) Pallas kernels.
+
+The chunked kernels must compute exactly what the pre-refactor rank-1
+kernels computed: the streamed square-form contraction of
+``core.matmul.pm_matmul_scan``.  Integer paths bit-match; float paths match
+to reassociation tolerance (chunking changes the add order, nothing else).
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.matmul import pm_matmul_scan
+from repro.kernels import ops, tuning
+
+RNG = np.random.default_rng(11)
+
+RAGGED_SHAPES = [(1, 1, 1), (7, 13, 9), (100, 60, 130), (64, 128, 32),
+                 (130, 257, 140)]
+
+# (bm, bn, bk, kc) plans: degenerate 1-chunk (kc == bk), rank-1 (kc == 1),
+# and mid chunkings, across both PM-block layouts.
+PLANS = [
+    dict(bm=32, bn=128, bk=32, kc=32, pm_layout="mnk"),    # 1-chunk
+    dict(bm=32, bn=128, bk=32, kc=32, pm_layout="mkn"),    # 1-chunk, TPU lay
+    dict(bm=64, bn=128, bk=128, kc=1, pm_layout="mkn"),    # rank-1 (seed)
+    dict(bm=64, bn=128, bk=128, kc=32, pm_layout="mnk"),
+    dict(bm=8, bn=128, bk=64, kc=16, pm_layout="mkn"),
+]
+
+
+@pytest.mark.parametrize("shape", RAGGED_SHAPES)
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16", "int8"])
+def test_chunked_matches_pm_matmul_scan(shape, dtype):
+    m, k, n = shape
+    if dtype == "int8":
+        a = jnp.asarray(RNG.integers(-128, 128, (m, k)).astype(np.int8))
+        b = jnp.asarray(RNG.integers(-128, 128, (k, n)).astype(np.int8))
+    else:
+        a = jnp.asarray(RNG.normal(size=(m, k)), jnp.dtype(dtype))
+        b = jnp.asarray(RNG.normal(size=(k, n)), jnp.dtype(dtype))
+    out = np.asarray(ops.sq_matmul(a, b))
+    ref = np.asarray(pm_matmul_scan(a, b))
+    if dtype == "int8":
+        np.testing.assert_array_equal(out, ref)       # bit-exact
+    else:
+        np.testing.assert_allclose(out, ref, rtol=5e-3, atol=5e-3 * k)
+
+
+@pytest.mark.parametrize("plan", PLANS)
+def test_plans_agree_f32(plan):
+    a = jnp.asarray(RNG.normal(size=(100, 200)).astype(np.float32))
+    b = jnp.asarray(RNG.normal(size=(200, 60)).astype(np.float32))
+    out = np.asarray(ops.sq_matmul(a, b, **plan))
+    ref = np.asarray(pm_matmul_scan(a, b))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-2)
+
+
+@pytest.mark.parametrize("plan", PLANS)
+def test_plans_agree_int8_bitexact(plan):
+    a = jnp.asarray(RNG.integers(-128, 128, (50, 70)).astype(np.int8))
+    b = jnp.asarray(RNG.integers(-128, 128, (70, 40)).astype(np.int8))
+    out = np.asarray(ops.sq_matmul(a, b, **plan))
+    np.testing.assert_array_equal(out, np.asarray(pm_matmul_scan(a, b)))
+
+
+@pytest.mark.parametrize("kind", ["cpm3_matmul", "cpm4_matmul"])
+@pytest.mark.parametrize("kc,pm_layout", [(1, "mkn"), (64, "mkn"),
+                                          (16, "mnk"), (64, "mnk")])
+def test_cpm_chunked_layouts_agree(kind, kc, pm_layout):
+    m, k, n = 40, 64, 24
+    x = jnp.asarray((RNG.normal(size=(m, k))
+                     + 1j * RNG.normal(size=(m, k))).astype(np.complex64))
+    y = jnp.asarray((RNG.normal(size=(k, n))
+                     + 1j * RNG.normal(size=(k, n))).astype(np.complex64))
+    op = getattr(ops, kind)
+    re, im = op(x, y, bk=64, kc=kc, pm_layout=pm_layout)
+    z = np.asarray(x) @ np.asarray(y)
+    np.testing.assert_allclose(np.asarray(re), z.real, rtol=1e-3, atol=1e-3 * k)
+    np.testing.assert_allclose(np.asarray(im), z.imag, rtol=1e-3, atol=1e-3 * k)
+
+
+@pytest.mark.parametrize("tb", [1, 4, 16])
+def test_conv_tap_blocks_agree(tb):
+    x = jnp.asarray(RNG.normal(size=(500,)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(11,)).astype(np.float32))   # ragged vs tb
+    out = np.asarray(ops.sq_conv(x, w, tb=tb))
+    ref = np.correlate(np.asarray(x), np.asarray(w), mode="valid")
+    np.testing.assert_allclose(out, ref, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("shape", [(16, 16, 3, 3), (32, 24, 5, 3),
+                                   (64, 64, 7, 7)])
+def test_sq_conv2d_matches_lax_conv(shape):
+    import jax.lax as lax
+    H, W, kh, kw = shape
+    x = jnp.asarray(RNG.normal(size=(H, W)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(kh, kw)).astype(np.float32))
+    out = np.asarray(ops.sq_conv2d(x, w))
+    ref = lax.conv_general_dilated(
+        x[None, None], w[None, None], (1, 1), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))[0, 0]
+    np.testing.assert_allclose(out, np.asarray(ref), rtol=2e-3,
+                               atol=2e-3 * kh * kw)
+
+
+def test_sq_conv2d_filter_bank():
+    import jax.lax as lax
+    x = jnp.asarray(RNG.normal(size=(20, 20)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(4, 3, 3)).astype(np.float32))
+    out = np.asarray(ops.sq_conv2d(x, w))
+    ref = lax.conv_general_dilated(
+        x[None, None], w[:, None], (1, 1), "VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))[0]
+    assert out.shape == (4, 18, 18)
+    np.testing.assert_allclose(out, np.asarray(ref), rtol=2e-3, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Planner unit tests
+# ---------------------------------------------------------------------------
+
+def test_planner_sublane_alignment():
+    """Odd M must not yield a sublane-misaligned bm (the seed bug: M=100
+    -> bm=100)."""
+    plan = tuning.plan_matmul(100, 256, 256)
+    assert plan.bm % tuning.SUBLANE == 0
+    plan = tuning.plan_matmul(100, 256, 256, bm=100)    # explicit odd bm
+    assert plan.bm % tuning.SUBLANE == 0
+
+
+def test_planner_small_operands_exact():
+    plan = tuning.plan_matmul(3, 5, 2)
+    assert plan.bm <= 3 and plan.bn <= 5 and plan.bk <= 2
+    assert plan.bk % plan.kc == 0
+
+
+def test_planner_kc_divides_bk():
+    for (m, n, k) in [(128, 128, 128), (1000, 333, 77), (8, 8, 8)]:
+        for layout in ("mkn", "mnk"):
+            plan = tuning.plan_matmul(m, n, k, pm_layout=layout)
+            assert plan.bk % plan.kc == 0, plan
+
+
+def test_planner_explicit_tiles_respected():
+    plan = tuning.plan_matmul(512, 512, 512, bm=64, bn=128, bk=128, kc=16)
+    assert (plan.bm, plan.bn, plan.bk, plan.kc) == (64, 128, 128, 16)
+
+
+def test_planner_mnk_cache_budget():
+    for plan in tuning.candidate_plans(1024, 1024, 1024, pm_layout="mnk"):
+        if plan.kc > 1:
+            assert plan.bm * plan.bn * plan.kc * 4 <= tuning.CACHE_BUDGET
+
+
+def test_planner_vmem_budget():
+    from repro.core import cost_model as cm
+    for plan in tuning.candidate_plans(2048, 2048, 2048):
+        cost = cm.pm_grid_cost(2048, 2048, 2048, *plan.astuple())
+        assert cost.vmem_bytes <= tuning.VMEM_BUDGET
+
+
+def test_autotune_cache_roundtrip(tmp_path, monkeypatch):
+    """plan_matmul must serve plans straight from a JSON cache file."""
+    path = tmp_path / "tuning_cache.json"
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(path))
+    tuning.clear_cache()
+    entry = {"bm": 16, "bn": 128, "bk": 64, "kc": 16, "pm_layout": "mnk",
+             "us_per_call": 1.0}
+    path.write_text(json.dumps({"sq_matmul:64x64x64:float32": entry}))
+    plan = tuning.plan_matmul(64, 64, 64, jnp.float32, pm_layout="mnk")
+    assert plan == tuning.TilePlan(16, 128, 64, 16, "mnk")
+    # a layout mismatch must NOT serve the cached plan (CPU-tuned "mnk"
+    # entries never leak into TPU "mkn" plans)
+    plan = tuning.plan_matmul(64, 64, 64, jnp.float32, pm_layout="mkn")
+    assert plan.pm_layout == "mkn" and plan.bm != 16
+    # explicit user tiles bypass the cache
+    plan = tuning.plan_matmul(64, 64, 64, jnp.float32, bm=32,
+                              pm_layout="mnk")
+    assert plan.bm == 32
+    tuning.clear_cache()
+
+
+def test_autotune_sweep_smoke(tmp_path, monkeypatch):
+    """End-to-end: autotune a tiny shape, then plan from the cache."""
+    path = tmp_path / "cache.json"
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(path))
+    tuning.clear_cache()
+    cache = tuning.autotune_matmul([(32, 32, 32)], jnp.float32,
+                                   max_candidates=2, reps=1)
+    key = "sq_matmul:32x32x32:float32"
+    assert key in cache and cache[key]["us_per_call"] > 0
+    plan = tuning.plan_matmul(32, 32, 32, jnp.float32,
+                              pm_layout=cache[key]["pm_layout"])
+    assert plan.bm == cache[key]["bm"] and plan.kc == cache[key]["kc"]
+    tuning.clear_cache()

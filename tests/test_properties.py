@@ -1,5 +1,11 @@
-"""Hypothesis property tests on the paper's core invariants."""
-import hypothesis
+"""Hypothesis property tests on the paper's core invariants.
+
+hypothesis is an optional dev dependency (requirements-dev.txt); on clean
+environments this module must skip, not abort collection.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 import hypothesis.extra.numpy as hnp
 import hypothesis.strategies as st
 import jax.numpy as jnp
