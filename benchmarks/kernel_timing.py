@@ -43,20 +43,25 @@ def _plan_kwargs(plan):
     return dict(bm=bm, bn=bn, bk=bk, kc=kc)
 
 
-def time_plan(kind, m, n, k, dtype, plan, *, reps=3):
+def time_plan(kind, m, n, k, dtype, plan, *, reps=3, batch=1):
     """Wall-time one kernel call under an explicit tile plan (autotune hook).
 
-    kind: "sq_matmul" | "cpm3_matmul" | "cpm4_matmul".
+    kind: "sq_matmul" | "cpm3_matmul" | "cpm4_matmul".  ``batch`` > 1
+    times the batched (leading-batch-grid-axis) kernel -- sq_matmul only.
     """
     from repro.kernels import ops
 
     rng = np.random.default_rng(0)
     kwargs = _plan_kwargs(plan)
     if kind == "sq_matmul":
-        a = jnp.asarray(rng.normal(size=(m, k)).astype(np.dtype(dtype)))
-        b = jnp.asarray(rng.normal(size=(k, n)).astype(np.dtype(dtype)))
+        lead = (batch,) if batch > 1 else ()
+        a = jnp.asarray(rng.normal(size=lead + (m, k)).astype(np.dtype(dtype)))
+        b = jnp.asarray(rng.normal(size=lead + (k, n)).astype(np.dtype(dtype)))
         fn = lambda a, b: ops.sq_matmul(a, b, **kwargs)
         return _time(fn, a, b, reps=reps)
+    if batch > 1:
+        raise ValueError(f"batched timing is only supported for sq_matmul, "
+                         f"not {kind!r}")
     if kind in ("cpm3_matmul", "cpm4_matmul"):
         x = jnp.asarray((rng.normal(size=(m, k))
                          + 1j * rng.normal(size=(m, k))).astype(np.complex64))

@@ -7,6 +7,13 @@ cd "$(dirname "$0")/.."
 # src for the package, repo root for the benchmarks/ harness package
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
+if command -v ruff >/dev/null 2>&1; then
+  echo "== ruff (config: pyproject.toml) =="
+  ruff check src tests
+else
+  echo "== ruff == skipped (ruff not installed; CI runs it)"
+fi
+
 echo "== tier-1 tests =="
 timeout "${CHECK_TIMEOUT:-1200}" python -m pytest -x -q
 

@@ -3,17 +3,91 @@
 One ``ModelConfig`` instance per assigned architecture lives in
 ``src/repro/configs/<id>.py``; ``reduced()`` derives the CPU smoke-test
 config of the same family (small widths, few layers/experts, tiny vocab).
+
+``ContractionPolicy`` is the per-call-site override table for the
+fair-square einsum dispatch (:func:`repro.core.einsum.fs_einsum`):
+``matmul_mode`` stays the whole-model default, and a policy selectively
+pins individual contraction sites to a different mode -- e.g. square-form
+FFN/logits GEMMs with the attention softmax path left on the multiplier
+baseline (:data:`SQUARE_GEMMS_POLICY`).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional, Tuple
 
-__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "pad_vocab"]
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "pad_vocab",
+           "ContractionPolicy", "CONTRACTION_SITES", "SQUARE_GEMMS_POLICY"]
 
 
 def pad_vocab(v: int, mult: int = 256) -> int:
     return v + (-v) % mult
+
+
+# Call-site labels every fs_einsum-routed contraction reports (also the
+# keys a ContractionPolicy may override).  Kept here so policies and the
+# counter's by-site breakdown share one vocabulary.
+CONTRACTION_SITES = (
+    "dense",            # generic dense_apply fallback
+    "attn_qkv",         # attention input projections
+    "attn_out",         # attention output projection
+    "attn_scores",      # q @ k^T (softmax path)
+    "attn_pv",          # probs @ v (softmax path)
+    "ffn",              # dense FFN up/gate/down
+    "moe_router",       # MoE router logits
+    "moe_expert",       # batched expert GEMMs
+    "logits",           # LM head / vocab GEMM
+    "loss",             # chunked-xent vocab GEMM
+    "recurrent_gates",  # xLSTM / RG-LRU gate projections
+    "recurrent_mix",    # recurrent state-mix contractions (scan bodies)
+    "recurrent_proj",   # recurrent block dense projections
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractionPolicy:
+    """Per-site contraction-mode overrides (hashable; safe as a jit-static
+    config field).
+
+    Resolution inside ``fs_einsum``: ``overrides[site]`` if present, else
+    this policy's ``default`` if set, else the caller's ``mode`` argument
+    (models pass ``cfg.matmul_mode``), else the process default.
+    """
+    overrides: Tuple[Tuple[str, str], ...] = ()
+    default: Optional[str] = None
+
+    @classmethod
+    def of(cls, default: Optional[str] = None,
+           **sites: str) -> "ContractionPolicy":
+        """Build a policy, validating site names and modes (a typo'd site
+        would otherwise be silently ignored at lookup time)."""
+        from repro.core.matmul import MODES
+        bad = sorted(set(sites) - set(CONTRACTION_SITES))
+        if bad:
+            raise ValueError(f"unknown contraction site(s) {bad}; expected "
+                             f"names from {CONTRACTION_SITES}")
+        for site, m in sites.items():
+            if m not in MODES:
+                raise ValueError(f"unknown mode {m!r} for site {site!r}; "
+                                 f"expected one of {MODES}")
+        if default is not None and default not in MODES:
+            raise ValueError(f"unknown default mode {default!r}; expected "
+                             f"one of {MODES}")
+        return cls(tuple(sorted(sites.items())), default)
+
+    def lookup(self, site: Optional[str]) -> Optional[str]:
+        for s, m in self.overrides:
+            if s == site:
+                return m
+        return self.default
+
+
+# Square-form GEMMs everywhere the operands are weights/activations, but
+# the attention softmax path (scores / probs-times-values) kept on the
+# multiplier baseline -- the mixed deployment the paper's ASIC story
+# implies (weight GEMMs on squarer arrays, attention on the vector unit).
+SQUARE_GEMMS_POLICY = ContractionPolicy.of(
+    attn_scores="standard", attn_pv="standard")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +129,8 @@ class ModelConfig:
     # --- numerics / execution ---
     dtype: str = "bfloat16"
     matmul_mode: str = "standard"    # standard | square_virtual | ...
+    # per-site overrides of matmul_mode (see ContractionPolicy above)
+    contraction_policy: Optional[ContractionPolicy] = None
     scan_layers: bool = True
     remat: str = "block"             # none | block
     loss_chunk: int = 2048

@@ -1,3 +1,4 @@
 """Fair-and-Square core: the paper's contribution as composable JAX ops."""
-from repro.core import squares, matmul, complexmm, conv, transforms, counting, cost_model  # noqa: F401
+from repro.core import squares, matmul, complexmm, conv, transforms, counting, cost_model, einsum  # noqa: F401
 from repro.core.matmul import matmul as fs_matmul, set_default_mode, get_default_mode  # noqa: F401
+from repro.core.einsum import fs_einsum  # noqa: F401

@@ -23,9 +23,8 @@ paper's four-wire CPM hardware sees them.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import squares as sq
@@ -34,9 +33,26 @@ __all__ = ["cpm4_matmul", "cpm3_matmul", "complex_matmul", "split_planes"]
 
 
 def split_planes(x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Split an operand into its (re, im) planes.
+
+    Accepts a complex array, an explicit ``(re, im)`` pair (the module
+    docstring's four-wire hardware view), or a real array (imaginary
+    plane identically zero).
+    """
+    if isinstance(x, (tuple, list)):
+        if len(x) != 2:
+            raise ValueError(
+                f"expected a (re, im) plane pair, got {len(x)} items")
+        re, im = jnp.asarray(x[0]), jnp.asarray(x[1])
+        if jnp.iscomplexobj(re) or jnp.iscomplexobj(im):
+            raise ValueError("(re, im) planes must be real arrays")
+        if re.shape != im.shape:
+            raise ValueError(f"plane shapes differ: {re.shape} vs {im.shape}")
+        return re, im
+    x = jnp.asarray(x)
     if jnp.iscomplexobj(x):
         return jnp.real(x), jnp.imag(x)
-    raise ValueError("expected a complex array or explicit (re, im) planes")
+    return x, jnp.zeros_like(x)
 
 
 def _as_planes(x, x_im):

@@ -13,16 +13,39 @@ Counting conventions (matching how the paper counts):
   periphery);
 - additions are free in the paper's accounting (we track them anyway);
 - CPM3's shared (c+a+b)^2 is counted ONCE (that is the whole point of §9).
+
+Whole-model contraction accounting
+----------------------------------
+A second, einsum-aware counter tracks which fraction of a *model's*
+contraction FLOPs actually route through square-form arithmetic.  Every
+:func:`repro.core.einsum.fs_einsum` call notes its contraction volume
+(``B*M*K*N`` scalar multiplies) and resolved mode into any active
+:class:`ContractionCounter` (opened with :func:`track_contractions`).
+Because notes fire at *trace* time, callers whose contraction sits inside a
+``lax.scan``/``lax.map`` body wrap the traced body in :func:`count_scale`
+with the static trip count so the tally reflects executed work:
+
+    with counting.track_contractions() as ctr:
+        model.forward(params, batch)
+    assert ctr.fraction_square >= 0.9
+
+``ctr.multiplies_replaced`` is the paper's headline quantity: every scalar
+multiply in a square-routed contraction is replaced by exactly one square
+(plus the asymptotically-free corrections).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+from typing import Dict, List
 
 import numpy as np
 
 __all__ = ["OpCounter", "pm_matmul_counted", "standard_matmul_counted",
            "cpm4_matmul_counted", "cpm3_matmul_counted",
-           "real_matmul_square_count", "cpm4_square_count", "cpm3_square_count"]
+           "real_matmul_square_count", "cpm4_square_count", "cpm3_square_count",
+           "ContractionCounter", "track_contractions", "count_scale",
+           "note_contraction", "SQUARE_MODES"]
 
 
 @dataclasses.dataclass
@@ -132,3 +155,103 @@ def cpm3_matmul_counted(x, y, ctr: OpCounter):
         re2 += shared - ctr.sq(bk + ck + sk)               # + M*P
         im2 += shared + ctr.sq(ak + sk - ck)               # + M*P
     return re2 / 2 + 1j * (im2 / 2)
+
+
+# --------------------------------------------------------------------------
+# Whole-model contraction accounting (einsum-aware; see module docstring)
+# --------------------------------------------------------------------------
+
+# Modes whose contraction FLOPs are square-form routed (everything the
+# dispatcher supports except the plain-multiplier baseline).
+SQUARE_MODES = ("square_virtual", "square_exact", "square_scan",
+                "square_pallas")
+
+
+@dataclasses.dataclass
+class ContractionRecord:
+    site: str
+    spec: str
+    mode: str
+    mults: int           # B*M*K*N scalar multiplies (scaled by count_scale)
+
+
+@dataclasses.dataclass
+class ContractionCounter:
+    """Tally of fs_einsum contraction volume, split by dispatch mode."""
+    records: List[ContractionRecord] = dataclasses.field(default_factory=list)
+
+    def record(self, site: str, spec: str, mode: str, mults: int) -> None:
+        self.records.append(ContractionRecord(site, spec, mode, mults))
+
+    @property
+    def total_mults(self) -> int:
+        return sum(r.mults for r in self.records)
+
+    @property
+    def square_mults(self) -> int:
+        return sum(r.mults for r in self.records if r.mode in SQUARE_MODES)
+
+    @property
+    def multiplies_replaced(self) -> int:
+        """Scalar multiplies replaced by a single square each (paper §3)."""
+        return self.square_mults
+
+    @property
+    def fraction_square(self) -> float:
+        tot = self.total_mults
+        return (self.square_mults / tot) if tot else 0.0
+
+    def by_site(self) -> Dict[str, Dict[str, int]]:
+        out: Dict[str, Dict[str, int]] = {}
+        for r in self.records:
+            d = out.setdefault(r.site, {"mults": 0, "square_mults": 0})
+            d["mults"] += r.mults
+            if r.mode in SQUARE_MODES:
+                d["square_mults"] += r.mults
+        return out
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "total_mults": self.total_mults,
+            "multiplies_replaced_by_squares": self.multiplies_replaced,
+            "fraction_square": self.fraction_square,
+            "by_site": self.by_site(),
+        }
+
+
+_COUNTERS: List[ContractionCounter] = []
+_SCALES: List[int] = [1]
+
+
+@contextlib.contextmanager
+def track_contractions():
+    """Activate a :class:`ContractionCounter` for the enclosed region."""
+    ctr = ContractionCounter()
+    _COUNTERS.append(ctr)
+    try:
+        yield ctr
+    finally:
+        _COUNTERS.remove(ctr)
+
+
+@contextlib.contextmanager
+def count_scale(n: int):
+    """Multiply contraction notes by ``n`` inside the region.
+
+    Wrap a ``lax.scan``/``lax.map`` body (traced once, executed ``n``
+    times) so trace-time notes reflect executed contraction volume.
+    """
+    _SCALES.append(_SCALES[-1] * int(n))
+    try:
+        yield
+    finally:
+        _SCALES.pop()
+
+
+def note_contraction(*, site: str, spec: str, mode: str, mults: int) -> None:
+    """Record one contraction into every active counter (no-op otherwise)."""
+    if not _COUNTERS:
+        return
+    scaled = int(mults) * _SCALES[-1]
+    for ctr in _COUNTERS:
+        ctr.record(site or "einsum", spec, mode, scaled)

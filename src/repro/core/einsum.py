@@ -1,0 +1,235 @@
+"""Square-aware einsum dispatch: the whole-model contraction planner.
+
+``fs_einsum(spec, x, y)`` is the single entry point every model contraction
+in this codebase routes through.  It parses a two-operand einsum spec,
+classifies each index as batch / M / K / N, canonicalizes the operands to
+``(B, M, K) @ (B, K, N)`` form via transpose/reshape, and dispatches the
+contraction through the fair-square mode machinery of
+:mod:`repro.core.matmul`:
+
+``standard``
+    The original ``jnp.einsum`` (multiplier baseline) -- called verbatim,
+    so refactored call sites are bit-identical to their pre-dispatch form.
+``square_virtual``
+    Square-form contract through the MXU (``Sab = -Sa - Sb + 2 A@B``; the
+    x2 accumulator carry and final halving retained) -- batched natively.
+``square_exact`` / ``square_scan``
+    Faithful PM-datapath emulation, vmapped over the canonical batch axis.
+``square_pallas``
+    The Pallas kernel with a leading batch grid axis
+    (:func:`repro.kernels.ops.sq_matmul` on rank-3 operands).
+
+Mode resolution (most specific wins): a :class:`ContractionPolicy`
+(``policy.lookup(site)``, see :mod:`repro.configs.base`) > the explicit
+``mode`` argument (models pass ``cfg.matmul_mode``) > the process default
+(:func:`repro.core.matmul.get_default_mode`).
+
+Every call notes its contraction volume (``B*M*K*N`` scalar multiplies)
+and resolved mode into :mod:`repro.core.counting`'s contraction counter,
+so a forward pass can report the fraction of its contraction FLOPs that
+ran square-form (ROADMAP north-star: whole-model square arithmetic behind
+one config flag).
+
+Supported specs: two operands, explicit ``->`` output, an optional
+ellipsis, no repeated index within one operand (no diagonals).  Indices
+appearing in only one operand and not the output are summed out before
+dispatch (einsum semantics).
+"""
+from __future__ import annotations
+
+import dataclasses
+import string
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import counting
+from repro.core import matmul as fsmm
+
+__all__ = ["fs_einsum", "ContractionPlan", "plan_contraction",
+           "resolve_mode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractionPlan:
+    """Index classification of a two-operand contraction spec.
+
+    ``batch``/``m`` keep x's index order; ``k`` the contraction indices in
+    x's order; ``n`` keeps y's order.  ``x_sum``/``y_sum`` are indices that
+    appear in exactly one operand and not the output (summed out first).
+    The canonical output layout is ``batch + m + n``.
+    """
+    x_dims: str
+    y_dims: str
+    out_dims: str
+    batch: str
+    m: str
+    k: str
+    n: str
+    x_sum: str
+    y_sum: str
+
+
+def _expand_ellipsis(spec: str, x_ndim: int, y_ndim: int) -> str:
+    """Rewrite ``...`` into fresh concrete index letters."""
+    lhs, out = spec.split("->")
+    xs, ys = lhs.split(",")
+    n_x = x_ndim - len(xs.replace("...", ""))
+    n_y = y_ndim - len(ys.replace("...", ""))
+    widths = [w for t, w in ((xs, n_x), (ys, n_y)) if "..." in t]
+    if not widths:
+        return spec
+    if min(widths) != max(widths):
+        raise ValueError(
+            f"fs_einsum does not support broadcasting ellipses of different "
+            f"rank in {spec!r}")
+    used = set(spec)
+    ell = "".join(c for c in string.ascii_letters if c not in used)[:widths[0]]
+    return spec.replace("...", ell)
+
+
+def plan_contraction(spec: str, x_shape: Tuple[int, ...],
+                     y_shape: Tuple[int, ...]) -> ContractionPlan:
+    """Parse and classify a two-operand einsum spec (see module docstring)."""
+    spec = spec.replace(" ", "")
+    if "->" not in spec or spec.count(",") != 1:
+        raise ValueError(
+            f"fs_einsum needs a two-operand spec with explicit '->', "
+            f"got {spec!r}")
+    spec = _expand_ellipsis(spec, len(x_shape), len(y_shape))
+    lhs, out = spec.split("->")
+    xs, ys = lhs.split(",")
+    if len(xs) != len(x_shape) or len(ys) != len(y_shape):
+        raise ValueError(f"spec {spec!r} does not match operand ranks "
+                         f"{len(x_shape)} and {len(y_shape)}")
+    if len(set(xs)) != len(xs) or len(set(ys)) != len(ys) \
+            or len(set(out)) != len(out):
+        raise ValueError(f"repeated index within one term of {spec!r} "
+                         f"(diagonals) is not supported")
+    for d in out:
+        if d not in xs and d not in ys:
+            raise ValueError(f"output index {d!r} of {spec!r} appears in "
+                             f"no operand")
+    batch = "".join(d for d in xs if d in ys and d in out)
+    k = "".join(d for d in xs if d in ys and d not in out)
+    m = "".join(d for d in xs if d not in ys and d in out)
+    n = "".join(d for d in ys if d not in xs and d in out)
+    x_sum = "".join(d for d in xs if d not in ys and d not in out)
+    y_sum = "".join(d for d in ys if d not in xs and d not in out)
+    return ContractionPlan(xs, ys, out, batch, m, k, n, x_sum, y_sum)
+
+
+def resolve_mode(mode: Optional[str], policy, site: Optional[str]) -> str:
+    """policy[site] > explicit mode > process default."""
+    if policy is not None:
+        pmode = policy.lookup(site)
+        if pmode is not None:
+            return pmode
+    if mode is not None:
+        return mode
+    return fsmm.get_default_mode()
+
+
+def _sizes(plan: ContractionPlan, x_shape, y_shape) -> dict:
+    sizes = {}
+    for d, s in zip(plan.x_dims, x_shape):
+        sizes[d] = s
+    for d, s in zip(plan.y_dims, y_shape):
+        if d in sizes and sizes[d] != s:
+            raise ValueError(
+                f"size mismatch for index {d!r}: {sizes[d]} vs {s}")
+        sizes[d] = s
+    return sizes
+
+
+def _prod(dims: str, sizes: dict) -> int:
+    return int(np.prod([sizes[d] for d in dims], dtype=np.int64)) \
+        if dims else 1
+
+
+def _sum_out(t, dims: str, drop: str):
+    if not drop:
+        return t, dims
+    t = jnp.sum(t, axis=tuple(dims.index(d) for d in drop))
+    return t, "".join(d for d in dims if d not in drop)
+
+
+def _to_canonical(t, dims: str, target: str, shape3) -> jnp.ndarray:
+    """Transpose ``t`` (indices ``dims``) to ``target`` order, reshape to
+    the rank-3 canonical form ``shape3``."""
+    perm = tuple(dims.index(d) for d in target)
+    if perm != tuple(range(len(perm))):
+        t = jnp.transpose(t, perm)
+    return t.reshape(shape3)
+
+
+def _batched_matmul(a, b, mode: str, preferred):
+    """Canonical (B, M, K) @ (B, K, N) under a fair-square mode."""
+    if mode == "square_virtual":
+        # jnp.matmul batches natively, so the x2-carry/halving contract
+        # lives in exactly one place
+        return fsmm.pm_matmul_virtual(a, b, preferred)
+    if mode == "square_exact":
+        return jax.vmap(fsmm.pm_matmul_exact)(a, b)
+    if mode == "square_scan":
+        return jax.vmap(fsmm.pm_matmul_scan)(a, b)
+    if mode == "square_pallas":
+        from repro.kernels import ops as kops    # lazy: avoid import cycle
+        return kops.sq_matmul(a, b)
+    raise ValueError(f"unknown matmul mode {mode!r}; expected one of "
+                     f"{fsmm.MODES}")
+
+
+def fs_einsum(spec: str, x, y, *, mode: Optional[str] = None,
+              policy=None, site: Optional[str] = None, preferred=None):
+    """Two-operand einsum through the fair-square contraction dispatch.
+
+    spec: einsum spec with explicit output (ellipsis supported);
+    mode: fair-square mode (default: policy / cfg / process default);
+    policy: a ContractionPolicy consulted with ``site``;
+    site: call-site label for the policy and the contraction counter;
+    preferred: accumulation dtype for the multiplier paths
+    (``preferred_element_type``; square paths widen via ``accum_dtype``).
+    """
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    mode = resolve_mode(mode, policy, site)
+    if mode not in fsmm.MODES:
+        raise ValueError(f"unknown matmul mode {mode!r}; expected one of "
+                         f"{fsmm.MODES}")
+    plan = plan_contraction(spec, x.shape, y.shape)
+    sizes = _sizes(plan, x.shape, y.shape)
+    B = _prod(plan.batch, sizes)
+    M = _prod(plan.m, sizes)
+    K = _prod(plan.k, sizes)
+    N = _prod(plan.n, sizes)
+    counting.note_contraction(site=site or "einsum", spec=spec, mode=mode,
+                              mults=B * M * K * N)
+
+    if mode == "standard":
+        if preferred is None:
+            return jnp.einsum(spec, x, y)
+        return jnp.einsum(spec, x, y, preferred_element_type=preferred)
+
+    # ---- canonicalize to (B, M, K) @ (B, K, N) ----
+    x, x_dims = _sum_out(x, plan.x_dims, plan.x_sum)
+    y, y_dims = _sum_out(y, plan.y_dims, plan.y_sum)
+    if plan.batch:
+        a = _to_canonical(x, x_dims, plan.batch + plan.m + plan.k, (B, M, K))
+        b = _to_canonical(y, y_dims, plan.batch + plan.k + plan.n, (B, K, N))
+        out = _batched_matmul(a, b, mode, preferred)
+    else:
+        a = _to_canonical(x, x_dims, plan.m + plan.k, (M, K))
+        b = _to_canonical(y, y_dims, plan.k + plan.n, (K, N))
+        out = fsmm.matmul(a, b, mode=mode, preferred=preferred)
+
+    # ---- restore the requested output layout ----
+    canon = plan.batch + plan.m + plan.n
+    out = out.reshape(tuple(sizes[d] for d in canon))
+    perm = tuple(canon.index(d) for d in plan.out_dims)
+    if perm != tuple(range(len(perm))):
+        out = jnp.transpose(out, perm)
+    return out

@@ -30,10 +30,20 @@ Execution modes
     HBM->VMEM tiling.  Validated in interpret mode on CPU.
 
 All square modes share correction/halving code so the algebra is written once.
+
+This module is the rank-2 contraction engine (``a[..., K] @ b[K, N]``).
+Model code does NOT call it directly: every model contraction -- dense
+layers, attention scores, batched MoE expert GEMMs, recurrent state mixes,
+the vocab GEMM -- goes through the einsum-shaped dispatcher
+:func:`repro.core.einsum.fs_einsum`, which canonicalizes arbitrary
+two-operand specs to (batch, M, K, N) form, generalizes the correction
+algebra here to batched contractions, and falls back to these kernels for
+the unbatched case.  ``matmul_mode`` (or a per-site
+``ContractionPolicy``) therefore switches the *whole model*, not just the
+dense layers.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -20,8 +20,6 @@ transformations").
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax.numpy as jnp
 import numpy as np
 

@@ -11,7 +11,7 @@ global stream.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -7,9 +7,6 @@ by the launcher / dry-run around tracing.
 from __future__ import annotations
 
 import contextlib
-from typing import Optional
-
-import jax
 
 _MESH = None
 

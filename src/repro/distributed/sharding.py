@@ -15,7 +15,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.layers.param import axes_tree, is_spec
+from repro.layers.param import is_spec
 
 __all__ = ["LOGICAL_RULES", "logical_to_spec", "param_shardings",
            "input_shardings", "act_spec", "constrain"]

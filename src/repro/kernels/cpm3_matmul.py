@@ -17,6 +17,14 @@ processes its K slab in ``kc``-wide rank-2 broadcast chunks (PM blocks of
 shape (bm, kc, bn) for the "mkn" layout or (bm, bn, kc) for the
 minor-axis-reduce "mnk" layout -- see sq_matmul.py for the trade-off).
 
+The shared subexpressions of the three squares are HOISTED out of the
+chunk loop: the combined planes ``a+b`` (rows), ``c+s`` and ``s-c``
+(columns) are formed once per grid step on rank-2 slabs, so each PM term
+inside a chunk is exactly ONE broadcast add + one square --
+    shared = ((a+b) + c)^2    u = (b + (c+s))^2    v = (a + (s-c))^2
+-- the same adds/square ratio as the real kernel, instead of the naive
+two broadcast adds per term (6 rank-3 adds per chunk down to 3).
+
 Accumulators are initialized with the row corrections (paper §9.1):
     re0 = Sab_h       im0 = Sba_h
 and the final K step halves both planes (the x2 output scale); column
@@ -38,14 +46,18 @@ __all__ = ["cpm3_matmul_kernel", "cpm3_matmul_pallas"]
 
 
 def _cpm3_body(rs, cs, axis, carry):
-    """One chunk's three squares (paper eqs 32/34) on pre-broadcast slabs."""
+    """One chunk's three squares (paper eqs 32/34) on pre-broadcast slabs.
+
+    Row slabs are (a+b, b, a); column slabs (c, c+s, s-c) -- the pairwise
+    sums hoisted once per grid step, so every square costs one broadcast
+    add here (see module docstring)."""
     re, im = carry
-    a_s, b_s = rs
-    c_s, s_s = cs
-    t = c_s + a_s + b_s
+    ab_s, b_s, a_s = rs
+    c_s, cs_s, sc_s = cs
+    t = ab_s + c_s                      # (c + a + b)
     shared = t * t                      # the square shared by Re and Im
-    u = b_s + c_s + s_s
-    v = a_s + s_s - c_s
+    u = b_s + cs_s                      # (b + c + s)
+    v = a_s + sc_s                      # (a + s - c)
     re = re + jnp.sum(shared - u * u, axis)
     im = im + jnp.sum(shared + v * v, axis)
     return re, im
@@ -61,9 +73,14 @@ def cpm3_matmul_kernel(a_ref, b_ref, c_ref, s_ref, sre_ref, sim_ref,
         re_acc[...] = sre_ref[:, 0][:, None] + jnp.zeros_like(re_acc)
         im_acc[...] = sim_ref[:, 0][:, None] + jnp.zeros_like(im_acc)
 
+    a = a_ref[...]
+    b = b_ref[...]
+    c = c_ref[...]
+    s = s_ref[...]
+    # hoisted rank-2 combined planes (once per K slab, not per PM term)
     re, im = pm_chunked_reduce(
         (re_acc[...], im_acc[...]),
-        (a_ref[...], b_ref[...]), (c_ref[...], s_ref[...]),
+        (a + b, b, a), (c, c + s, s - c),
         kc=kc, pm_layout=pm_layout, body=_cpm3_body)
     re_acc[...] = re
     im_acc[...] = im

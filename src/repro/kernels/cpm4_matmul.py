@@ -11,6 +11,15 @@ four distinct terms.  Grid semantics and K-slab chunking (``kc``,
 Per (h, i, k):
     re += (a + c)^2 + (b - s)^2        (eq 21)
     im += (b + c)^2 + (a + s)^2        (eq 22)
+
+Unlike CPM3 there is NO square shared between the planes to hoist: each
+of the four squares pairs one row plane directly with one column plane,
+already one broadcast add per PM term.  The only hoistable subexpression
+is the negated column plane ``-s`` (formed rank-2 once per grid step so
+the (b - s) term is a uniform broadcast *add* like the other three); the
+remaining ~2x-vs-3x interpret gap against ``sq_matmul`` is intrinsic --
+CPM4 does 4 squares + 4 rank-3 adds per complex multiply where the real
+kernel does 1 + 1.
 """
 from __future__ import annotations
 
@@ -27,12 +36,15 @@ __all__ = ["cpm4_matmul_kernel", "cpm4_matmul_pallas"]
 
 
 def _cpm4_body(rs, cs, axis, carry):
-    """One chunk's four squares (paper eqs 21/22) on pre-broadcast slabs."""
+    """One chunk's four squares (paper eqs 21/22) on pre-broadcast slabs.
+
+    Column slabs are (c, s, -s) with the negation hoisted to rank 2 (see
+    module docstring); every square is one broadcast add."""
     re, im = carry
     a_s, b_s = rs
-    c_s, s_s = cs
+    c_s, s_s, ns_s = cs
     t1 = a_s + c_s
-    t2 = b_s - s_s
+    t2 = b_s + ns_s                     # (b - s) via the hoisted -s plane
     t3 = b_s + c_s
     t4 = a_s + s_s
     re = re + jnp.sum(t1 * t1 + t2 * t2, axis)
@@ -51,9 +63,10 @@ def cpm4_matmul_kernel(a_ref, b_ref, c_ref, s_ref, sx_ref, re_ref, im_ref,
         re_acc[...] = sx_ref[:, 0][:, None] + jnp.zeros_like(re_acc)
         im_acc[...] = sx_ref[:, 0][:, None] + jnp.zeros_like(im_acc)
 
+    s = s_ref[...]
     re, im = pm_chunked_reduce(
         (re_acc[...], im_acc[...]),
-        (a_ref[...], b_ref[...]), (c_ref[...], s_ref[...]),
+        (a_ref[...], b_ref[...]), (c_ref[...], s, -s),
         kc=kc, pm_layout=pm_layout, body=_cpm4_body)
     re_acc[...] = re
     im_acc[...] = im

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.core import squares as sq
 from repro.kernels import tuning
-from repro.kernels.sq_matmul import sq_matmul_pallas
+from repro.kernels.sq_matmul import sq_matmul_pallas, sq_matmul_batched_pallas
 from repro.kernels.cpm3_matmul import cpm3_matmul_pallas
 from repro.kernels.cpm4_matmul import cpm4_matmul_pallas
 from repro.kernels.sq_conv import sq_conv_pallas
@@ -63,13 +63,13 @@ def _pad_operands(plan, row_ops, col_ops, row_corrs, col_corrs):
 
 
 def _resolve_plan(m, n, k, dtype, *, bm, bn, bk, kc, pm_layout, interpret,
-                  kind, n_row_ops=1, n_col_ops=1, n_acc=1):
+                  kind, n_row_ops=1, n_col_ops=1, n_acc=1, batch=1):
     """Backend-aware plan resolution (see module docstring)."""
     layout = pm_layout or ("mnk" if interpret else "mkn")
     return tuning.plan_matmul(
         m, n, k, sq.accum_dtype(dtype), bm=bm, bn=bn, bk=bk, kc=kc,
         pm_layout=layout, kind=kind, n_row_ops=n_row_ops,
-        n_col_ops=n_col_ops, n_acc=n_acc)
+        n_col_ops=n_col_ops, n_acc=n_acc, batch=batch)
 
 
 # --------------------------------------------------------------------------
@@ -91,6 +91,25 @@ def _sq_matmul_impl(a, b, plan, interpret):
     return out[:m, :n]
 
 
+@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
+def _sq_matmul_batched_impl(a, b, plan, interpret):
+    aw, bw = _widen(a, b)
+    nb, m, k = aw.shape
+    n = bw.shape[-1]
+    # corrections BEFORE padding, one vector pair per batch element
+    sa = sq.row_correction(aw, axis=-1)[..., None]          # (nb, m, 1)
+    sb = sq.col_correction(bw, axis=-2)[:, None, :]         # (nb, 1, n)
+    aw = _pad_to(_pad_to(aw, plan.bm, 1), plan.bk, 2)
+    bw = _pad_to(_pad_to(bw, plan.bk, 1), plan.bn, 2)
+    sa = _pad_to(sa, plan.bm, 1)
+    sb = _pad_to(sb, plan.bn, 2)
+    out = sq_matmul_batched_pallas(aw, bw, sa, sb, bm=plan.bm, bn=plan.bn,
+                                   bk=plan.bk, kc=plan.kc,
+                                   pm_layout=plan.pm_layout,
+                                   interpret=interpret)
+    return out[:, :m, :n]
+
+
 def sq_matmul(a, b, *, bm: int | None = None, bn: int | None = None,
               bk: int | None = None, kc: int | None = None,
               pm_layout: str | None = None, interpret: bool | None = None):
@@ -100,22 +119,39 @@ def sq_matmul(a, b, *, bm: int | None = None, bn: int | None = None,
     accumulator dtype (f32 for floats, int32 for small ints).  Tile sizes
     default to the kernels.tuning planner; explicit values are honored
     (clamped to the operand and alignment granules).
+
+    Batched form: a (B, m, k) with b (B, k, n) runs the batched kernel
+    (leading batch grid axis, one element per grid step) -- the einsum
+    dispatcher's canonical (B, M, K) @ (B, K, N) shape.  A rank>2 ``a``
+    against a 2D ``b`` keeps the dense-layer convention (leading dims
+    collapse to rows).
     """
+    interpret_r = default_interpret() if interpret is None else interpret
+    if b.ndim == 3:
+        if a.ndim != 3 or a.shape[0] != b.shape[0] or a.shape[2] != b.shape[1]:
+            raise ValueError(f"batched contraction mismatch: {a.shape} @ "
+                             f"{b.shape}")
+        nb, m, k = a.shape
+        n = b.shape[2]
+        plan = _resolve_plan(m, n, k, a.dtype, bm=bm, bn=bn, bk=bk, kc=kc,
+                             pm_layout=pm_layout, interpret=interpret_r,
+                             kind="sq_matmul", batch=nb)
+        return _sq_matmul_batched_impl(a, b, plan, interpret_r)
     if b.ndim != 2:
-        raise ValueError(f"rhs must be 2D (K, N), got {b.shape}")
+        raise ValueError(f"rhs must be 2D (K, N) or batched 3D (B, K, N), "
+                         f"got {b.shape}")
     if a.ndim != 2:
         # collapse leading batch dims to rows (dense-layer convention)
         lead = a.shape[:-1]
         out = sq_matmul(a.reshape(-1, a.shape[-1]), b, bm=bm, bn=bn, bk=bk,
                         kc=kc, pm_layout=pm_layout, interpret=interpret)
         return out.reshape(*lead, b.shape[-1])
-    interpret = default_interpret() if interpret is None else interpret
     m, k = a.shape
     n = b.shape[1]
     plan = _resolve_plan(m, n, k, a.dtype, bm=bm, bn=bn, bk=bk, kc=kc,
-                         pm_layout=pm_layout, interpret=interpret,
+                         pm_layout=pm_layout, interpret=interpret_r,
                          kind="sq_matmul")
-    return _sq_matmul_impl(a, b, plan, interpret)
+    return _sq_matmul_impl(a, b, plan, interpret_r)
 
 
 # --------------------------------------------------------------------------

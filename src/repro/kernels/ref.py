@@ -6,9 +6,6 @@ production code share one implementation of the paper's equations.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
-from repro.core import squares as sq
 from repro.core.matmul import pm_matmul_exact
 from repro.core.complexmm import cpm3_matmul
 from repro.core.conv import correlate1d

@@ -68,8 +68,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.pm_blocks import PM_LAYOUTS, pm_chunked_reduce
 
-__all__ = ["sq_matmul_kernel", "sq_matmul_pallas", "pm_block_accum",
-           "PM_LAYOUTS"]
+__all__ = ["sq_matmul_kernel", "sq_matmul_pallas", "sq_matmul_batched_kernel",
+           "sq_matmul_batched_pallas", "pm_block_accum", "PM_LAYOUTS"]
 
 
 def pm_block_accum(acc, a, b, *, kc: int, pm_layout: str):
@@ -111,6 +111,74 @@ def sq_matmul_kernel(a_ref, b_ref, sa_ref, sb_ref, out_ref, acc_ref, *,
                 acc, jnp.ones_like(acc))
         else:
             out_ref[...] = acc * 0.5
+
+
+def sq_matmul_batched_kernel(a_ref, b_ref, sa_ref, sb_ref, out_ref, acc_ref,
+                             *, nk: int, kc: int, pm_layout: str,
+                             is_int: bool):
+    """One (batch, i, j, k) grid step of the batched square-based matmul.
+
+    Identical arithmetic to :func:`sq_matmul_kernel`; the refs carry a
+    leading singleton batch-block axis (one batch element per grid step)
+    that is squeezed before the shared PM-block machinery runs.
+    """
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = sa_ref[0, :, 0][:, None] + sb_ref[0, 0, :][None, :]
+
+    acc_ref[...] = pm_block_accum(acc_ref[...], a_ref[0], b_ref[0],
+                                  kc=kc, pm_layout=pm_layout)
+
+    @pl.when(k_step == nk - 1)
+    def _finalize():
+        acc = acc_ref[...]
+        if is_int:
+            out_ref[...] = jax.lax.shift_right_arithmetic(
+                acc, jnp.ones_like(acc))[None]
+        else:
+            out_ref[...] = (acc * 0.5)[None]
+
+
+def sq_matmul_batched_pallas(a, b, sa, sb, *, bm: int = 256, bn: int = 256,
+                             bk: int = 128, kc: int | None = None,
+                             pm_layout: str = "mkn",
+                             interpret: bool = False):
+    """Batched pallas_call wrapper: a (B, m, k), b (B, k, n), corrections
+    sa (B, m, 1) / sb (B, 1, n).  One batch element per grid step on the
+    (new, outermost) batch grid axis -- batched GEMMs run natively instead
+    of collapsing to rows or falling back.  Operands pre-widened/padded as
+    in :func:`sq_matmul_pallas`."""
+    nb, m, k = a.shape
+    nb2, k2, n = b.shape
+    assert nb == nb2 and k == k2
+    assert sa.shape == (nb, m, 1) and sb.shape == (nb, 1, n)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    kc = bk if kc is None else kc
+    assert bk % kc == 0, (bk, kc)
+    nk = k // bk
+    is_int = jnp.issubdtype(a.dtype, jnp.integer)
+
+    kernel = functools.partial(sq_matmul_batched_kernel, nk=nk, kc=kc,
+                               pm_layout=pm_layout, is_int=is_int)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda bb, i, j, kk: (bb, i, kk)),
+            pl.BlockSpec((1, bk, bn), lambda bb, i, j, kk: (bb, kk, j)),
+            pl.BlockSpec((1, bm, 1), lambda bb, i, j, kk: (bb, i, 0)),
+            pl.BlockSpec((1, 1, bn), lambda bb, i, j, kk: (bb, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb, m, n), a.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), a.dtype)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(a, b, sa, sb)
 
 
 def sq_matmul_pallas(a, b, sa, sb, *, bm: int = 256, bn: int = 256,

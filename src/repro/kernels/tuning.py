@@ -35,6 +35,7 @@ import dataclasses
 import functools
 import json
 import os
+import warnings
 from typing import Iterable, Optional
 
 import jax.numpy as jnp
@@ -44,7 +45,7 @@ from repro.core import squares as sq
 
 __all__ = ["TilePlan", "plan_matmul", "plan_conv", "candidate_plans",
            "autotune_matmul", "load_cache", "save_cache", "cache_path",
-           "clear_cache"]
+           "clear_cache", "autotune_enabled"]
 
 SUBLANE = 8            # f32 sublane granule (second-minor axis)
 LANE = 128             # lane granule (minor axis)
@@ -169,6 +170,15 @@ def _model_pick(m: int, n: int, k: int, *, itemsize: int, n_row_ops: int,
 # In-process memo of loaded cache files, keyed by path -- an autotune
 # against an explicit scratch path must not repoint default-path lookups.
 _CACHE: dict[str, dict] = {}
+# Cache keys already warned about (warn ONCE per key per process).
+_WARNED_MISS: set[str] = set()
+
+
+def autotune_enabled() -> bool:
+    """``REPRO_AUTOTUNE=0`` disables the autotune cache entirely: no file
+    lookup, no miss warning -- pure cost-model planning (the escape hatch
+    for hermetic runs and for benchmarking the model-mode planner)."""
+    return os.environ.get("REPRO_AUTOTUNE", "1") != "0"
 
 
 def cache_path() -> str:
@@ -177,8 +187,21 @@ def cache_path() -> str:
         os.path.join(os.path.dirname(__file__), "tuning_cache.json"))
 
 
-def _key(kind: str, m: int, n: int, k: int, dtype) -> str:
-    return f"{kind}:{m}x{n}x{k}:{jnp.dtype(dtype).name}"
+def _key(kind: str, m: int, n: int, k: int, dtype, batch: int = 1) -> str:
+    base = f"{kind}:{m}x{n}x{k}:{jnp.dtype(dtype).name}"
+    return f"{kind}:{batch}b:{m}x{n}x{k}:{jnp.dtype(dtype).name}" \
+        if batch > 1 else base
+
+
+def _warn_cache_miss(key: str) -> None:
+    if key in _WARNED_MISS:
+        return
+    _WARNED_MISS.add(key)
+    warnings.warn(
+        f"autotune cache miss for {key}; falling back to the cost-model "
+        f"plan.  Run kernels.tuning.autotune_matmul once for this shape to "
+        f"cache an empirical winner, or set REPRO_AUTOTUNE=0 to silence.",
+        stacklevel=3)
 
 
 def load_cache(path: Optional[str] = None) -> dict:
@@ -201,8 +224,10 @@ def save_cache(cache: dict, path: Optional[str] = None) -> str:
 
 
 def clear_cache() -> None:
-    """Drop the in-process cache memo (tests; after external file edits)."""
+    """Drop the in-process cache memo and the warn-once ledger (tests;
+    after external file edits)."""
     _CACHE.clear()
+    _WARNED_MISS.clear()
 
 
 # --------------------------------------------------------------------------
@@ -214,14 +239,23 @@ def plan_matmul(m: int, n: int, k: int, dtype=jnp.float32, *,
                 bk: Optional[int] = None, kc: Optional[int] = None,
                 pm_layout: str = "mkn", kind: str = "sq_matmul",
                 n_row_ops: int = 1, n_col_ops: int = 1,
-                n_acc: int = 1) -> TilePlan:
+                n_acc: int = 1, batch: int = 1) -> TilePlan:
     """Pick the (bm, bn, bk, kc, pm_layout) plan for a matmul-shaped call.
 
     ``pm_layout`` is backend-driven, not cost-modelled: callers pass "mnk"
     for interpret/CPU execution and "mkn" for real TPU lowering (see
     kernels.sq_matmul for what each means).
 
-    Precedence: explicit user tiles > autotune cache > cost model.  Explicit
+    ``batch`` > 1 plans a batched GEMM (leading batch grid axis, one
+    element per grid step).  The per-step working set is identical to the
+    unbatched case -- the batch axis multiplies every candidate's grid
+    count uniformly, so cost-model *ranking* is batch-invariant -- but the
+    autotune cache is keyed per batch size (pipelining behaviour differs).
+
+    Precedence: explicit user tiles > autotune cache > cost model.  On an
+    autotune-cache miss the planner warns ONCE per (kind, shape, dtype)
+    key and falls back to the cost-model plan; ``REPRO_AUTOTUNE=0``
+    disables cache consultation (and the warning) entirely.  Explicit
     values are still clamped to the (padded) operand extent and aligned to
     the hardware granules, which may round them up (see module docstring).
     """
@@ -233,7 +267,9 @@ def plan_matmul(m: int, n: int, k: int, dtype=jnp.float32, *,
                         _align_kc(kc if kc is not None else pbk, pbk),
                         pm_layout)
     itemsize = jnp.dtype(dtype).itemsize
-    cached = load_cache().get(_key(kind, m, n, k, dtype))
+    use_cache = autotune_enabled()
+    key = _key(kind, m, n, k, dtype, batch)
+    cached = load_cache().get(key) if use_cache else None
     if cached is not None and bm is None and bn is None and bk is None \
             and kc is None \
             and str(cached.get("pm_layout", pm_layout)) == pm_layout:
@@ -241,6 +277,9 @@ def plan_matmul(m: int, n: int, k: int, dtype=jnp.float32, *,
         # a CPU host must not dictate "mnk" to a TPU caller.
         return TilePlan(*(int(cached[f]) for f in ("bm", "bn", "bk", "kc")),
                         pm_layout)
+    if use_cache and cached is None and bm is None and bn is None \
+            and bk is None and kc is None:
+        _warn_cache_miss(key)
     base = _model_pick(m, n, k, itemsize=itemsize, n_row_ops=n_row_ops,
                        n_col_ops=n_col_ops, n_acc=n_acc, pm_layout=pm_layout)
     pbm = _align_bm(bm if bm is not None else base.bm, m)
@@ -278,7 +317,7 @@ def autotune_matmul(shapes: Iterable[tuple[int, int, int]],
                     dtype=jnp.float32, *, kind: str = "sq_matmul",
                     pm_layouts: tuple[str, ...] = ("mnk", "mkn"),
                     max_candidates: int = 8, reps: int = 3,
-                    path: Optional[str] = None,
+                    path: Optional[str] = None, batch: int = 1,
                     verbose: bool = False) -> dict:
     """Sweep candidate plans through the wall-clock harness; cache winners.
 
@@ -292,6 +331,10 @@ def autotune_matmul(shapes: Iterable[tuple[int, int, int]],
     accumulator dtype, matching what kernels.ops looks up at plan time,
     and candidate generation uses the kind's operand/accumulator counts
     (a cpm plan is costed as a cpm plan, not as a sq_matmul one).
+
+    ``batch`` > 1 tunes the batched (leading-batch-grid-axis) kernel and
+    writes the batch-keyed cache entry that ``plan_matmul(batch=...)``
+    looks up (sq_matmul only -- the cpm kernels have no batched path).
     """
     from benchmarks import kernel_timing as kt     # lazy: benchmarks optional
 
@@ -309,12 +352,13 @@ def autotune_matmul(shapes: Iterable[tuple[int, int, int]],
                 m, n, k, *p.astuple(), itemsize=itemsize, n_row_ops=nro,
                 n_col_ops=nco, n_acc=nacc).weighted)
             for plan in plans[:max_candidates]:
-                us = kt.time_plan(kind, m, n, k, dtype, plan, reps=reps)
+                us = kt.time_plan(kind, m, n, k, dtype, plan, reps=reps,
+                                  batch=batch)
                 if verbose:
                     print(f"  {kind} {m}x{n}x{k} {plan} -> {us:.1f}us")
                 if us < best_us:
                     best, best_us = plan, us
-        cache[_key(kind, m, n, k, acc_dtype)] = {
+        cache[_key(kind, m, n, k, acc_dtype, batch)] = {
             "bm": best.bm, "bn": best.bn, "bk": best.bk, "kc": best.kc,
             "pm_layout": best.pm_layout, "us_per_call": best_us,
         }

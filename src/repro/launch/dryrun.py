@@ -29,7 +29,6 @@ from repro.distributed import context as dctx
 from repro.distributed import sharding as shd
 from repro.launch.mesh import make_production_mesh
 from repro.models.lm import build_model
-from repro.optim import adamw
 from repro.train import step as step_mod
 
 __all__ = ["dryrun_cell", "collective_bytes", "input_specs"]

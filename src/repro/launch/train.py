@@ -14,12 +14,9 @@ import argparse
 import dataclasses
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.distributed import context as dctx
-from repro.distributed import sharding as shd
 from repro.models.lm import build_model
 from repro.optim import adamw
 from repro.train import step as step_mod

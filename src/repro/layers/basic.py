@@ -1,8 +1,15 @@
-"""Basic layers, all GEMMs routed through the fair-square matmul dispatch.
+"""Basic layers, all GEMMs routed through the fair-square einsum dispatch.
 
 Every dense contraction in the framework goes through :func:`dense_apply`,
-which calls ``repro.core.matmul.matmul`` -- so switching a whole model to the
-paper's square-form arithmetic is a single config flag (``matmul_mode``).
+which routes ``repro.core.einsum.fs_einsum`` (site-labelled, policy-aware,
+counted) -- so switching a whole model to the paper's square-form
+arithmetic is a single config flag (``matmul_mode``), with optional
+per-site overrides via ``cfg.contraction_policy``.  Model-internal
+contractions that are not dense layers (attention scores, MoE expert
+batches, recurrent state mixes, the vocab GEMM) go through ``fs_einsum``
+directly at their own call sites, so the dispatch -- and the
+multiplies-replaced-by-squares counter -- covers the whole model, not
+just the dense layers.
 """
 from __future__ import annotations
 
@@ -11,7 +18,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import matmul as fsmm
+from repro.core import einsum as fse
+from repro.core import squares as sq
 from repro.layers.param import ParamSpec
 
 __all__ = ["dense_spec", "dense_apply", "embed_spec", "embed_apply",
@@ -36,7 +44,8 @@ def dense_spec(d_in: int, d_out: int, axes: Tuple[Optional[str], Optional[str]],
 
 
 def dense_tp_reduce(p, x, *, mode: Optional[str] = None, out_dtype=None,
-                    axis: str = "model", reduce_dtype=jnp.bfloat16):
+                    axis: str = "model", reduce_dtype=jnp.bfloat16,
+                    policy=None, site: str = "dense"):
     """Row-parallel dense (contraction dim sharded over ``axis``) with an
     EXPLICIT reduced-precision psum.
 
@@ -56,7 +65,8 @@ def dense_tp_reduce(p, x, *, mode: Optional[str] = None, out_dtype=None,
     K, N = w.shape[-2], w.shape[-1]
     if (mesh is None or axis not in mesh.axis_names
             or K % mesh.shape[axis] != 0):
-        return dense_apply(p, x, mode=mode, out_dtype=out_dtype)
+        return dense_apply(p, x, mode=mode, out_dtype=out_dtype,
+                           policy=policy, site=site)
     import numpy as np
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -70,7 +80,9 @@ def dense_tp_reduce(p, x, *, mode: Optional[str] = None, out_dtype=None,
     out_s = P(*bspec, *([None] * (len(lead) - 1)), None)
 
     def body(wl, xl):
-        part = fsmm.matmul(xl.reshape(-1, xl.shape[-1]), wl, mode=mode)
+        part = fse.fs_einsum("tk,kn->tn", xl.reshape(-1, xl.shape[-1]), wl,
+                             mode=mode, policy=policy, site=site,
+                             preferred=sq.accum_dtype(xl.dtype))
         part = part.astype(reduce_dtype)
         part = jax.lax.psum(part, axis)
         return part.reshape(*xl.shape[:-1], wl.shape[-1])
@@ -84,11 +96,14 @@ def dense_tp_reduce(p, x, *, mode: Optional[str] = None, out_dtype=None,
     return out
 
 
-def dense_apply(p, x, *, mode: Optional[str] = None, out_dtype=None):
+def dense_apply(p, x, *, mode: Optional[str] = None, out_dtype=None,
+                policy=None, site: str = "dense"):
     """x[..., d_in] @ w[d_in, d_out] through the fair-square dispatch."""
     w = p["w"]
     lead = x.shape[:-1]
-    out = fsmm.matmul(x.reshape(-1, x.shape[-1]), w, mode=mode)
+    out = fse.fs_einsum("tk,kn->tn", x.reshape(-1, x.shape[-1]), w,
+                        mode=mode, policy=policy, site=site,
+                        preferred=sq.accum_dtype(x.dtype))
     out = out.reshape(*lead, w.shape[-1])
     if "b" in p:
         out = out + p["b"].astype(out.dtype)

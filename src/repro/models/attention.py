@@ -1,19 +1,25 @@
 """Attention: GQA/MHA with RoPE, sliding windows, cross-attention, and a
 memory-bounded chunked (flash-style) softmax for long-context prefill.
 
-All projections route through the fair-square dense dispatch.
+Every contraction -- projections AND the softmax-path score/PV einsums --
+routes through the fair-square einsum dispatch (``fs_einsum``), with
+per-site policy overrides: sites ``attn_qkv`` / ``attn_out`` for the
+weight GEMMs and ``attn_scores`` / ``attn_pv`` for the softmax path (the
+pair a :data:`repro.configs.base.SQUARE_GEMMS_POLICY` keeps on the
+multiplier baseline).
 
 Layouts: activations (B, S, D); q (B, S, KV, G, hd) with G = H // KV
 (grouped-query); k/v (B, T, KV, hd).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import counting
+from repro.core.einsum import fs_einsum
 from repro.layers import basic
 from repro.layers.param import ParamSpec
 
@@ -59,27 +65,30 @@ def attn_spec(cfg, stack: int = 0, cross: bool = False):
     return spec
 
 
-def _proj_in(p, x, n, hd, mode):
+def _proj_in(p, x, n, hd, mode, policy=None):
     """x[..., d] @ w[d, n, hd] -> (..., n, hd), through fair-square dispatch."""
     w = p["w"]
     d = w.shape[-3]
-    out = basic.dense_apply({"w": w.reshape(d, n * hd)}, x, mode=mode)
+    out = basic.dense_apply({"w": w.reshape(d, n * hd)}, x, mode=mode,
+                            policy=policy, site="attn_qkv")
     out = out.reshape(*x.shape[:-1], n, hd)
     if "b" in p:
         out = out + p["b"].astype(out.dtype)
     return out
 
 
-def _proj_out(p, x, mode, out_dtype, tp_reduce: bool = False):
+def _proj_out(p, x, mode, out_dtype, tp_reduce: bool = False, policy=None):
     """x[..., h, hd] @ w[h, hd, d] -> (..., d)."""
     w = p["w"]
     h, hd, d = w.shape[-3:]
     p2 = {"w": w.reshape(h * hd, d)}
     xf = x.reshape(*x.shape[:-2], h * hd)
     if tp_reduce:
-        out = basic.dense_tp_reduce(p2, xf, mode=mode)
+        out = basic.dense_tp_reduce(p2, xf, mode=mode, policy=policy,
+                                    site="attn_out")
     else:
-        out = basic.dense_apply(p2, xf, mode=mode)
+        out = basic.dense_apply(p2, xf, mode=mode, policy=policy,
+                                site="attn_out")
     if "b" in p:
         out = out + p["b"].astype(out.dtype)
     return out.astype(out_dtype)
@@ -98,7 +107,8 @@ def _softcap(scores, cap: float):
 def chunked_attention(q, k, v, q_pos, kv_pos, *, causal: bool,
                       window: Optional[int], chunk_q: int, chunk_kv: int,
                       softcap: float = 0.0, block_skip: bool = False,
-                      p_bf16: bool = False, fold_q: bool = False):
+                      p_bf16: bool = False, fold_q: bool = False,
+                      mode: Optional[str] = None, policy=None):
     """Online-softmax attention, O(chunk_q * chunk_kv) live scores.
 
     q: (B, S, KV, G, hd); k, v: (B, T, KV, hd); positions are absolute.
@@ -137,7 +147,8 @@ def chunked_attention(q, k, v, q_pos, kv_pos, *, causal: bool,
         def kv_step(carry, kv_in):
             m, l, acc = carry
             kc, vc, kpc = kv_in
-            s = jnp.einsum("bqkgh,bckh->bkgqc", qf, kc.astype(jnp.float32))
+            s = fs_einsum("bqkgh,bckh->bkgqc", qf, kc.astype(jnp.float32),
+                          mode=mode, policy=policy, site="attn_scores")
             s = _softcap(s, softcap)
             mask = kpc[None, :] < 2**29          # padded kv slots never attend
             if causal:
@@ -152,11 +163,13 @@ def chunked_attention(q, k, v, q_pos, kv_pos, *, causal: bool,
             if p_bf16:
                 # halve the HBM round-trip of the probability tensor:
                 # accumulate stays f32 (preferred_element_type)
-                pv = jnp.einsum("bkgqc,bckh->bkgqh", p.astype(jnp.bfloat16),
-                                vc, preferred_element_type=jnp.float32)
+                pv = fs_einsum("bkgqc,bckh->bkgqh", p.astype(jnp.bfloat16),
+                               vc, mode=mode, policy=policy, site="attn_pv",
+                               preferred=jnp.float32)
             else:
-                pv = jnp.einsum("bkgqc,bckh->bkgqh", p,
-                                vc.astype(jnp.float32))
+                pv = fs_einsum("bkgqc,bckh->bkgqh", p,
+                               vc.astype(jnp.float32),
+                               mode=mode, policy=policy, site="attn_pv")
             acc_new = acc * corr[..., None] + pv
             return (m_new, l_new, acc_new), None
 
@@ -165,7 +178,8 @@ def chunked_attention(q, k, v, q_pos, kv_pos, *, causal: bool,
         a0 = jnp.zeros((B, KV, G, cq, hd), jnp.float32)
         xs = ((kb, vb, kposb) if n_kv is None
               else (kb[:n_kv], vb[:n_kv], kposb[:n_kv]))
-        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs)
+        with counting.count_scale(nk if n_kv is None else n_kv):
+            (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), xs)
         out = acc / jnp.maximum(l, 1e-30)[..., None]
         return jnp.moveaxis(out, 3, 1)                          # (B,cq,KV,G,hd)
 
@@ -181,7 +195,8 @@ def chunked_attention(q, k, v, q_pos, kv_pos, *, causal: bool,
         mesh = dctx.current_mesh()
         if mesh is not None:
             qb = shd.constrain(qb, mesh, "q_chunks", "batch")
-        outs = jax.vmap(q_block)(qb, qposb)
+        with counting.count_scale(nq):
+            outs = jax.vmap(q_block)(qb, qposb)
         if mesh is not None:
             outs = shd.constrain(outs, mesh, "q_chunks", "batch")
     elif block_skip and causal and window is None:
@@ -192,14 +207,16 @@ def chunked_attention(q, k, v, q_pos, kv_pos, *, causal: bool,
             blocks.append(q_block(qb[qi], qposb[qi], n_kv=n_kv))
         outs = jnp.stack(blocks)
     else:
-        outs = jax.lax.map(lambda args: q_block(*args), (qb, qposb))
+        with counting.count_scale(nq):
+            outs = jax.lax.map(lambda args: q_block(*args), (qb, qposb))
     out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * cq, KV, G, hd)
     return out[:, :S].astype(q.dtype)
 
 
 def attn_forward(p, x, *, cfg, positions, causal: bool = True,
                  window: Optional[int] = None, cross_x=None,
-                 cross_positions=None, mode: Optional[str] = None):
+                 cross_positions=None, mode: Optional[str] = None,
+                 policy=None):
     """Full-sequence attention (train / prefill).  Returns (out, (k, v)) so
     callers can seed KV caches.  ``cross_x`` switches to cross-attention
     (K/V from the encoder stream; no causal mask, no rope on K)."""
@@ -208,10 +225,10 @@ def attn_forward(p, x, *, cfg, positions, causal: bool = True,
     H, KV = cfg.n_heads, cfg.n_kv_heads
     G = H // KV
 
-    q = _proj_in(p["wq"], x, H, hd, mode)
+    q = _proj_in(p["wq"], x, H, hd, mode, policy)
     kv_src = cross_x if cross_x is not None else x
-    k = _proj_in(p["wk"], kv_src, KV, hd, mode)
-    v = _proj_in(p["wv"], kv_src, KV, hd, mode)
+    k = _proj_in(p["wk"], kv_src, KV, hd, mode, policy)
+    v = _proj_in(p["wv"], kv_src, KV, hd, mode, policy)
     k = k.astype(jnp.dtype(cfg.dtype))
     v = v.astype(jnp.dtype(cfg.dtype))
     q = q.astype(jnp.dtype(cfg.dtype))
@@ -233,14 +250,15 @@ def attn_forward(p, x, *, cfg, positions, causal: bool = True,
                             softcap=cfg.attn_logit_softcap,
                             block_skip=cfg.attn_block_skip,
                             p_bf16=cfg.attn_p_bf16,
-                            fold_q=cfg.attn_fold_q)
+                            fold_q=cfg.attn_fold_q,
+                            mode=mode, policy=policy)
     out = out.reshape(B, S, H, hd)
     return _proj_out(p["wo"], out, mode, x.dtype,
-                     tp_reduce=cfg.tp_bf16_reduce), (k, v)
+                     tp_reduce=cfg.tp_bf16_reduce, policy=policy), (k, v)
 
 
 def attn_decode(p, x, cache, pos, *, cfg, window: Optional[int] = None,
-                cross_cache=None, mode: Optional[str] = None):
+                cross_cache=None, mode: Optional[str] = None, policy=None):
     """Single-token decode.  x: (B, 1, D); cache: dict(k, v) with layout
     (B, T, KV, hd) (ring buffer when ``window``).
 
@@ -260,7 +278,7 @@ def attn_decode(p, x, cache, pos, *, cfg, window: Optional[int] = None,
     lockstep = (jnp.ndim(pos) == 0)
     pos_b = jnp.broadcast_to(pos, (B,)) if lockstep else pos
 
-    q = _proj_in(p["wq"], x, H, hd, mode).astype(dt)
+    q = _proj_in(p["wq"], x, H, hd, mode, policy).astype(dt)
 
     if cross_cache is not None:
         k, v = cross_cache["k"], cross_cache["v"]
@@ -269,8 +287,8 @@ def attn_decode(p, x, cache, pos, *, cfg, window: Optional[int] = None,
         qr = q
         new_cache = cache
     else:
-        k1 = _proj_in(p["wk"], x, KV, hd, mode).astype(dt)
-        v1 = _proj_in(p["wv"], x, KV, hd, mode).astype(dt)
+        k1 = _proj_in(p["wk"], x, KV, hd, mode, policy).astype(dt)
+        v1 = _proj_in(p["wv"], x, KV, hd, mode, policy).astype(dt)
         qr = basic.rope(q, pos_b[:, None], cfg.rope_theta)
         k1 = basic.rope(k1, pos_b[:, None], cfg.rope_theta)
         T = cache["k"].shape[1]
@@ -304,14 +322,16 @@ def attn_decode(p, x, cache, pos, *, cfg, window: Optional[int] = None,
             valid &= (pos_b[:, None] - kv_abs) < window
 
     qf = qr.reshape(B, 1, KV, G, hd).astype(jnp.float32) * hd ** -0.5
-    s = jnp.einsum("bqkgh,btkh->bkgqt", qf, k.astype(jnp.float32))
+    s = fs_einsum("bqkgh,btkh->bkgqt", qf, k.astype(jnp.float32),
+                  mode=mode, policy=policy, site="attn_scores")
     s = _softcap(s, cfg.attn_logit_softcap)
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgqt,btkh->bqkgh", w, v.astype(jnp.float32))
+    out = fs_einsum("bkgqt,btkh->bqkgh", w, v.astype(jnp.float32),
+                    mode=mode, policy=policy, site="attn_pv")
     out = out.reshape(B, 1, H, hd).astype(dt)
     return _proj_out(p["wo"], out, mode, x.dtype,
-                     tp_reduce=cfg.tp_bf16_reduce), new_cache
+                     tp_reduce=cfg.tp_bf16_reduce, policy=policy), new_cache
 
 
 def init_kv_cache(cfg, batch: int, max_len: int, window: Optional[int] = None):

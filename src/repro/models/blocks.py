@@ -10,7 +10,7 @@ Every layer is ``kind`` in {attn, moe, mlstm, slstm, rglru, lattn, xdec}:
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -68,14 +68,15 @@ def _window_for(kind, cfg):
     return cfg.window
 
 
-def _apply_moe(p, x, cfg, mode):
+def _apply_moe(p, x, cfg, mode, policy=None):
     """Dispatch MoE locally or through shard_map under a mesh (see moe.py)."""
     from repro.distributed import context as dctx
     B, S, D = x.shape
     xt = x.reshape(B * S, D)
     mesh = dctx.current_mesh()
     if mesh is None:
-        out, aux = moe_mod.moe_apply_local(p, xt, cfg=cfg, mode=mode)
+        out, aux = moe_mod.moe_apply_local(p, xt, cfg=cfg, mode=mode,
+                                           policy=policy)
     else:
         import numpy as np
         from jax.sharding import PartitionSpec as P
@@ -88,7 +89,7 @@ def _apply_moe(p, x, cfg, mode):
 
         def body(pp, xx):
             out, aux = moe_mod.moe_apply_local(
-                pp, xx, cfg=cfg, mode=mode,
+                pp, xx, cfg=cfg, mode=mode, policy=policy,
                 psum_axes=(model_ax,) if model_ax else None)
             if data_axes:
                 aux = jax.lax.pmean(aux, data_axes)
@@ -112,18 +113,19 @@ def _apply_moe(p, x, cfg, mode):
 def block_forward(kind: str, p, x, ctx) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
     """Full-sequence block pass.
 
-    ctx: dict(positions, mode, cross_x, cross_positions, cfg, causal).
+    ctx: dict(positions, mode, policy, cross_x, cross_positions, cfg, causal).
     Returns (x_out, cache_seed, aux_loss).
     """
     cfg = ctx["cfg"]
     mode = ctx["mode"]
+    policy = ctx.get("policy")
     aux = jnp.zeros((), jnp.float32)
     h = _norm_apply(cfg, p["ln1"], x)
     if kind in ("attn", "moe", "lattn", "xdec"):
         out, kv = attn.attn_forward(
             p["attn"], h, cfg=cfg, positions=ctx["positions"],
             causal=ctx.get("causal", True), window=_window_for(kind, cfg),
-            mode=mode)
+            mode=mode, policy=policy)
         x = x + out
         cache = {"k": kv[0], "v": kv[1]}
         if kind == "xdec":
@@ -131,29 +133,34 @@ def block_forward(kind: str, p, x, ctx) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
             outx, xkv = attn.attn_forward(
                 p["xattn"], hx, cfg=cfg, positions=ctx["positions"],
                 cross_x=ctx["cross_x"], cross_positions=ctx["cross_positions"],
-                mode=mode)
+                mode=mode, policy=policy)
             x = x + outx
             cache["xk"], cache["xv"] = xkv
         if cfg.d_ff:
             h2 = _norm_apply(cfg, p["ln2"], x)
             if kind == "moe":
-                out2, aux = _apply_moe(p["ffn"], h2, cfg, mode)
+                out2, aux = _apply_moe(p["ffn"], h2, cfg, mode, policy)
             else:
-                out2 = ffn_mod.ffn_apply(p["ffn"], h2, cfg=cfg, mode=mode)
+                out2 = ffn_mod.ffn_apply(p["ffn"], h2, cfg=cfg, mode=mode,
+                                         policy=policy)
             x = x + out2
         return x, cache, aux
     if kind == "mlstm":
-        out, state = xlstm_mod.mlstm_forward(p["mix"], h, cfg=cfg, mode=mode)
+        out, state = xlstm_mod.mlstm_forward(p["mix"], h, cfg=cfg, mode=mode,
+                                             policy=policy)
         return x + out, state, aux
     if kind == "slstm":
-        out, state = xlstm_mod.slstm_forward(p["mix"], h, cfg=cfg, mode=mode)
+        out, state = xlstm_mod.slstm_forward(p["mix"], h, cfg=cfg, mode=mode,
+                                             policy=policy)
         return x + out, state, aux
     if kind == "rglru":
-        out, state = rglru_mod.rglru_forward(p["mix"], h, cfg=cfg, mode=mode)
+        out, state = rglru_mod.rglru_forward(p["mix"], h, cfg=cfg, mode=mode,
+                                             policy=policy)
         x = x + out
         if cfg.d_ff:
             h2 = _norm_apply(cfg, p["ln2"], x)
-            x = x + ffn_mod.ffn_apply(p["ffn"], h2, cfg=cfg, mode=mode)
+            x = x + ffn_mod.ffn_apply(p["ffn"], h2, cfg=cfg, mode=mode,
+                                      policy=policy)
         return x, state, aux
     raise ValueError(kind)
 
@@ -162,12 +169,14 @@ def block_decode(kind: str, p, x, cache, ctx) -> Tuple[jnp.ndarray, Any]:
     """Single-token decode step.  x: (B, 1, D)."""
     cfg = ctx["cfg"]
     mode = ctx["mode"]
+    policy = ctx.get("policy")
     pos = ctx["pos"]                       # (B,) absolute position
     h = _norm_apply(cfg, p["ln1"], x)
     if kind in ("attn", "moe", "lattn", "xdec"):
         out, new_kv = attn.attn_decode(
             p["attn"], h, {k: cache[k] for k in ("k", "v", "pos")}, pos,
-            cfg=cfg, window=_window_for(kind, cfg), mode=mode)
+            cfg=cfg, window=_window_for(kind, cfg), mode=mode,
+            policy=policy)
         x = x + out
         new_cache = dict(cache)
         new_cache.update(new_kv)
@@ -175,28 +184,34 @@ def block_decode(kind: str, p, x, cache, ctx) -> Tuple[jnp.ndarray, Any]:
             hx = _norm_apply(cfg, p["lnx"], x)
             outx, _ = attn.attn_decode(
                 p["xattn"], hx, None, pos, cfg=cfg,
-                cross_cache={"k": cache["xk"], "v": cache["xv"]}, mode=mode)
+                cross_cache={"k": cache["xk"], "v": cache["xv"]}, mode=mode,
+                policy=policy)
             x = x + outx
         if cfg.d_ff:
             h2 = _norm_apply(cfg, p["ln2"], x)
             if kind == "moe":
-                out2, _ = _apply_moe(p["ffn"], h2, cfg, mode)
+                out2, _ = _apply_moe(p["ffn"], h2, cfg, mode, policy)
             else:
-                out2 = ffn_mod.ffn_apply(p["ffn"], h2, cfg=cfg, mode=mode)
+                out2 = ffn_mod.ffn_apply(p["ffn"], h2, cfg=cfg, mode=mode,
+                                         policy=policy)
             x = x + out2
         return x, new_cache
     if kind == "mlstm":
-        out, state = xlstm_mod.mlstm_decode(p["mix"], h, cache, cfg=cfg, mode=mode)
+        out, state = xlstm_mod.mlstm_decode(p["mix"], h, cache, cfg=cfg,
+                                            mode=mode, policy=policy)
         return x + out, state
     if kind == "slstm":
-        out, state = xlstm_mod.slstm_decode(p["mix"], h, cache, cfg=cfg, mode=mode)
+        out, state = xlstm_mod.slstm_decode(p["mix"], h, cache, cfg=cfg,
+                                            mode=mode, policy=policy)
         return x + out, state
     if kind == "rglru":
-        out, state = rglru_mod.rglru_decode(p["mix"], h, cache, cfg=cfg, mode=mode)
+        out, state = rglru_mod.rglru_decode(p["mix"], h, cache, cfg=cfg,
+                                            mode=mode, policy=policy)
         x = x + out
         if cfg.d_ff:
             h2 = _norm_apply(cfg, p["ln2"], x)
-            x = x + ffn_mod.ffn_apply(p["ffn"], h2, cfg=cfg, mode=mode)
+            x = x + ffn_mod.ffn_apply(p["ffn"], h2, cfg=cfg, mode=mode,
+                                      policy=policy)
         return x, state
     raise ValueError(kind)
 

@@ -24,15 +24,18 @@ def ffn_spec(cfg, stack: int = 0):
     return spec
 
 
-def ffn_apply(p, x, *, cfg, mode: Optional[str] = None):
-    up = basic.dense_apply(p["w_up"], x, mode=mode)
+def ffn_apply(p, x, *, cfg, mode: Optional[str] = None, policy=None):
+    up = basic.dense_apply(p["w_up"], x, mode=mode, policy=policy, site="ffn")
     if "w_gate" in p:
-        gate = basic.dense_apply(p["w_gate"], x, mode=mode)
+        gate = basic.dense_apply(p["w_gate"], x, mode=mode, policy=policy,
+                                 site="ffn")
         h = basic.activation(cfg.activation, up, gate)
     else:
         h = basic.activation(cfg.activation, up)
     h = h.astype(x.dtype)
     if cfg.tp_bf16_reduce:
         return basic.dense_tp_reduce(p["w_down"], h, mode=mode,
-                                     out_dtype=x.dtype)
-    return basic.dense_apply(p["w_down"], h, mode=mode, out_dtype=x.dtype)
+                                     out_dtype=x.dtype, policy=policy,
+                                     site="ffn")
+    return basic.dense_apply(p["w_down"], h, mode=mode, out_dtype=x.dtype,
+                             policy=policy, site="ffn")

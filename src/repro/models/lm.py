@@ -11,14 +11,15 @@ a leading period axis and are threaded through the scan.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import counting
+from repro.core.einsum import fs_einsum
 from repro.layers import basic
-from repro.layers.param import ParamSpec, init_tree, abstract_tree, count_params
+from repro.layers.param import init_tree, abstract_tree, count_params
 from repro.models import blocks as blk
 
 __all__ = ["LM", "build_model"]
@@ -102,8 +103,8 @@ class LM:
         cfg = self.cfg
         x = batch["frames"].astype(jnp.dtype(cfg.dtype))
         S = x.shape[1]
-        ctx = {"cfg": cfg, "mode": mode, "positions": jnp.arange(S),
-               "causal": False}
+        ctx = {"cfg": cfg, "mode": mode, "policy": cfg.contraction_policy,
+               "positions": jnp.arange(S), "causal": False}
 
         def body(x, p):
             x, _, _ = blk.block_forward("attn", p, x, ctx)
@@ -111,7 +112,8 @@ class LM:
 
         if cfg.remat != "none":
             body = jax.checkpoint(body)
-        x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"]["pos0"])
+        with counting.count_scale(cfg.encoder_layers):
+            x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"]["pos0"])
         if cfg.norm == "layernorm":
             x = basic.layernorm_apply(params["encoder"]["norm"], x)
         else:
@@ -130,7 +132,8 @@ class LM:
         x = self._embed_in(params, batch)
         S = x.shape[1]
         positions = jnp.arange(S)
-        ctx = {"cfg": cfg, "mode": mode, "positions": positions, "causal": True}
+        ctx = {"cfg": cfg, "mode": mode, "policy": cfg.contraction_policy,
+               "positions": positions, "causal": True}
         if cfg.encoder_layers:
             enc = self._encode(params, batch, mode)
             ctx["cross_x"] = enc
@@ -159,8 +162,9 @@ class LM:
                     policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
             elif cfg.remat != "none":
                 body = jax.checkpoint(body, prevent_cse=False)
-            x, (auxs, cache_scan) = jax.lax.scan(
-                body, x, {k: params["scan"][k] for k in params["scan"]})
+            with counting.count_scale(n_scan):
+                x, (auxs, cache_scan) = jax.lax.scan(
+                    body, x, {k: params["scan"][k] for k in params["scan"]})
             aux_total = aux_total + jnp.sum(auxs)
             if collect_cache:
                 caches["scan"] = cache_scan
@@ -183,9 +187,11 @@ class LM:
     def logits(self, params, hidden):
         """Full logits (small models / tests only -- training uses the
         chunked fused loss in repro.train.loss)."""
+        cfg = self.cfg
         table = params["embed"]["table"]
-        return jnp.einsum("bsd,vd->bsv", hidden.astype(jnp.float32),
-                          table.astype(jnp.float32))
+        return fs_einsum("bsd,vd->bsv", hidden.astype(jnp.float32),
+                         table.astype(jnp.float32), mode=cfg.matmul_mode,
+                         policy=cfg.contraction_policy, site="logits")
 
     # ------------------------------------------------------------- cache
     def init_cache(self, batch_size: int, cache_len: int):
@@ -217,7 +223,8 @@ class LM:
         dec_kind = {"attn": "xdec"} if cfg.encoder_layers else {}
         x = basic.embed_apply(params["embed"], tokens)
         x = (x * (cfg.d_model ** 0.5)).astype(jnp.dtype(cfg.dtype))
-        ctx = {"cfg": cfg, "mode": mode, "pos": pos}
+        ctx = {"cfg": cfg, "mode": mode, "policy": cfg.contraction_policy,
+               "pos": pos}
 
         if n_scan:
             def body(x, sl):
@@ -230,7 +237,9 @@ class LM:
                     new_c[f"pos{i}"] = nc
                 return x, new_c
 
-            x, new_scan = jax.lax.scan(body, x, (params["scan"], cache["scan"]))
+            with counting.count_scale(n_scan):
+                x, new_scan = jax.lax.scan(body, x,
+                                           (params["scan"], cache["scan"]))
             cache = dict(cache)
             cache["scan"] = new_scan
         for i, k in enumerate(tail):

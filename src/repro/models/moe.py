@@ -20,7 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.layers import basic
+from repro.core.einsum import fs_einsum
 from repro.layers.param import ParamSpec
 
 __all__ = ["moe_spec", "moe_apply_local", "moe_capacity"]
@@ -54,7 +54,7 @@ def moe_capacity(n_tokens: int, cfg) -> int:
 
 
 def moe_apply_local(p, x, *, cfg, mode: Optional[str] = None,
-                    psum_axes=None):
+                    psum_axes=None, policy=None):
     """MoE over a local token block.  x: (T, D) (callers flatten B*S).
 
     ``psum_axes``: mesh axis names to psum the down-projection over when the
@@ -65,7 +65,8 @@ def moe_apply_local(p, x, *, cfg, mode: Optional[str] = None,
     E, K = cfg.n_experts, cfg.topk
     C = moe_capacity(T, cfg)
 
-    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), p["router"]["w"])
+    logits = fs_einsum("td,de->te", x.astype(jnp.float32), p["router"]["w"],
+                       mode=mode, policy=policy, site="moe_router")
     probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
     gate_vals, expert_idx = jax.lax.top_k(probs, K)              # (T, K)
     gate_vals = gate_vals / jnp.maximum(
@@ -88,12 +89,16 @@ def moe_apply_local(p, x, *, cfg, mode: Optional[str] = None,
     buf = jnp.zeros((E * C + 1, D), xt.dtype).at[dest].set(xt[st])
     eb = buf[: E * C].reshape(E, C, D)
 
-    # ---- batched expert GEMMs (einsum over the expert axis) ----
-    gate_h = jnp.einsum("ecd,edf->ecf", eb, p["w_gate"]["w"])
-    up_h = jnp.einsum("ecd,edf->ecf", eb, p["w_up"]["w"])
+    # ---- batched expert GEMMs (fair-square dispatch over the expert axis) ----
+    gate_h = fs_einsum("ecd,edf->ecf", eb, p["w_gate"]["w"],
+                       mode=mode, policy=policy, site="moe_expert")
+    up_h = fs_einsum("ecd,edf->ecf", eb, p["w_up"]["w"],
+                     mode=mode, policy=policy, site="moe_expert")
     h = (jax.nn.silu(gate_h.astype(jnp.float32)) * up_h.astype(jnp.float32))
     h = h.astype(xt.dtype)
-    y = jnp.einsum("ecf,efd->ecd", h, p["w_down"]["w"]).astype(jnp.float32)
+    y = fs_einsum("ecf,efd->ecd", h, p["w_down"]["w"],
+                  mode=mode, policy=policy,
+                  site="moe_expert").astype(jnp.float32)
     if psum_axes:
         y = jax.lax.psum(y, psum_axes)                           # TP combine
 

@@ -15,8 +15,7 @@ keeps a (width-1)-sample state for decode.
 """
 from __future__ import annotations
 
-import math
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -65,9 +64,15 @@ def _conv1d_causal(x, w, state=None):
     return out, new_state
 
 
-def _gates(p, xb):
-    r = jax.nn.sigmoid(basic.dense_apply(p["w_r"], xb).astype(jnp.float32))
-    i = jax.nn.sigmoid(basic.dense_apply(p["w_i"], xb).astype(jnp.float32))
+def _gates(p, xb, mode=None, policy=None):
+    # gate projections route through the dispatch like every other GEMM
+    # (they previously bypassed ``mode`` and always ran the process default)
+    r = jax.nn.sigmoid(
+        basic.dense_apply(p["w_r"], xb, mode=mode, policy=policy,
+                          site="recurrent_gates").astype(jnp.float32))
+    i = jax.nn.sigmoid(
+        basic.dense_apply(p["w_i"], xb, mode=mode, policy=policy,
+                          site="recurrent_gates").astype(jnp.float32))
     log_a = -_C * jax.nn.softplus(p["lam"]["w"]) * r        # (B, S, R), <= 0
     a = jnp.exp(log_a)
     gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
@@ -82,15 +87,18 @@ def rglru_init_state(cfg, batch: int):
                               jnp.dtype(cfg.dtype))}
 
 
-def rglru_forward(p, x, *, cfg, state=None, mode: Optional[str] = None):
+def rglru_forward(p, x, *, cfg, state=None, mode: Optional[str] = None,
+                  policy=None):
     """Full-sequence forward.  Returns (y, final_state)."""
     B, S, D = x.shape
     if state is None:
         state = rglru_init_state(cfg, B)
-    xb = basic.dense_apply(p["w_x"], x, mode=mode, out_dtype=x.dtype)
-    gate = basic.dense_apply(p["w_gate"], x, mode=mode)
+    xb = basic.dense_apply(p["w_x"], x, mode=mode, out_dtype=x.dtype,
+                           policy=policy, site="recurrent_proj")
+    gate = basic.dense_apply(p["w_gate"], x, mode=mode, policy=policy,
+                             site="recurrent_proj")
     xb, conv_state = _conv1d_causal(xb, p["conv"]["w"], state["conv"])
-    a, gx = _gates(p, xb)
+    a, gx = _gates(p, xb, mode, policy)
     # h_t = a_t h_{t-1} + gx_t  -- diagonal linear recurrence, assoc. scan.
     # Fold the carried-in state as an extra leading step.
     a0 = jnp.ones((B, 1, a.shape[-1]), a.dtype)
@@ -106,20 +114,25 @@ def rglru_forward(p, x, *, cfg, state=None, mode: Optional[str] = None):
     h = hs[:, 1:]                                            # drop seed step
     new_state = {"h": h[:, -1], "conv": conv_state}
     merged = h.astype(x.dtype) * jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype)
-    y = basic.dense_apply(p["w_out"], merged, mode=mode, out_dtype=x.dtype)
+    y = basic.dense_apply(p["w_out"], merged, mode=mode, out_dtype=x.dtype,
+                          policy=policy, site="recurrent_proj")
     return y, new_state
 
 
-def rglru_decode(p, x, state, *, cfg, mode: Optional[str] = None):
+def rglru_decode(p, x, state, *, cfg, mode: Optional[str] = None,
+                 policy=None):
     """Single-token decode (sequential step)."""
     B, S, D = x.shape                       # S == 1
-    xb = basic.dense_apply(p["w_x"], x, mode=mode, out_dtype=x.dtype)
-    gate = basic.dense_apply(p["w_gate"], x, mode=mode)
+    xb = basic.dense_apply(p["w_x"], x, mode=mode, out_dtype=x.dtype,
+                           policy=policy, site="recurrent_proj")
+    gate = basic.dense_apply(p["w_gate"], x, mode=mode, policy=policy,
+                             site="recurrent_proj")
     xb, conv_state = _conv1d_causal(xb, p["conv"]["w"], state["conv"])
-    a, gx = _gates(p, xb)
+    a, gx = _gates(p, xb, mode, policy)
     h = a[:, 0] * state["h"] + gx[:, 0]
     new_state = {"h": h, "conv": conv_state}
     merged = h[:, None].astype(x.dtype) * jax.nn.gelu(
         gate.astype(jnp.float32)).astype(x.dtype)
-    y = basic.dense_apply(p["w_out"], merged, mode=mode, out_dtype=x.dtype)
+    y = basic.dense_apply(p["w_out"], merged, mode=mode, out_dtype=x.dtype,
+                          policy=policy, site="recurrent_proj")
     return y, new_state

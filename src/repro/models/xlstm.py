@@ -15,11 +15,13 @@ xlstm-350m config follows the paper's 7:1-style sparse placement).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import counting
+from repro.core.einsum import fs_einsum
 from repro.layers import basic
 from repro.layers.param import ParamSpec
 
@@ -53,8 +55,9 @@ def mlstm_spec(cfg, stack: int = 0):
     }
 
 
-def _mlstm_gates(p, xi):
-    g = jnp.einsum("...d,dg->...g", xi.astype(jnp.float32), p["w_if"]["w"])
+def _mlstm_gates(p, xi, mode=None, policy=None):
+    g = fs_einsum("...d,dg->...g", xi.astype(jnp.float32), p["w_if"]["w"],
+                  mode=mode, policy=policy, site="recurrent_gates")
     it = g[..., 0]                                   # log input gate
     ft = jax.nn.log_sigmoid(g[..., 1])               # log forget gate
     return it, ft
@@ -64,7 +67,8 @@ def _heads(x, h):
     return x.reshape(*x.shape[:-1], h, x.shape[-1] // h)
 
 
-def mlstm_chunk_scan(q, k, v, it, ft, state, chunk: int):
+def mlstm_chunk_scan(q, k, v, it, ft, state, chunk: int, *,
+                     mode=None, policy=None):
     """Chunkwise-parallel stabilized mLSTM.
 
     q,k,v: (B, H, S, hd) f32; it, ft: (B, H, S) log-gates;
@@ -87,6 +91,10 @@ def mlstm_chunk_scan(q, k, v, it, ft, state, chunk: int):
     fts = jnp.moveaxis(ft.reshape(B, H, nc, c), 2, 0)
     scale = hd ** -0.5
 
+    def mix(spec, a, b):
+        return fs_einsum(spec, a, b, mode=mode, policy=policy,
+                         site="recurrent_mix")
+
     def step(carry, blk):
         C, n, m = carry
         qc, kc, vc, ic, fc = blk
@@ -98,15 +106,15 @@ def mlstm_chunk_scan(q, k, v, it, ft, state, chunk: int):
         m_new = jnp.maximum(m[..., None] + b, m_loc)         # (B,H,c)
         # inter-chunk
         q_eff = qc * (scale * jnp.exp(m[..., None] + b - m_new))[..., None]
-        h_inter = jnp.einsum("bhcx,bhxd->bhcd", q_eff, C)
-        n_inter = jnp.einsum("bhcx,bhx->bhc", q_eff, n)
+        h_inter = mix("bhcx,bhxd->bhcd", q_eff, C)
+        n_inter = mix("bhcx,bhx->bhc", q_eff, n)
         # intra-chunk
         dmat = (b[..., :, None] - b[..., None, :] + ic[..., None, :]
                 - m_new[..., :, None])                       # (B,H,c,c)
         tri = jnp.tril(jnp.ones((c, c), bool))
         dmat = jnp.where(tri, dmat, -1e30)
-        s = jnp.einsum("bhcx,bhdx->bhcd", qc * scale, kc) * jnp.exp(dmat)
-        h_intra = jnp.einsum("bhcd,bhdx->bhcx", s, vc)
+        s = mix("bhcx,bhdx->bhcd", qc * scale, kc) * jnp.exp(dmat)
+        h_intra = mix("bhcd,bhdx->bhcx", s, vc)
         n_intra = jnp.sum(s, axis=-1)
         denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_new))
         h_out = (h_inter + h_intra) / denom[..., None]
@@ -114,17 +122,20 @@ def mlstm_chunk_scan(q, k, v, it, ft, state, chunk: int):
         m_end = jnp.maximum(m + g, g + cmax[..., -1])
         w_old = jnp.exp(m + g - m_end)
         w_new = jnp.exp(g[..., None] - b + ic - m_end[..., None])   # (B,H,c)
-        C_new = C * w_old[..., None, None] + jnp.einsum(
-            "bhck,bhcv,bhc->bhkv", kc, vc, w_new)
-        n_new = n * w_old[..., None] + jnp.einsum("bhck,bhc->bhk", kc, w_new)
+        # three-operand outer product: fold the gate into k first so the
+        # contraction stays a two-operand fair-square dispatch
+        C_new = C * w_old[..., None, None] + mix(
+            "bhck,bhcv->bhkv", kc * w_new[..., None], vc)
+        n_new = n * w_old[..., None] + mix("bhck,bhc->bhk", kc, w_new)
         return (C_new, n_new, m_end), h_out
 
-    state, hs = jax.lax.scan(step, state, (qs, ks, vs, its, fts))
+    with counting.count_scale(nc):
+        state, hs = jax.lax.scan(step, state, (qs, ks, vs, its, fts))
     hs = jnp.moveaxis(hs, 0, 2).reshape(B, H, nc * c, hd)
     return hs[:, :, :S], state
 
 
-def mlstm_seq_scan(q, k, v, it, ft, state):
+def mlstm_seq_scan(q, k, v, it, ft, state, *, mode=None, policy=None):
     """Naive sequential mLSTM (oracle for tests + decode single step)."""
     scale = q.shape[-1] ** -0.5
 
@@ -138,14 +149,18 @@ def mlstm_seq_scan(q, k, v, it, ft, state):
             kt[..., :, None] * vt[..., None, :])
         n = n * fw[..., None] + iw[..., None] * kt
         qs = qt * scale
-        num = jnp.einsum("bhk,bhkv->bhv", qs, C)
-        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n)),
-                          jnp.exp(-m_new))
+        num = fs_einsum("bhk,bhkv->bhv", qs, C, mode=mode, policy=policy,
+                        site="recurrent_mix")
+        den = jnp.maximum(
+            jnp.abs(fs_einsum("bhk,bhk->bh", qs, n, mode=mode,
+                              policy=policy, site="recurrent_mix")),
+            jnp.exp(-m_new))
         return (C, n, m_new), num / den[..., None]
 
     xs = tuple(jnp.moveaxis(t, 2, 0) for t in (q, k, v)) + tuple(
         jnp.moveaxis(t, 2, 0) for t in (it, ft))
-    state, hs = jax.lax.scan(step, state, xs)
+    with counting.count_scale(q.shape[2]):
+        state, hs = jax.lax.scan(step, state, xs)
     return jnp.moveaxis(hs, 0, 2), state
 
 
@@ -158,35 +173,44 @@ def mlstm_init_state(cfg, batch: int):
 
 
 def mlstm_forward(p, x, *, cfg, state=None, mode: Optional[str] = None,
-                  chunk: int = 256, sequential: bool = False):
+                  chunk: int = 256, sequential: bool = False, policy=None):
     """mLSTM block forward over a sequence.  Returns (y, final_state)."""
     B, S, D = x.shape
     di = int(cfg.inner_factor * D)
     H = cfg.n_heads
-    up = basic.dense_apply(p["w_in"], x, mode=mode)
+
+    def dense(name, t):
+        return basic.dense_apply(p[name], t, mode=mode, policy=policy,
+                                 site="recurrent_proj")
+
+    up = dense("w_in", x)
     xi, gate = up[..., :di], up[..., di:]
-    q = jnp.swapaxes(_heads(basic.dense_apply(p["wq"], xi, mode=mode), H), 1, 2)
-    k = jnp.swapaxes(_heads(basic.dense_apply(p["wk"], xi, mode=mode), H), 1, 2)
-    v = jnp.swapaxes(_heads(basic.dense_apply(p["wv"], xi, mode=mode), H), 1, 2)
+    q = jnp.swapaxes(_heads(dense("wq", xi), H), 1, 2)
+    k = jnp.swapaxes(_heads(dense("wk", xi), H), 1, 2)
+    v = jnp.swapaxes(_heads(dense("wv", xi), H), 1, 2)
     q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
-    itg, ftg = _mlstm_gates(p, xi)                        # (B, S)... per pos
+    itg, ftg = _mlstm_gates(p, xi, mode, policy)          # (B, S)... per pos
     it = jnp.broadcast_to(itg[:, None, :], (B, H, S))
     ft = jnp.broadcast_to(ftg[:, None, :], (B, H, S))
     if state is None:
         state = mlstm_init_state(cfg, B)
     if sequential:
-        h, state = mlstm_seq_scan(q, k, v, it, ft, state)
+        h, state = mlstm_seq_scan(q, k, v, it, ft, state, mode=mode,
+                                  policy=policy)
     else:
-        h, state = mlstm_chunk_scan(q, k, v, it, ft, state, chunk)
+        h, state = mlstm_chunk_scan(q, k, v, it, ft, state, chunk,
+                                    mode=mode, policy=policy)
     h = jnp.swapaxes(h, 1, 2).reshape(B, S, di).astype(x.dtype)
     h = basic.rmsnorm_apply(p["norm"], h)
     h = h * jax.nn.silu(gate.astype(jnp.float32)).astype(h.dtype)
-    return basic.dense_apply(p["w_out"], h, mode=mode, out_dtype=x.dtype), state
+    return basic.dense_apply(p["w_out"], h, mode=mode, out_dtype=x.dtype,
+                             policy=policy, site="recurrent_proj"), state
 
 
-def mlstm_decode(p, x, state, *, cfg, mode: Optional[str] = None):
+def mlstm_decode(p, x, state, *, cfg, mode: Optional[str] = None,
+                 policy=None):
     y, state = mlstm_forward(p, x, cfg=cfg, state=state, mode=mode,
-                             sequential=True)
+                             sequential=True, policy=policy)
     return y, state
 
 
@@ -213,20 +237,23 @@ def slstm_init_state(cfg, batch: int):
     return (z, z, z, jnp.full((batch, d), -1e30, jnp.float32))  # c, n, h, m
 
 
-def slstm_forward(p, x, *, cfg, state=None, mode: Optional[str] = None):
+def slstm_forward(p, x, *, cfg, state=None, mode: Optional[str] = None,
+                  policy=None):
     """Sequential sLSTM over (B, S, D).  Returns (y, final_state)."""
     B, S, D = x.shape
     H = cfg.n_heads
     hd = D // H
     if state is None:
         state = slstm_init_state(cfg, B)
-    wx = basic.dense_apply(p["w_x"], x, mode=mode).astype(jnp.float32)  # (B,S,4D)
+    wx = basic.dense_apply(p["w_x"], x, mode=mode, policy=policy,
+                           site="recurrent_proj").astype(jnp.float32)  # (B,S,4D)
     rmat = p["r"]["w"]                                                  # (H,hd,4hd)
 
     def step(carry, wxt):
         c, n, h, m = carry
         hh = h.reshape(B, H, hd)
-        rec = jnp.einsum("bhx,hxy->bhy", hh, rmat).reshape(B, 4 * D)
+        rec = fs_einsum("bhx,hxy->bhy", hh, rmat, mode=mode, policy=policy,
+                        site="recurrent_mix").reshape(B, 4 * D)
         pre = wxt + rec
         zt = jnp.tanh(pre[:, 0 * D:1 * D])
         it = pre[:, 1 * D:2 * D]                    # log-space input gate
@@ -240,11 +267,15 @@ def slstm_forward(p, x, *, cfg, state=None, mode: Optional[str] = None):
         h_new = ot * c_new / jnp.maximum(n_new, jnp.exp(-m_new))
         return (c_new, n_new, h_new, m_new), h_new
 
-    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    with counting.count_scale(S):
+        state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
     hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
     hs = basic.rmsnorm_apply(p["norm"], hs)
-    return basic.dense_apply(p["w_out"], hs, mode=mode, out_dtype=x.dtype), state
+    return basic.dense_apply(p["w_out"], hs, mode=mode, out_dtype=x.dtype,
+                             policy=policy, site="recurrent_proj"), state
 
 
-def slstm_decode(p, x, state, *, cfg, mode: Optional[str] = None):
-    return slstm_forward(p, x, cfg=cfg, state=state, mode=mode)
+def slstm_decode(p, x, state, *, cfg, mode: Optional[str] = None,
+                 policy=None):
+    return slstm_forward(p, x, cfg=cfg, state=state, mode=mode,
+                         policy=policy)

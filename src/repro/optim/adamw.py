@@ -9,8 +9,6 @@ m/v inherit each param's NamedSharding under pjit, i.e. a fully sharded
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -21,8 +21,6 @@ tests/test_roofline.py.
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -11,7 +11,7 @@ Single-host reference implementation of the production serving layer:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

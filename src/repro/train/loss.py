@@ -10,18 +10,20 @@ large-vocab trick.  Memory-roofline effect recorded in EXPERIMENTS.md §Perf.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
+
+from repro.core import counting
+from repro.core.einsum import fs_einsum
 
 __all__ = ["chunked_xent", "full_xent"]
 
 
-def _chunk_xent(hidden, labels, mask, table):
+def _chunk_xent(hidden, labels, mask, table, mode=None, policy=None):
     """hidden (T, D) f32-ready; labels (T,); mask (T,); table (V, D)."""
-    logits = jnp.einsum("td,vd->tv", hidden.astype(jnp.float32),
-                        table.astype(jnp.float32))
+    logits = fs_einsum("td,vd->tv", hidden.astype(jnp.float32),
+                       table.astype(jnp.float32), mode=mode, policy=policy,
+                       site="loss")
     lse = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
     nll = (lse - gold) * mask
@@ -29,7 +31,8 @@ def _chunk_xent(hidden, labels, mask, table):
     return jnp.sum(nll), jnp.sum(correct)
 
 
-def chunked_xent(hidden, labels, table, *, mask=None, chunk: int = 2048):
+def chunked_xent(hidden, labels, table, *, mask=None, chunk: int = 2048,
+                 mode=None, policy=None):
     """Mean next-token xent without materializing full logits.
 
     hidden: (B, S, D); labels: (B, S) int32; table: (V, D) embedding
@@ -62,20 +65,22 @@ def chunked_xent(hidden, labels, table, *, mask=None, chunk: int = 2048):
         tot, corr = carry
         hh, yy, mm = xs
         nll, ok = _chunk_xent(hh.reshape(-1, D), yy.reshape(-1),
-                              mm.reshape(-1), table)
+                              mm.reshape(-1), table, mode, policy)
         return (tot + nll, corr + ok), None
 
     body = jax.checkpoint(body)   # recompute chunk logits in backward
-    (tot, corr), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
-                                  (hc, yc, mc))
+    with counting.count_scale(n):
+        (tot, corr), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                      (hc, yc, mc))
     denom = jnp.maximum(jnp.sum(m), 1.0)
     return tot / denom, {"acc": corr / denom, "tokens": denom}
 
 
-def full_xent(hidden, labels, table, *, mask=None):
+def full_xent(hidden, labels, table, *, mask=None, mode=None, policy=None):
     """Reference unchunked xent (tests)."""
-    logits = jnp.einsum("bsd,vd->bsv", hidden.astype(jnp.float32),
-                        table.astype(jnp.float32))
+    logits = fs_einsum("bsd,vd->bsv", hidden.astype(jnp.float32),
+                       table.astype(jnp.float32), mode=mode, policy=policy,
+                       site="loss")
     lse = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
     m = jnp.ones(labels.shape, jnp.float32) if mask is None else mask.astype(jnp.float32)

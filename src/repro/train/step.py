@@ -7,8 +7,6 @@ serves smoke tests (1 CPU device) and the 512-chip production mesh.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -49,7 +47,8 @@ def make_loss_fn(model, tcfg: TrainConfig):
             hidden = hidden[:, cfg.prefix_tokens:]    # only text positions
         loss, metrics = loss_mod.chunked_xent(
             hidden, labels, params["embed"]["table"],
-            mask=_batch_mask(model, batch), chunk=cfg.loss_chunk)
+            mask=_batch_mask(model, batch), chunk=cfg.loss_chunk,
+            mode=cfg.matmul_mode, policy=cfg.contraction_policy)
         total = loss + tcfg.aux_loss_weight * aux
         metrics = dict(metrics, xent=loss, aux=aux)
         return total, metrics

@@ -32,6 +32,37 @@ def test_cpm_planes_out():
     np.testing.assert_allclose(np.asarray(im), ref.imag, rtol=1e-4, atol=1e-4)
 
 
+def test_split_planes_accepts_pairs():
+    """Regression: split_planes must accept (re, im) plane pairs as the
+    module docstring promises (it used to raise on anything non-complex)."""
+    x = _cplx(3, 4)
+    re, im = C.split_planes((jnp.asarray(x.real), jnp.asarray(x.imag)))
+    np.testing.assert_array_equal(np.asarray(re), x.real)
+    np.testing.assert_array_equal(np.asarray(im), x.imag)
+    # real arrays get a zero imaginary plane
+    r = RNG.normal(size=(2, 5)).astype(np.float32)
+    re, im = C.split_planes(jnp.asarray(r))
+    np.testing.assert_array_equal(np.asarray(re), r)
+    assert not np.asarray(im).any()
+    # malformed pairs are rejected
+    with pytest.raises(ValueError):
+        C.split_planes((jnp.zeros((2, 2)),))
+    with pytest.raises(ValueError):
+        C.split_planes((jnp.zeros((2, 2)), jnp.zeros((2, 3))))
+    with pytest.raises(ValueError):
+        C.split_planes((jnp.asarray(x), jnp.asarray(x)))
+
+
+@pytest.mark.parametrize("mode", ["cpm4", "cpm3"])
+def test_cpm_matmul_from_plane_pairs(mode):
+    """The CPM entry points take four-wire (re, im) pairs directly."""
+    x, y = _cplx(4, 6), _cplx(6, 3)
+    fn = C.cpm4_matmul if mode == "cpm4" else C.cpm3_matmul
+    out = fn((jnp.asarray(x.real), jnp.asarray(x.imag)),
+             (jnp.asarray(y.real), jnp.asarray(y.imag)))
+    np.testing.assert_allclose(np.asarray(out), x @ y, rtol=1e-4, atol=1e-3)
+
+
 # ------------------------------------------------------------------ transforms
 
 def test_real_transform_square():

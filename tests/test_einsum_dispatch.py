@@ -1,0 +1,191 @@
+"""Equivalence suite for the square-aware einsum dispatch (core.einsum).
+
+Every contraction spec used by a refactored model/train call site must
+match ``jnp.einsum`` in EVERY fair-square mode -- tight tolerance in f32,
+loose in bf16 (square modes widen to f32 internally; the reassociation is
+the only difference), including the batched ``square_pallas`` kernel in
+interpret mode.  Plus: mode-resolution precedence (policy > mode > process
+default) and the whole-model contraction counter acceptance check (>= 90%
+of a square_virtual LM forward's contraction FLOPs route square-form).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ContractionPolicy, ModelConfig,
+                                SQUARE_GEMMS_POLICY)
+from repro.core import counting
+from repro.core.einsum import fs_einsum, plan_contraction
+from repro.core.matmul import MODES
+
+RNG = np.random.default_rng(7)
+
+# Every distinct contraction spec a refactored call site issues, with
+# representative (small) operand shapes.  Sites noted for orientation.
+CALL_SITE_SPECS = [
+    ("tk,kn->tn", (6, 5), (5, 7)),                    # dense_apply
+    ("td,de->te", (6, 5), (5, 4)),                    # moe_router
+    ("ecd,edf->ecf", (3, 4, 5), (3, 5, 6)),           # moe_expert up/gate
+    ("ecf,efd->ecd", (3, 4, 6), (3, 6, 5)),           # moe_expert down
+    ("bqkgh,bckh->bkgqc", (2, 4, 3, 2, 5), (2, 6, 3, 5)),   # attn scores
+    ("bkgqc,bckh->bkgqh", (2, 3, 2, 4, 6), (2, 6, 3, 5)),   # attn pv
+    ("bqkgh,btkh->bkgqt", (2, 1, 3, 2, 5), (2, 6, 3, 5)),   # decode scores
+    ("bkgqt,btkh->bqkgh", (2, 3, 2, 1, 6), (2, 6, 3, 5)),   # decode pv
+    ("bsd,vd->bsv", (2, 4, 5), (9, 5)),               # lm logits
+    ("td,vd->tv", (6, 5), (9, 5)),                    # chunked-xent loss
+    ("...d,dg->...g", (2, 3, 5), (5, 2)),             # mlstm gates
+    ("bhcx,bhxd->bhcd", (2, 3, 4, 5), (2, 3, 5, 6)),  # mlstm inter
+    ("bhcx,bhx->bhc", (2, 3, 4, 5), (2, 3, 5)),       # mlstm n_inter
+    ("bhcx,bhdx->bhcd", (2, 3, 4, 5), (2, 3, 6, 5)),  # mlstm intra scores
+    ("bhcd,bhdx->bhcx", (2, 3, 4, 6), (2, 3, 6, 5)),  # mlstm intra pv
+    ("bhck,bhcv->bhkv", (2, 3, 4, 5), (2, 3, 4, 6)),  # mlstm state outer
+    ("bhck,bhc->bhk", (2, 3, 4, 5), (2, 3, 4)),       # mlstm n update
+    ("bhk,bhkv->bhv", (2, 3, 4), (2, 3, 4, 5)),       # mlstm seq num
+    ("bhk,bhk->bh", (2, 3, 4), (2, 3, 4)),            # mlstm seq den
+    ("bhx,hxy->bhy", (2, 3, 4), (3, 4, 5)),           # slstm recurrence
+]
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("spec,xs,ys", CALL_SITE_SPECS,
+                         ids=[s for s, _, _ in CALL_SITE_SPECS])
+def test_call_site_specs_f32(spec, xs, ys, mode):
+    x = RNG.normal(size=xs).astype(np.float32)
+    y = RNG.normal(size=ys).astype(np.float32)
+    ref = np.einsum(spec, x, y)
+    out = np.asarray(fs_einsum(spec, jnp.asarray(x), jnp.asarray(y),
+                               mode=mode))
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("spec,xs,ys", CALL_SITE_SPECS[:10],
+                         ids=[s for s, _, _ in CALL_SITE_SPECS[:10]])
+def test_call_site_specs_bf16(spec, xs, ys, mode):
+    x = RNG.normal(size=xs).astype(np.float32)
+    y = RNG.normal(size=ys).astype(np.float32)
+    xb = jnp.asarray(x, jnp.bfloat16)
+    yb = jnp.asarray(y, jnp.bfloat16)
+    # reference from the bf16-rounded operands (isolates mode error from
+    # input quantization), f32 accumulate
+    ref = np.einsum(spec, np.asarray(xb, np.float32),
+                    np.asarray(yb, np.float32))
+    out = np.asarray(fs_einsum(spec, xb, yb, mode=mode), np.float32)
+    np.testing.assert_allclose(out, ref, rtol=5e-2, atol=5e-2)
+
+
+def test_batched_square_pallas_route():
+    """Batched specs hit the leading-batch-axis Pallas kernel natively."""
+    x = RNG.normal(size=(4, 9, 7)).astype(np.float32)
+    y = RNG.normal(size=(4, 7, 11)).astype(np.float32)
+    out = np.asarray(fs_einsum("bmk,bkn->bmn", jnp.asarray(x),
+                               jnp.asarray(y), mode="square_pallas"))
+    np.testing.assert_allclose(out, x @ y, rtol=1e-5, atol=1e-4)
+
+
+def test_plan_classification():
+    p = plan_contraction("bqkgh,bckh->bkgqc", (2, 4, 3, 2, 5), (2, 6, 3, 5))
+    assert (p.batch, p.m, p.k, p.n) == ("bk", "qg", "h", "c")
+    p = plan_contraction("bsd,vd->bsv", (2, 4, 5), (9, 5))
+    assert (p.batch, p.m, p.k, p.n) == ("", "bs", "d", "v")
+
+
+def test_unsupported_specs_raise():
+    x = jnp.zeros((3, 3))
+    with pytest.raises(ValueError):
+        fs_einsum("ij,jk", x, x)                       # implicit output
+    with pytest.raises(ValueError):
+        fs_einsum("ii,ij->ij", x, x)                   # diagonal
+    with pytest.raises(ValueError):
+        fs_einsum("ij,jk->ikz", x, x)                  # unknown output index
+    with pytest.raises(ValueError):
+        fs_einsum("ij,jk->ik", x, jnp.zeros((4, 3)))   # size mismatch
+
+
+def test_mode_resolution_precedence():
+    x = RNG.normal(size=(4, 5)).astype(np.float32)
+    y = RNG.normal(size=(5, 6)).astype(np.float32)
+    pol = ContractionPolicy.of(ffn="square_scan")
+    with counting.track_contractions() as ctr:
+        fs_einsum("tk,kn->tn", x, y, mode="standard", policy=pol, site="ffn")
+        fs_einsum("tk,kn->tn", x, y, mode="standard", policy=pol,
+                  site="logits")
+    assert [r.mode for r in ctr.records] == ["square_scan", "standard"]
+    # policy default applies to unlisted sites
+    pol2 = ContractionPolicy.of(default="square_virtual", ffn="standard")
+    with counting.track_contractions() as ctr:
+        fs_einsum("tk,kn->tn", x, y, policy=pol2, site="logits")
+        fs_einsum("tk,kn->tn", x, y, policy=pol2, site="ffn")
+    assert [r.mode for r in ctr.records] == ["square_virtual", "standard"]
+
+
+def _tiny_cfg(**kw):
+    base = dict(name="tiny", family="dense", n_layers=2, d_model=32,
+                n_heads=2, n_kv_heads=2, d_ff=64, vocab=128, head_dim=16,
+                dtype="float32", scan_layers=True, remat="none",
+                attn_chunk_q=16, attn_chunk_kv=16, loss_chunk=16,
+                max_seq=64)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _forward_fraction(cfg):
+    from repro.models.lm import build_model
+    import jax
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jnp.asarray(RNG.integers(0, cfg.vocab, size=(2, 32)),
+                         jnp.int32)
+    with counting.track_contractions() as ctr:
+        hidden, _, _ = model.forward(params, {"tokens": tokens})
+        model.logits(params, hidden)
+    return ctr
+
+
+def test_square_virtual_forward_routes_90pct():
+    """Acceptance: with matmul_mode="square_virtual" set globally, a small
+    LM forward reports >= 90% of contraction FLOPs square-routed."""
+    ctr = _forward_fraction(_tiny_cfg(matmul_mode="square_virtual"))
+    assert ctr.total_mults > 0
+    assert ctr.fraction_square >= 0.9
+    assert ctr.fraction_square == 1.0          # every site is dispatched
+    assert ctr.multiplies_replaced == ctr.total_mults
+    # the layer scan is counted per executed layer, not per trace
+    sites = ctr.by_site()
+    assert sites["ffn"]["mults"] > 0 and sites["attn_scores"]["mults"] > 0
+
+
+def test_square_gemms_policy_keeps_softmax_standard():
+    """The mixed policy: square GEMMs, standard attention softmax path --
+    still >= 90% square by FLOP volume on a GEMM-dominated model (d_ff
+    sized so the softmax path is <10% of contraction volume, as in any
+    realistically-proportioned LM)."""
+    ctr = _forward_fraction(_tiny_cfg(matmul_mode="square_virtual", d_ff=128,
+                                      contraction_policy=SQUARE_GEMMS_POLICY))
+    sites = ctr.by_site()
+    assert sites["attn_scores"]["square_mults"] == 0
+    assert sites["attn_pv"]["square_mults"] == 0
+    assert sites["ffn"]["square_mults"] == sites["ffn"]["mults"]
+    assert ctr.fraction_square >= 0.9
+    assert ctr.fraction_square < 1.0
+
+
+def test_standard_forward_counts_zero_square():
+    ctr = _forward_fraction(_tiny_cfg(matmul_mode="standard"))
+    assert ctr.total_mults > 0
+    assert ctr.fraction_square == 0.0
+
+
+def test_policy_of_validates_sites_and_modes():
+    """A typo'd site or mode must fail loudly at construction, not be
+    silently ignored at lookup time."""
+    with pytest.raises(ValueError):
+        ContractionPolicy.of(attn_score="standard")        # missing 's'
+    with pytest.raises(ValueError):
+        ContractionPolicy.of(ffn="square_virtuall")
+    with pytest.raises(ValueError):
+        ContractionPolicy.of(default="not_a_mode")
+    pol = ContractionPolicy.of(default="square_virtual", ffn="standard")
+    assert pol.lookup("ffn") == "standard"

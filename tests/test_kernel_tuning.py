@@ -195,3 +195,82 @@ def test_autotune_sweep_smoke(tmp_path, monkeypatch):
                               pm_layout=cache[key]["pm_layout"])
     assert plan.bm == cache[key]["bm"] and plan.kc == cache[key]["kc"]
     tuning.clear_cache()
+
+
+def test_autotune_miss_warns_once(tmp_path, monkeypatch):
+    """On a cache miss the planner warns ONCE per key and falls back to the
+    cost-model plan (no silent per-call sweeping)."""
+    import warnings
+
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "none.json"))
+    tuning.clear_cache()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        p1 = tuning.plan_matmul(37, 41, 43, jnp.float32, pm_layout="mnk")
+        assert len(w) == 1 and "autotune cache miss" in str(w[0].message)
+        p2 = tuning.plan_matmul(37, 41, 43, jnp.float32, pm_layout="mnk")
+        assert len(w) == 1                       # warned once, not twice
+    assert p1 == p2                              # deterministic model plan
+    # explicit tiles never consult the cache, so they never warn
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        tuning.plan_matmul(37, 41, 43, jnp.float32, bm=8, bn=128, bk=128)
+        assert len(w) == 0
+    tuning.clear_cache()
+
+
+def test_autotune_escape_hatch(tmp_path, monkeypatch):
+    """REPRO_AUTOTUNE=0 disables cache lookups AND the miss warning."""
+    import warnings
+
+    path = tmp_path / "cache.json"
+    entry = {"bm": 16, "bn": 128, "bk": 64, "kc": 16, "pm_layout": "mnk",
+             "us_per_call": 1.0}
+    path.write_text(json.dumps({"sq_matmul:64x64x64:float32": entry}))
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(path))
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    tuning.clear_cache()
+    assert not tuning.autotune_enabled()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        plan = tuning.plan_matmul(64, 64, 64, jnp.float32, pm_layout="mnk")
+        assert len(w) == 0                       # no miss warning
+    assert plan != tuning.TilePlan(16, 128, 64, 16, "mnk")   # cache ignored
+    tuning.clear_cache()
+
+
+@pytest.mark.parametrize("dtype", ["float32", "int8"])
+def test_batched_kernel_matches_unbatched(dtype):
+    """The leading batch grid axis computes exactly the per-element 2D
+    kernel result (same plan family, same arithmetic)."""
+    nb, m, k, n = 3, 33, 40, 17
+    if dtype == "int8":
+        a = jnp.asarray(RNG.integers(-128, 128, (nb, m, k)).astype(np.int8))
+        b = jnp.asarray(RNG.integers(-128, 128, (nb, k, n)).astype(np.int8))
+    else:
+        a = jnp.asarray(RNG.normal(size=(nb, m, k)).astype(np.float32))
+        b = jnp.asarray(RNG.normal(size=(nb, k, n)).astype(np.float32))
+    out = np.asarray(ops.sq_matmul(a, b))
+    assert out.shape == (nb, m, n)
+    for i in range(nb):
+        ref = np.asarray(ops.sq_matmul(a[i], b[i]))
+        if dtype == "int8":
+            np.testing.assert_array_equal(out[i], ref)
+        else:
+            np.testing.assert_allclose(out[i], ref, rtol=1e-5, atol=1e-4)
+
+
+def test_autotune_batched_writes_batch_key(tmp_path, monkeypatch):
+    """autotune_matmul(batch=N) writes the batch-keyed entry that
+    plan_matmul(batch=N) looks up (closing the miss-warning loop)."""
+    path = tmp_path / "cache.json"
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(path))
+    tuning.clear_cache()
+    cache = tuning.autotune_matmul([(16, 16, 16)], jnp.float32,
+                                   max_candidates=1, reps=1, batch=3)
+    key = "sq_matmul:3b:16x16x16:float32"
+    assert key in cache
+    plan = tuning.plan_matmul(16, 16, 16, jnp.float32, batch=3,
+                              pm_layout=cache[key]["pm_layout"])
+    assert plan.bm == cache[key]["bm"] and plan.kc == cache[key]["kc"]
+    tuning.clear_cache()

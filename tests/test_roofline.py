@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.roofline.hlo_analysis import analyze_compiled, analyze_hlo
+from repro.roofline.hlo_analysis import analyze_compiled
 
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

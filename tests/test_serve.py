@@ -1,11 +1,8 @@
 """Serving-layer integration tests: continuous batching, slot recycling,
 greedy determinism vs a manual decode loop."""
-import dataclasses as dc
-
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.models.lm import build_model

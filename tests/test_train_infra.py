@@ -1,13 +1,11 @@
 """Fault-tolerance and training-infrastructure tests: checkpoint atomicity,
 auto-resume determinism, gradient accumulation equivalence, gradient
 compression with error feedback, straggler watchdog."""
-import dataclasses as dc
 import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_config
