@@ -73,6 +73,25 @@ def time_plan(kind, m, n, k, dtype, plan, *, reps=3, batch=1):
     raise ValueError(f"unknown kernel kind {kind!r}")
 
 
+def time_conv2d_plan(h, w, kh, kw, cin, cout, dtype, plan, *, stride=(1, 1),
+                     reps=3, batch=1):
+    """Wall-time one fused-conv2d call under an explicit plan (autotune hook).
+
+    ``h``/``w`` are the padded input spatial extents (VALID geometry --
+    exactly what :func:`repro.kernels.tuning.plan_conv2d` keys on).
+    """
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    lead = (batch,) if batch > 1 else ()
+    x = jnp.asarray(rng.normal(size=lead + (cin, h, w)).astype(np.dtype(dtype)))
+    wt = jnp.asarray(rng.normal(size=(cout, cin, kh, kw)).astype(np.dtype(dtype)))
+    fn = lambda x, wt: ops.sq_conv2d(
+        x, wt, stride=stride, bh=plan.bh, bw=plan.bw, bk=plan.bk,
+        kc=plan.kc, bf=plan.bf, pm_layout=plan.pm_layout)
+    return _time(fn, x, wt, reps=reps)
+
+
 def matmul_modes(m=256, k=256, n=256):
     from repro.core import matmul as M
     rng = np.random.default_rng(0)
@@ -100,6 +119,15 @@ def pallas_kernels():
     w = jnp.asarray(rng.normal(size=(16,)).astype(np.float32))
     xi = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
     wi = jnp.asarray(rng.normal(size=(5, 5)).astype(np.float32))
+    # CNN-layer conv2d shape (ROADMAP fused-conv target): 32x32, 64 -> 64
+    # channels, 3x3 taps -- fused window streaming vs materialized im2col.
+    # Tracked unbatched AND at batch 4: the batched pair is the headline --
+    # the im2col route must materialize a B*oh*ow x cin*kh*kw patch matrix
+    # (~17 MB at B=4) whose matmul has no cache-resident plan, while the
+    # fused kernel runs one batch element per grid step at B=1 efficiency.
+    xc = jnp.asarray(rng.normal(size=(64, 32, 32)).astype(np.float32))
+    wc = jnp.asarray(rng.normal(size=(64, 64, 3, 3)).astype(np.float32))
+    xcb = jnp.asarray(rng.normal(size=(4, 64, 32, 32)).astype(np.float32))
     zx = jnp.asarray((rng.normal(size=(64, 64))
                       + 1j * rng.normal(size=(64, 64))).astype(np.complex64))
     zy = jnp.asarray((rng.normal(size=(64, 64))
@@ -125,7 +153,22 @@ def pallas_kernels():
         {"name": "pallas_sq_conv[interp]",
          "us_per_call": _time(ops.sq_conv, x, w, reps=reps),
          "shape": "L=2048 taps=16", "mode": "f32"},
+        # historical row: same name, same 64x64 k5x5 workload as every
+        # prior BENCH_kernels.json -- ops.sq_conv2d now routes it through
+        # the fused kernel (the mode field records the route change)
         {"name": "pallas_sq_conv2d[interp]",
          "us_per_call": _time(ops.sq_conv2d, xi, wi, reps=reps),
-         "shape": "64x64 k5x5", "mode": "f32/im2col"},
+         "shape": "64x64 k5x5", "mode": "f32/fused"},
+        {"name": "pallas_sq_conv2d_fused[interp]",
+         "us_per_call": _time(ops.sq_conv2d, xc, wc, reps=reps),
+         "shape": "32x32x64->64 k3x3", "mode": "f32/fused"},
+        {"name": "pallas_sq_conv2d_im2col[interp]",
+         "us_per_call": _time(ops.sq_conv2d_im2col, xc, wc, reps=reps),
+         "shape": "32x32x64->64 k3x3", "mode": "f32/im2col"},
+        {"name": "pallas_sq_conv2d_fused_b4[interp]",
+         "us_per_call": _time(ops.sq_conv2d, xcb, wc, reps=5),
+         "shape": "b4 32x32x64->64 k3x3", "mode": "f32/fused"},
+        {"name": "pallas_sq_conv2d_im2col_b4[interp]",
+         "us_per_call": _time(ops.sq_conv2d_im2col, xcb, wc, reps=5),
+         "shape": "b4 32x32x64->64 k3x3", "mode": "f32/im2col"},
     ]

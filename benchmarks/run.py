@@ -54,6 +54,10 @@ def write_bench_json(timing_rows, path="BENCH_kernels.json"):
     seed_by_name = {r["name"]: r for r in SEED_BASELINE}
     by_name = {r["name"]: r for r in timing_rows}
     rank1 = by_name.get("pallas_sq_matmul_rank1[interp]")
+    # im2col conv2d rows indexed by shape: every fused conv2d row gets its
+    # same-shape, same-process (load-drift-immune) fused-vs-im2col ratio
+    im2col_by_shape = {r["shape"]: r for r in timing_rows
+                       if r.get("mode") == "f32/im2col"}
     rows = []
     for r in timing_rows:
         row = dict(r)
@@ -64,6 +68,10 @@ def write_bench_json(timing_rows, path="BENCH_kernels.json"):
         if r["name"] == "pallas_sq_matmul[interp]" and rank1 is not None:
             # same-process rank-1 reference: load-drift-immune ratio
             row["speedup_vs_rank1"] = rank1["us_per_call"] / r["us_per_call"]
+        im2col = im2col_by_shape.get(r["shape"])
+        if r.get("mode") == "f32/fused" and im2col is not None:
+            row["speedup_vs_im2col"] = \
+                im2col["us_per_call"] / r["us_per_call"]
         rows.append(row)
     payload = {"seed_baseline": SEED_BASELINE, "rows": rows}
     with open(path, "w") as f:

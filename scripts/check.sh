@@ -14,8 +14,17 @@ else
   echo "== ruff == skipped (ruff not installed; CI runs it)"
 fi
 
+echo "== docs (markdown links + paper-map modules) =="
+python scripts/check_docs.py
+
 echo "== tier-1 tests =="
 timeout "${CHECK_TIMEOUT:-1200}" python -m pytest -x -q
+
+echo "== doctests (public-API examples) =="
+python -m pytest -q --doctest-modules \
+  src/repro/core/einsum.py src/repro/core/counting.py \
+  src/repro/configs/base.py src/repro/kernels/ops.py \
+  src/repro/kernels/tuning.py
 
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
   echo "== smoke bench (writes BENCH_kernels.json) =="

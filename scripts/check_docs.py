@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Documentation consistency gate (no dependencies beyond stdlib).
+
+Two checks, both run over the repo the script lives in:
+
+1. **Markdown link check** -- every relative link target in ``docs/*.md``,
+   ``README.md`` and ``ROADMAP.md`` must exist on disk (anchors are
+   stripped; http(s)/mailto links are skipped -- CI must not depend on
+   the network).
+2. **Paper-map module check** -- every backticked repo path in
+   ``docs/paper_map.md`` (``src/...``, ``benchmarks/...``, ``scripts/...``,
+   ``examples/...``, ``tests/...``) must exist, so the paper-section ↔
+   module table cannot silently rot when files move.
+
+Exit status 0 on success; 1 with a per-finding report otherwise.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+LINK_FILES = sorted((REPO / "docs").glob("*.md")) + [
+    REPO / "README.md", REPO / "ROADMAP.md"]
+PAPER_MAP = REPO / "docs" / "paper_map.md"
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+REPO_PATH = re.compile(
+    r"`((?:src|benchmarks|scripts|examples|tests|docs)/[\w./-]+)`")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in LINK_FILES:
+        if not md.exists():
+            errors.append(f"{md.relative_to(REPO)}: file missing")
+            continue
+        for target in MD_LINK.findall(md.read_text()):
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#")[0]
+            if not path:
+                continue
+            resolved = (md.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_paper_map() -> list[str]:
+    if not PAPER_MAP.exists():
+        return [f"{PAPER_MAP.relative_to(REPO)} is missing"]
+    errors = []
+    paths = REPO_PATH.findall(PAPER_MAP.read_text())
+    if not paths:
+        errors.append(f"{PAPER_MAP.relative_to(REPO)}: no backticked repo "
+                      f"paths found -- the module table should reference "
+                      f"concrete files")
+    for p in paths:
+        if not (REPO / p).exists():
+            errors.append(f"{PAPER_MAP.relative_to(REPO)}: module `{p}` "
+                          f"no longer exists -- update the paper map")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_paper_map()
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    n_links = len(LINK_FILES)
+    print(f"check_docs: OK ({n_links} markdown files, paper map verified)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

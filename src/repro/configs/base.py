@@ -52,6 +52,18 @@ class ContractionPolicy:
     Resolution inside ``fs_einsum``: ``overrides[site]`` if present, else
     this policy's ``default`` if set, else the caller's ``mode`` argument
     (models pass ``cfg.matmul_mode``), else the process default.
+
+    >>> from repro.configs.base import ContractionPolicy
+    >>> p = ContractionPolicy.of(default="square_virtual",
+    ...                          attn_scores="standard")
+    >>> p.lookup("attn_scores")
+    'standard'
+    >>> p.lookup("ffn")                  # falls through to the default
+    'square_virtual'
+    >>> ContractionPolicy.of(attn_scroes="standard")   # typo fails loudly
+    Traceback (most recent call last):
+        ...
+    ValueError: unknown contraction site(s) ['attn_scroes']; expected names from ('dense', 'attn_qkv', 'attn_out', 'attn_scores', 'attn_pv', 'ffn', 'moe_router', 'moe_expert', 'logits', 'loss', 'recurrent_gates', 'recurrent_mix', 'recurrent_proj')
     """
     overrides: Tuple[Tuple[str, str], ...] = ()
     default: Optional[str] = None

@@ -26,8 +26,10 @@ import jax.numpy as jnp
 
 from repro.core import squares as sq
 
-__all__ = ["correlate1d", "convolve1d", "correlate2d",
-           "complex_correlate1d", "sliding_sum_squares", "iir_filter"]
+__all__ = ["correlate1d", "convolve1d", "correlate2d", "conv2d",
+           "complex_correlate1d", "sliding_sum_squares", "iir_filter",
+           "normalize_conv2d", "denormalize_conv2d", "resolve_stride",
+           "resolve_padding", "CONV2D_MODES"]
 
 
 def _windows1d(x, n):
@@ -107,6 +109,152 @@ def correlate2d(x, w, *, mode: str = "standard"):
         y = correlate2d(x, w, mode="standard").astype(acc)
         return sq.halve(y + y)
     raise ValueError(f"unknown conv mode {mode!r}")
+
+
+# --------------------------------------------------------------------------
+# Multi-channel batched 2D convolution (paper §5.1 at CNN-layer scale).
+#
+# ``conv2d`` is the user-facing entry point: NCHW/OIHW operands (with the
+# obvious rank shorthands), stride/padding, and the fair-square mode
+# machinery -- ``square_pallas`` runs the fused window-streaming Pallas
+# kernel (kernels/sq_conv2d.py, no im2col patch tensor), ``square_exact``
+# keeps the im2col-through-sq_matmul route as the materialized reference.
+# --------------------------------------------------------------------------
+
+CONV2D_MODES = ("standard", "square_virtual", "square_exact",
+                "square_pallas")
+
+
+def resolve_stride(stride) -> tuple:
+    """Normalize a stride spec to (sh, sv)."""
+    if isinstance(stride, int):
+        return (stride, stride)
+    sh, sv = stride
+    return (int(sh), int(sv))
+
+
+def resolve_padding(padding, hw, khw, stride) -> tuple:
+    """Normalize a padding spec to explicit ((ph0, ph1), (pw0, pw1)).
+
+    Accepts "VALID", "SAME" (XLA's rule: output extent ceil(in/stride)),
+    a single int, or explicit per-axis (lo, hi) pairs.
+    """
+    if isinstance(padding, str):
+        p = padding.upper()
+        if p == "VALID":
+            return ((0, 0), (0, 0))
+        if p == "SAME":
+            pads = []
+            for size, k, s in zip(hw, khw, stride):
+                total = max((-(-size // s) - 1) * s + k - size, 0)
+                pads.append((total // 2, total - total // 2))
+            return tuple(pads)
+        raise ValueError(f"unknown padding {padding!r}; expected 'VALID', "
+                         f"'SAME', an int, or ((lo, hi), (lo, hi))")
+    if isinstance(padding, int):
+        return ((padding, padding), (padding, padding))
+    (a, b), (c, d) = padding
+    return ((int(a), int(b)), (int(c), int(d)))
+
+
+def normalize_conv2d(x, w):
+    """Normalize conv2d operands to x (B, cin, H, W) / w (cout, cin, kh, kw).
+
+    Rank shorthands: x (H, W) or (cin, H, W); w (kh, kw) -- one filter,
+    cin 1 -- or (cout, kh, kw) -- a single-channel filter bank.  Returns
+    the rank-4 operands plus the output layout tag consumed by
+    :func:`denormalize_conv2d` ("hw" / "chw" / "nchw").
+    """
+    x = jnp.asarray(x)
+    w = jnp.asarray(w)
+    if w.ndim == 2:
+        w4 = w[None, None]
+    elif w.ndim == 3:
+        w4 = w[:, None]
+    elif w.ndim == 4:
+        w4 = w
+    else:
+        raise ValueError(f"conv2d filters must be rank 2-4, got {w.shape}")
+    if x.ndim == 2:
+        x4 = x[None, None]
+    elif x.ndim == 3:
+        x4 = x[None]
+    elif x.ndim == 4:
+        x4 = x
+    else:
+        raise ValueError(f"conv2d input must be rank 2-4, got {x.shape}")
+    if x4.shape[1] != w4.shape[1]:
+        raise ValueError(f"channel mismatch: input has {x4.shape[1]} "
+                         f"channels, filters expect {w4.shape[1]} "
+                         f"({x.shape} vs {w.shape})")
+    # The output layout follows the INPUT rank first (a batched input must
+    # never lose its batch axis to a filter-rank shorthand), then the
+    # filter rank decides whether the cout axis is kept.
+    if x.ndim == 4:
+        kind = "nchw"
+    elif w.ndim == 2:
+        kind = "hw"
+    else:
+        kind = "chw"
+    return x4, w4, kind
+
+
+def denormalize_conv2d(out, kind: str):
+    """Undo :func:`normalize_conv2d` on a (B, cout, oh, ow) result."""
+    if kind == "hw":
+        return out[0, 0]
+    if kind == "chw":
+        return out[0]
+    return out
+
+
+def conv2d(x, w, *, stride=1, padding="VALID", mode: str = "standard",
+           interpret=None):
+    """Multi-channel batched 2D correlation with fair-square mode dispatch.
+
+    x: (B, cin, H, W) (or the rank shorthands of
+    :func:`normalize_conv2d`); w: (cout, cin, kh, kw).  Modes:
+
+    ``standard``
+        ``jax.lax.conv_general_dilated`` -- the multiplier baseline.
+    ``square_virtual``
+        Baseline conv with the x2 accumulator carry and final halving
+        retained (conv-unit-routed square contract).
+    ``square_exact``
+        The materialized im2col reference: patches through the square
+        matmul kernel (:func:`repro.kernels.ops.sq_conv2d_im2col`).
+    ``square_pallas``
+        The fused window-streaming Pallas kernel
+        (:func:`repro.kernels.ops.sq_conv2d`) -- no patch tensor.
+    """
+    if mode not in CONV2D_MODES:
+        raise ValueError(f"unknown conv2d mode {mode!r}; expected one of "
+                         f"{CONV2D_MODES}")
+    if mode in ("square_exact", "square_pallas"):
+        from repro.kernels import ops as kops    # lazy: kernels are optional
+        f = kops.sq_conv2d_im2col if mode == "square_exact" else kops.sq_conv2d
+        return f(x, w, stride=stride, padding=padding, interpret=interpret)
+    x4, w4, kind = normalize_conv2d(x, w)
+    strides = resolve_stride(stride)
+    pads = resolve_padding(padding, x4.shape[2:], w4.shape[2:], strides)
+    dt = jnp.result_type(x4, w4)
+    if mode == "square_virtual":
+        # The square contract carries a WIDE 2c accumulator (paper
+        # bit-growth rules), so the conv-unit-routed form accumulates at
+        # the accumulator dtype -- int8 operands sum in int32, bf16 in
+        # f32 -- before the carry + final halving.  ("standard" stays the
+        # verbatim multiplier baseline, like core.matmul's standard.)
+        acc = sq.accum_dtype(dt)
+        out = jax.lax.conv_general_dilated(
+            x4.astype(dt), w4.astype(dt), strides, pads,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            preferred_element_type=acc)
+        out = sq.halve(out + out)
+    else:
+        out = jax.lax.conv_general_dilated(
+            x4.astype(dt), w4.astype(dt), strides, pads,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    return denormalize_conv2d(out, kind)
 
 
 def complex_correlate1d(x, w, *, mode: str = "standard"):

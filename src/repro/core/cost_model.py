@@ -29,7 +29,7 @@ __all__ = ["ArithCost", "mac_cost", "pm_mac_cost", "complex_mac_cost",
            "cpm4_cost", "cpm3_cost", "systolic_array_cost",
            "tensor_core_cost", "savings_table",
            "TileCost", "pm_tile_vmem_bytes", "pm_tile_vpu_ops",
-           "pm_grid_cost"]
+           "pm_grid_cost", "conv2d_window_elems", "conv2d_grid_cost"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,6 +206,71 @@ def pm_grid_cost(m: int, n: int, k: int, bm: int, bn: int, bk: int, kc: int,
                               n_col_ops, n_acc)
     return TileCost(vmem_bytes=vmem, vpu_ops=pm, grid_steps=grid,
                     chunk_steps=chunks)
+
+
+def conv2d_window_elems(bh: int, bw: int, kh: int, kw: int, bk: int,
+                        sh: int = 1, sv: int = 1) -> int:
+    """Input elements one fused-conv2d grid step loads: the shared window
+    covering every shifted view of a (bh, bw) output tile, ``bk`` channels
+    deep.  The im2col alternative would touch ``bh*bw*kh*kw*bk`` -- the
+    ratio of the two is the window-reuse factor the fused kernel banks."""
+    return ((bh - 1) * sh + kh) * ((bw - 1) * sv + kw) * bk
+
+
+def conv2d_grid_cost(oh: int, ow: int, kh: int, kw: int, cin: int, cout: int,
+                     bh: int, bw: int, bk: int, kc: int, bf: int,
+                     sh: int = 1, sv: int = 1, itemsize: int = 4,
+                     ops_per_pm: int = 3) -> TileCost:
+    """Full-call cost of a (bh, bw, bk, kc, bf) fused-conv2d plan.
+
+    Same accounting style as :func:`pm_grid_cost` (padded-shape VPU
+    lane-ops + per-step issue overheads under a VMEM ceiling), with the
+    conv-specific terms added:
+
+    - a grid step contracts its (bh*bw, kh*kw*bk) shifted-view slab
+      against a (kh*kw*bk, bf) tap block in ``kc``-wide chunks, so the
+      padded PM volume is ``M * (kh*kw*K) * N``;
+    - the data-side ``-x^2`` correction is folded at rank 2 once per
+      filter *block* (it is shared by the bf filters of a step), costing
+      ``2 * M * kh*kw*K`` lane-ops per cout walk;
+    - window loads are charged per step: overlapping windows mean a step
+      loads ``conv2d_window_elems`` rather than ``bh*bw*kh*kw*bk``
+      elements, so plans maximizing per-step reuse (larger tiles, all
+      filters in one block) genuinely score cheaper;
+    - VMEM holds the kernel's actual input block -- the FULL padded
+      spatial plane, ``bk`` channels deep (windows of adjacent tiles
+      overlap, so the kernel stages the plane, not a per-tile window) --
+      plus the tile-local slab (the in-SRAM im2col of one tile), tap
+      block, accumulator and live PM chunk.
+    """
+    gm = -(-oh // bh) * (-(-ow // bw))
+    gf = -(-cout // bf)
+    gc = -(-cin // bk)
+    grid = gm * gf * gc
+    ktot = kh * kw * bk                      # flattened per-step K axis
+    chunks = grid * (-(-ktot // kc))
+    m_pad = -(-oh // bh) * bh * (-(-ow // bw)) * bw
+    k_pad = gc * ktot
+    n_pad = gf * bf
+    pm = float(m_pad) * k_pad * n_pad * (ops_per_pm + 1.0 / max(1, kc))
+    corr = 2.0 * m_pad * k_pad * gf
+    window = conv2d_window_elems(bh, bw, kh, kw, bk, sh, sv)
+    loads = float(grid) * window
+    # the kernel's in_spec block: the whole padded plane, channel-sliced.
+    # Sized from the TILE-padded output extents (ohp = ceil(oh/bh)*bh):
+    # the wrapper pads the input until every padded tile's window load is
+    # in range, so that is what actually sits in VMEM.
+    ohp = -(-oh // bh) * bh
+    owp = -(-ow // bw) * bw
+    plane = conv2d_window_elems(ohp, owp, kh, kw, bk, sh, sv)
+    vmem = (2 * plane                        # double-buffered input block
+            + 2 * kh * kw * bk * bf          # tap block
+            + 2 * bh * bw * bf               # scratch + out tile
+            + bh * bw * ktot                 # tile-local shifted-view slab
+            + bh * bw * kc * bf              # live rank-3 PM chunk
+            + bf) * itemsize
+    return TileCost(vmem_bytes=vmem, vpu_ops=pm + corr + loads,
+                    grid_steps=grid, chunk_steps=chunks)
 
 
 def savings_table(bitwidths=(8, 16, 32), depth: int = 1024):

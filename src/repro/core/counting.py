@@ -225,7 +225,27 @@ _SCALES: List[int] = [1]
 
 @contextlib.contextmanager
 def track_contractions():
-    """Activate a :class:`ContractionCounter` for the enclosed region."""
+    """Activate a :class:`ContractionCounter` for the enclosed region.
+
+    Every :func:`repro.core.einsum.fs_einsum` traced inside the region
+    notes its ``B*M*K*N`` multiply volume and resolved mode (trace-time:
+    wrap scan bodies in :func:`count_scale`, and note that a *cached* jit
+    re-execution records nothing -- count under eager execution or a
+    fresh trace):
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import counting
+    >>> from repro.core.einsum import fs_einsum
+    >>> with counting.track_contractions() as ctr:
+    ...     _ = fs_einsum("mk,kn->mn", jnp.ones((4, 8)), jnp.ones((8, 2)),
+    ...                   mode="square_virtual", site="ffn")
+    >>> ctr.multiplies_replaced        # 4 * 8 * 2 multiplies, one square each
+    64
+    >>> ctr.fraction_square
+    1.0
+    >>> ctr.by_site()["ffn"]["mults"]
+    64
+    """
     ctr = ContractionCounter()
     _COUNTERS.append(ctr)
     try:

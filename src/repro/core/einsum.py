@@ -193,6 +193,20 @@ def fs_einsum(spec: str, x, y, *, mode: Optional[str] = None,
     site: call-site label for the policy and the contraction counter;
     preferred: accumulation dtype for the multiplier paths
     (``preferred_element_type``; square paths widen via ``accum_dtype``).
+
+    Any two-operand spec dispatches -- batched, transposed, ellipsis --
+    and ``square_virtual`` results match the multiplier baseline to
+    accumulator rounding:
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> from repro.core.einsum import fs_einsum
+    >>> x = jnp.asarray(np.arange(24.0, dtype=np.float32).reshape(2, 3, 4))
+    >>> y = jnp.asarray(np.ones((2, 4, 5), np.float32))
+    >>> out = fs_einsum("bmk,bkn->bnm", x, y, mode="square_virtual")
+    >>> out.shape
+    (2, 5, 3)
+    >>> bool(np.allclose(out, jnp.einsum("bmk,bkn->bnm", x, y), atol=1e-4))
+    True
     """
     x = jnp.asarray(x)
     y = jnp.asarray(y)

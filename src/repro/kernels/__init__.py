@@ -1,15 +1,19 @@
 """Pallas TPU emulation kernels for the paper's square-based datapaths.
 
 Layout:
-- ``sq_matmul`` / ``cpm3_matmul`` / ``cpm4_matmul`` / ``sq_conv``: raw
-  kernels (chunked block-PM accumulation, VMEM scratch accumulators);
+- ``sq_matmul`` / ``cpm3_matmul`` / ``cpm4_matmul`` / ``sq_conv`` /
+  ``sq_conv2d``: raw kernels (chunked block-PM accumulation, VMEM scratch
+  accumulators; ``sq_conv2d`` streams 2D windows without im2col);
 - ``ops``: jit'd public wrappers (widening, padding, corrections, planner);
-- ``tuning``: the (bm, bn, bk, kc) tile planner + autotune cache;
+- ``tuning``: the (bm, bn, bk, kc) / (bh, bw, bk, kc, bf) tile planners +
+  autotune cache;
 - ``ref``: pure-jnp oracles for the test sweeps.
 """
 from repro.kernels.ops import (sq_matmul, cpm3_matmul, cpm4_matmul, sq_conv,
-                               sq_conv2d, default_interpret)
-from repro.kernels.tuning import TilePlan, plan_matmul, plan_conv
+                               sq_conv2d, sq_conv2d_im2col, default_interpret)
+from repro.kernels.tuning import (TilePlan, Conv2DPlan, plan_matmul,
+                                  plan_conv, plan_conv2d)
 
 __all__ = ["sq_matmul", "cpm3_matmul", "cpm4_matmul", "sq_conv", "sq_conv2d",
-           "default_interpret", "TilePlan", "plan_matmul", "plan_conv"]
+           "sq_conv2d_im2col", "default_interpret", "TilePlan", "Conv2DPlan",
+           "plan_matmul", "plan_conv", "plan_conv2d"]

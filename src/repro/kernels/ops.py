@@ -21,15 +21,17 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import conv as conv_core
 from repro.core import squares as sq
 from repro.kernels import tuning
 from repro.kernels.sq_matmul import sq_matmul_pallas, sq_matmul_batched_pallas
 from repro.kernels.cpm3_matmul import cpm3_matmul_pallas
 from repro.kernels.cpm4_matmul import cpm4_matmul_pallas
 from repro.kernels.sq_conv import sq_conv_pallas
+from repro.kernels.sq_conv2d import sq_conv2d_pallas
 
 __all__ = ["sq_matmul", "cpm3_matmul", "cpm4_matmul", "sq_conv", "sq_conv2d",
-           "default_interpret"]
+           "sq_conv2d_im2col", "default_interpret"]
 
 
 def default_interpret() -> bool:
@@ -125,6 +127,18 @@ def sq_matmul(a, b, *, bm: int | None = None, bn: int | None = None,
     dispatcher's canonical (B, M, K) @ (B, K, N) shape.  A rank>2 ``a``
     against a 2D ``b`` keeps the dense-layer convention (leading dims
     collapse to rows).
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> from repro.kernels import ops
+    >>> a = jnp.asarray(np.arange(6.0, dtype=np.float32).reshape(2, 3))
+    >>> b = jnp.asarray(np.ones((3, 4), np.float32))
+    >>> out = ops.sq_matmul(a, b)            # squares only, exact contract
+    >>> bool(np.allclose(out, a @ b, atol=1e-5))
+    True
+    >>> ai = jnp.asarray([[3, -7]], jnp.int8)
+    >>> bi = jnp.asarray([[5], [2]], jnp.int8)
+    >>> int(ops.sq_matmul(ai, bi)[0, 0])     # int paths are bit-exact
+    1
     """
     interpret_r = default_interpret() if interpret is None else interpret
     if b.ndim == 3:
@@ -263,41 +277,152 @@ def sq_conv(x, w, *, bo: int | None = None, tb: int | None = None,
     return _sq_conv_impl(x, w, pbo, ptb, interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
-def _sq_conv2d_impl(x, w, plan, interpret):
-    kh, kw = w.shape[-2:]
-    H, W = x.shape
-    oh, ow = H - kh + 1, W - kw + 1
-    ih = jnp.arange(oh)[:, None] + jnp.arange(kh)[None, :]
-    iw = jnp.arange(ow)[:, None] + jnp.arange(kw)[None, :]
-    patches = x[ih[:, None, :, None], iw[None, :, None, :]]   # (oh,ow,kh,kw)
-    pmat = patches.reshape(oh * ow, kh * kw)
-    wmat = w.reshape(-1, kh * kw).T                           # (kh*kw, co)
-    out = _sq_matmul_impl(pmat, wmat, plan, interpret)        # (oh*ow, co)
-    if w.ndim == 2:
-        return out[:, 0].reshape(oh, ow)
-    return jnp.moveaxis(out.reshape(oh, ow, -1), -1, 0)       # (co, oh, ow)
-
-
-def sq_conv2d(x, w, *, interpret: bool | None = None):
-    """Square-based valid 2D correlation via im2col + the matmul kernel.
-
-    The paper's §5.1 2D windows are exactly a matrix view of the input
-    (each output pixel's receptive field flattened to a row), so the 2D
-    conv routes through ``sq_matmul``: patches (oh*ow, kh*kw) against the
-    flattened taps.  x: (H, W); w: (kh, kw) for one output plane (oh, ow),
-    or (co, kh, kw) for a multi-filter bank returning (co, oh, ow) --
-    multiple filters widen the matmul's N axis, which is what makes the
-    im2col route lane-efficient on TPU.
-    """
-    interpret = default_interpret() if interpret is None else interpret
-    H, W = x.shape
-    kh, kw = w.shape[-2:]
-    co = 1 if w.ndim == 2 else w.shape[0]
-    oh, ow = H - kh + 1, W - kw + 1
+def _conv2d_geometry(x4_shape, w4_shape, stride, padding):
+    """Resolve stride/padding and the output extents for rank-4 operands."""
+    strides = conv_core.resolve_stride(stride)
+    pads = conv_core.resolve_padding(padding, x4_shape[2:], w4_shape[2:],
+                                     strides)
+    (sh, sv) = strides
+    hp = x4_shape[2] + pads[0][0] + pads[0][1]
+    wp = x4_shape[3] + pads[1][0] + pads[1][1]
+    oh = (hp - w4_shape[2]) // sh + 1
+    ow = (wp - w4_shape[3]) // sv + 1
     if oh <= 0 or ow <= 0:
-        raise ValueError(f"kernel {w.shape} larger than input {x.shape}")
-    plan = _resolve_plan(oh * ow, co, kh * kw, x.dtype, bm=None, bn=None,
-                         bk=None, kc=None, pm_layout=None,
-                         interpret=interpret, kind="sq_matmul")
-    return _sq_conv2d_impl(x, w, plan, interpret)
+        raise ValueError(f"kernel {w4_shape[2:]} larger than padded input "
+                         f"({hp}, {wp})")
+    return strides, pads, (hp, wp), (oh, ow)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "stride", "pads",
+                                             "interpret"))
+def _sq_conv2d_fused_impl(x, w, plan, stride, pads, interpret):
+    """Fused path: widen, go channels-last, pad to tile multiples, run the
+    window-streaming kernel.  The im2col patch tensor is never built."""
+    sh, sv = stride
+    xw, ww = _widen(x, w)
+    cout, cin, kh, kw = ww.shape
+    # per-filter kernel correction BEFORE padding (padded taps are zero)
+    sw = -jnp.sum(sq.square(ww), axis=(1, 2, 3))[None, :]      # (1, cout)
+    xt = jnp.transpose(xw, (0, 2, 3, 1))                       # (B, H, W, C)
+    wt = jnp.transpose(ww, (2, 3, 1, 0))                       # (kh, kw, C, N)
+    xt = jnp.pad(xt, ((0, 0), pads[0], pads[1], (0, 0)))
+    hp, wp = xt.shape[1], xt.shape[2]
+    oh = (hp - kh) // sh + 1
+    ow = (wp - kw) // sv + 1
+    # pad the *output* grid to tile multiples, then the input far enough
+    # that every padded tile's window load stays in range (the extra
+    # outputs read zeros and are sliced away)
+    ohp = oh + (-oh) % plan.bh
+    owp = ow + (-ow) % plan.bw
+    need_h = (ohp - 1) * sh + kh
+    need_w = (owp - 1) * sv + kw
+    xt = jnp.pad(xt, ((0, 0), (0, max(0, need_h - hp)),
+                      (0, max(0, need_w - wp)), (0, 0)))
+    xt = _pad_to(xt, plan.bk, 3)                 # zero channels: exact no-ops
+    wt = _pad_to(_pad_to(wt, plan.bk, 2), plan.bf, 3)
+    sw = _pad_to(sw, plan.bf, 1)
+    out = sq_conv2d_pallas(xt, wt, sw, ohp=ohp, owp=owp, bh=plan.bh,
+                           bw=plan.bw, bk=plan.bk, bf=plan.bf, kc=plan.kc,
+                           stride=stride, pm_layout=plan.pm_layout,
+                           interpret=interpret)
+    out = out[:, :oh, :ow, :cout]
+    return jnp.transpose(out, (0, 3, 1, 2))      # back to (B, cout, oh, ow)
+
+
+def sq_conv2d(x, w, *, stride=1, padding="VALID", bh: int | None = None,
+              bw: int | None = None, bk: int | None = None,
+              kc: int | None = None, bf: int | None = None,
+              pm_layout: str | None = None, interpret: bool | None = None):
+    """Square-based 2D correlation via the FUSED window-streaming kernel.
+
+    The paper's §5.1 engine streams input windows straight through the PM
+    datapath; this wrapper runs its Pallas form
+    (:mod:`repro.kernels.sq_conv2d`): every (bh, bw) output tile loads its
+    input window once and slides the ``kh*kw`` shifted views through the
+    same block-PM machinery as ``sq_matmul`` -- the O(oh*ow*kh*kw) im2col
+    patch tensor is never materialized (that route survives as
+    :func:`sq_conv2d_im2col`, the reference).
+
+    x: (B, cin, H, W) -- or (cin, H, W), or plain (H, W) with rank-2/3
+    filters (see :func:`repro.core.conv.normalize_conv2d`); w: (cout, cin,
+    kh, kw).  ``stride`` is an int or (sh, sv); ``padding`` is "VALID",
+    "SAME", an int, or explicit (lo, hi) pairs.  Tile sizes default to
+    :func:`repro.kernels.tuning.plan_conv2d`.
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> from repro.kernels import ops
+    >>> x = jnp.asarray(np.arange(36.0, dtype=np.float32).reshape(6, 6))
+    >>> w = jnp.ones((3, 3), jnp.float32)
+    >>> out = ops.sq_conv2d(x, w)           # 3x3 box filter, squares only
+    >>> out.shape
+    (4, 4)
+    >>> bool(np.isclose(out[0, 0], x[:3, :3].sum()))
+    True
+    """
+    interpret_r = default_interpret() if interpret is None else interpret
+    x4, w4, kind = conv_core.normalize_conv2d(x, w)
+    strides, pads, (hp, wp), _ = _conv2d_geometry(x4.shape, w4.shape,
+                                                  stride, padding)
+    cout, cin, kh, kw = w4.shape
+    plan = tuning.plan_conv2d(
+        hp, wp, kh, kw, cin, cout, sq.accum_dtype(x4.dtype),
+        stride=strides, batch=x4.shape[0], bh=bh, bw=bw, bk=bk, kc=kc,
+        bf=bf, pm_layout=pm_layout or ("mnk" if interpret_r else "mkn"))
+    out = _sq_conv2d_fused_impl(x4, w4, plan, strides, pads, interpret_r)
+    return conv_core.denormalize_conv2d(out, kind)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "stride", "pads",
+                                             "interpret"))
+def _sq_conv2d_im2col_impl(x, w, plan, stride, pads, interpret):
+    """Reference path: materialize im2col patches, route through sq_matmul.
+
+    Kept as the ``square_exact`` conv2d reference -- each input pixel is
+    copied kh*kw times into the (B*oh*ow, cin*kh*kw) patch matrix, which
+    is exactly the HBM blowup the fused kernel exists to avoid.
+    """
+    sh, sv = stride
+    cout, cin, kh, kw = w.shape
+    xp = jnp.pad(x, ((0, 0), (0, 0), pads[0], pads[1]))
+    B, _, hp, wp = xp.shape
+    oh = (hp - kh) // sh + 1
+    ow = (wp - kw) // sv + 1
+    # materialize the patch tensor from kh*kw shifted (strided) views --
+    # each input pixel copied once per covering tap
+    taps = [jax.lax.slice(xp, (0, 0, di, dj),
+                          (B, cin, di + (oh - 1) * sh + 1,
+                           dj + (ow - 1) * sv + 1), (1, 1, sh, sv))
+            for di in range(kh) for dj in range(kw)]
+    patches = jnp.stack(taps)                    # (kh*kw, B, cin, oh, ow)
+    # -> (B, oh, ow, cin, kh*kw): K axis ordered (cin, kh, kw) to match wmat
+    patches = jnp.transpose(patches, (1, 3, 4, 2, 0))
+    pmat = patches.reshape(B * oh * ow, cin * kh * kw)
+    wmat = w.reshape(cout, cin * kh * kw).T
+    out = _sq_matmul_impl(pmat, wmat, plan, interpret)    # (B*oh*ow, cout)
+    out = out.reshape(B, oh, ow, cout)
+    return jnp.transpose(out, (0, 3, 1, 2))
+
+
+def sq_conv2d_im2col(x, w, *, stride=1, padding="VALID",
+                     interpret: bool | None = None):
+    """Square-based 2D correlation via im2col + the matmul kernel.
+
+    The §5.1 windows are a matrix view of the input (each output pixel's
+    receptive field flattened to a row), so the conv can route through
+    ``sq_matmul`` on a materialized (B*oh*ow, cin*kh*kw) patch matrix.
+    This is the *reference* route (conv2d mode ``square_exact``): simple
+    and lane-efficient, but it expands the input kh*kw-fold in HBM --
+    benchmark and production use go through the fused :func:`sq_conv2d`.
+    Accepts the same operand ranks / stride / padding as the fused path.
+    """
+    interpret_r = default_interpret() if interpret is None else interpret
+    x4, w4, kind = conv_core.normalize_conv2d(x, w)
+    strides, pads, _, (oh, ow) = _conv2d_geometry(x4.shape, w4.shape,
+                                                  stride, padding)
+    cout, cin, kh, kw = w4.shape
+    plan = _resolve_plan(x4.shape[0] * oh * ow, cout, cin * kh * kw,
+                         x4.dtype, bm=None, bn=None, bk=None, kc=None,
+                         pm_layout=None, interpret=interpret_r,
+                         kind="sq_matmul")
+    out = _sq_conv2d_im2col_impl(x4, w4, plan, strides, pads, interpret_r)
+    return conv_core.denormalize_conv2d(out, kind)

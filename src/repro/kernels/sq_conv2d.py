@@ -1,0 +1,174 @@
+"""Pallas TPU kernel: fused window-streaming 2D square-convolution (§5.1).
+
+The paper's §5.1 2D engine slides an (Mk, Nk) window over the input and
+pushes every window element through the PM datapath -- square of ``x + w``
+minus the shared ``x^2``, plus the precomputed kernel correction ``Sw``.
+The previous implementation reduced this to a matmul by **materializing**
+the im2col patch tensor (every input pixel copied ``kh*kw`` times into an
+O(oh*ow*kh*kw) HBM buffer) before calling ``sq_matmul``.  This kernel is
+the fused form: that patch tensor never exists.
+
+Dataflow (window streaming, implicit GEMM)
+------------------------------------------
+Outputs are tiled over a 5D grid ``(batch, oh/bh, ow/bw, cout/bf,
+cin/bk)``; the input-channel axis is the grid minor ("arbitrary")
+reduction axis, exactly like ``sq_matmul``'s K axis.  One grid step:
+
+- loads ONE input window of ``((bh-1)*sh + kh, (bw-1)*sv + kw, bk)``
+  covering every output pixel of the (bh, bw) tile -- each input element
+  reaches the step once, instead of being duplicated ``kh*kw`` times in
+  HBM;
+- forms the ``kh*kw`` shifted views of that single window with *static
+  (strided) slices* -- a register-level re-index -- and lays them side by
+  side as a (bh*bw, kh*kw*bk) operand slab: the tile-local im2col that
+  implicit-GEMM convolutions form in SRAM, never written back to HBM
+  and bounded by the tile size, not the image size;
+- routes the whole slab through ONE chunked block-PM contraction
+  (:func:`repro.kernels.sq_matmul.pm_block_accum` against the
+  (kh*kw*bk, bf) tap block: ``kc``-wide rank-2 broadcast squaring, both
+  ``"mkn"``/``"mnk"`` layouts, one homogeneous chunk loop), accumulating
+  into a VMEM scratch tile that is live across the whole channel walk;
+- folds the data-side correction (the slab's ``-x^2`` terms, shared by
+  all ``bf`` filters of the step) in one rank-2 pass -- O(M*K), not
+  O(M*K*N).
+
+The accumulator is initialized with the per-filter kernel correction
+``Sw_f = -sum_{c,i,j} w^2`` at the first channel step (the paper's
+"initialise the register" move, Fig.1b/Fig.5b) and the final channel step
+applies the paper's right shift (x0.5, arithmetic shift on int paths).
+
+Zero padding is exact by construction: a padded ``x = 0`` contributes
+``(0 + w)^2 - 0^2 = w^2``, exactly cancelled by the ``-w^2`` the ``Sw``
+init already carries for that tap.  The same argument covers padded
+channels and padded filters (both sides zero), so the wrapper in
+:mod:`repro.kernels.ops` pads freely to tile multiples.
+
+The input block keeps the full (padded) spatial plane of one batch
+element resident per step (windows of adjacent output tiles overlap, so
+spatial blocking would re-DMA the halos); at CNN-layer scales a
+channel-sliced plane slab is a few hundred KB and on real TPU silicon it
+is double-buffered by the pipeline.  Strided output (sh, sv > 1)
+subsamples the shifted views -- the window load itself stays dense, which
+is what keeps the tap walk a static re-index.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.sq_matmul import pm_block_accum
+
+__all__ = ["sq_conv2d_kernel", "sq_conv2d_pallas"]
+
+
+def sq_conv2d_kernel(x_ref, w_ref, sw_ref, out_ref, acc_ref, *, nc: int,
+                     kc: int, bh: int, bw: int, sh: int, sv: int,
+                     pm_layout: str, is_int: bool):
+    """One (b, i, j, f, c) grid step of the fused 2D square-convolution.
+
+    x_ref: (1, Hp, Wp, bk) this batch element's plane, channel-sliced;
+    w_ref: (kh, kw, bk, bf) tap block; sw_ref: (1, bf) filter corrections;
+    out_ref: (1, bh, bw, bf); acc_ref: (bh*bw, bf) VMEM scratch.
+    """
+    i = pl.program_id(1)                 # output-row tile
+    j = pl.program_id(2)                 # output-col tile
+    c = pl.program_id(4)                 # input-channel step (reduction)
+    kh, kw, bk, bf = w_ref.shape
+    bm = bh * bw
+
+    @pl.when(c == 0)
+    def _init():
+        # Accumulator init = Sw_f (paper eq 14 Sw): the per-filter kernel
+        # correction, broadcast to every output pixel of the tile.
+        acc_ref[...] = jnp.broadcast_to(sw_ref[0, :][None, :], (bm, bf))
+
+    # ONE window load covers all kh*kw shifted views of this tile.
+    ihb = (bh - 1) * sh + kh
+    iwb = (bw - 1) * sv + kw
+    xwin = pl.load(x_ref, (pl.ds(0, 1), pl.ds(i * (bh * sh), ihb),
+                           pl.ds(j * (bw * sv), iwb), slice(None)))[0]
+
+    # Tile-local operand slab: the kh*kw static (strided) shifted views of
+    # the shared window, laid out (bm, kh*kw*bk) tap-major to match the
+    # (kh, kw, bk, bf) -> (kh*kw*bk, bf) tap block.
+    views = []
+    for di in range(kh):
+        for dj in range(kw):
+            xs = jax.lax.slice(
+                xwin, (di, dj, 0),
+                (di + (bh - 1) * sh + 1, dj + (bw - 1) * sv + 1, bk),
+                (sh, sv, 1))                        # (bh, bw, bk)
+            views.append(xs.reshape(bm, bk))
+    a = views[0] if len(views) == 1 else jnp.concatenate(views, axis=1)
+
+    # One chunked block-PM contraction over the whole slab -- the same
+    # machinery and the same single homogeneous chunk loop as sq_matmul.
+    acc = pm_block_accum(acc_ref[...], a, w_ref[...].reshape(kh * kw * bk, bf),
+                         kc=kc, pm_layout=pm_layout)
+    # Data-side correction (-x^2, paper eq 14 Sx): rank-2, shared by all
+    # bf filters of the step -- O(M*K), not O(M*K*N).
+    acc_ref[...] = acc - jnp.sum(a * a, axis=1, keepdims=True)
+
+    @pl.when(c == nc - 1)
+    def _finalize():
+        accf = acc_ref[...]
+        if is_int:
+            res = jax.lax.shift_right_arithmetic(accf, jnp.ones_like(accf))
+        else:
+            res = accf * 0.5                        # the final right shift
+        out_ref[...] = res.reshape(1, bh, bw, bf)
+
+
+def sq_conv2d_pallas(x, w, sw, *, ohp: int, owp: int, bh: int, bw: int,
+                     bk: int, bf: int, kc: int | None = None,
+                     stride: tuple[int, int] = (1, 1),
+                     pm_layout: str = "mkn", interpret: bool = False):
+    """Raw pallas_call wrapper for the fused 2D square-convolution.
+
+    Operands must be pre-widened to the accumulator dtype and pre-padded
+    (see kernels.ops): x (B, Hp, Wp, Cp) channels-last, w (kh, kw, Cp, Np)
+    taps-major, sw (1, Np) per-filter ``-sum w^2`` corrections.  ``ohp`` /
+    ``owp`` are the padded output extents (multiples of bh/bw); the padded
+    input must cover every window: ``Hp >= (ohp-1)*sh + kh``.  ``kc``
+    chunks the *flattened* (kh*kw*bk)-wide per-step reduction axis and
+    must divide it (defaults to one unrolled chunk).
+    """
+    nb, Hp, Wp, Cp = x.shape
+    kh, kw, Cp2, Np = w.shape
+    sh, sv = stride
+    assert Cp == Cp2 and sw.shape == (1, Np), (x.shape, w.shape, sw.shape)
+    assert ohp % bh == 0 and owp % bw == 0, (ohp, owp, bh, bw)
+    assert Cp % bk == 0 and Np % bf == 0, (Cp, Np, bk, bf)
+    assert Hp >= (ohp - 1) * sh + kh and Wp >= (owp - 1) * sv + kw, \
+        (Hp, Wp, ohp, owp, stride, kh, kw)
+    ktot = kh * kw * bk
+    kc = ktot if kc is None else kc
+    assert ktot % kc == 0, (kh, kw, bk, kc)
+    nc = Cp // bk
+    is_int = jnp.issubdtype(x.dtype, jnp.integer)
+
+    kernel = functools.partial(sq_conv2d_kernel, nc=nc, kc=kc, bh=bh, bw=bw,
+                               sh=sh, sv=sv, pm_layout=pm_layout,
+                               is_int=is_int)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, ohp // bh, owp // bw, Np // bf, nc),
+        in_specs=[
+            # full spatial plane, channel-sliced (windows overlap tiles)
+            pl.BlockSpec((1, Hp, Wp, bk), lambda b, i, j, f, c: (b, 0, 0, c)),
+            pl.BlockSpec((kh, kw, bk, bf), lambda b, i, j, f, c: (0, 0, c, f)),
+            pl.BlockSpec((1, bf), lambda b, i, j, f, c: (0, f)),
+        ],
+        out_specs=pl.BlockSpec((1, bh, bw, bf),
+                               lambda b, i, j, f, c: (b, i, j, f)),
+        out_shape=jax.ShapeDtypeStruct((nb, ohp, owp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bh * bw, bf), x.dtype)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w, sw)

@@ -43,9 +43,10 @@ import jax.numpy as jnp
 from repro.core import cost_model as cm
 from repro.core import squares as sq
 
-__all__ = ["TilePlan", "plan_matmul", "plan_conv", "candidate_plans",
-           "autotune_matmul", "load_cache", "save_cache", "cache_path",
-           "clear_cache", "autotune_enabled"]
+__all__ = ["TilePlan", "Conv2DPlan", "plan_matmul", "plan_conv",
+           "plan_conv2d", "candidate_plans", "candidate_conv2d_plans",
+           "autotune_matmul", "autotune_conv2d", "load_cache", "save_cache",
+           "cache_path", "clear_cache", "autotune_enabled"]
 
 SUBLANE = 8            # f32 sublane granule (second-minor axis)
 LANE = 128             # lane granule (minor axis)
@@ -78,6 +79,26 @@ class TilePlan:
 
     def astuple(self):
         return (self.bm, self.bn, self.bk, self.kc)
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv2DPlan:
+    """Block plan for the fused window-streaming 2D conv kernel.
+
+    ``bh`` x ``bw`` is the output tile streamed per grid step (the input
+    window loaded once per step covers its ``(bh-1)*sh+kh`` x
+    ``(bw-1)*sv+kw`` receptive field); ``bk`` input channels are reduced
+    per step in ``kc``-wide PM chunks; ``bf`` filters share each window.
+    """
+    bh: int
+    bw: int
+    bk: int
+    kc: int
+    bf: int
+    pm_layout: str = "mkn"
+
+    def astuple(self):
+        return (self.bh, self.bw, self.bk, self.kc, self.bf)
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -120,12 +141,24 @@ def candidate_plans(m: int, n: int, k: int,
     """Enumerate aligned, budget-feasible plans for an (m, n, k) contraction.
 
     Every plan respects the VMEM budget; "mnk"-layout plans additionally
-    keep the live (bm, bn, kc) chunk under :data:`CACHE_BUDGET` (the layout
-    exists for cache-locality, so a chunk that spills defeats it).
+    cap ``kc`` at :data:`KC_MNK_MAX` and keep the hot loop-nest panel (the
+    transposed (bn, kc) column slab plus a sublane row stripe) inside
+    :data:`CACHE_BUDGET`.  (An earlier rule bounded the whole (bm, bn, kc)
+    chunk, which wrongly pruned large-bm single-grid-step plans -- the
+    measured winners on tall-skinny shapes like the im2col matmuls, where
+    one grid step with a streamed chunk beats many small tiles by ~8x in
+    interpret mode.)
+
+    The ladders always include the full-extent tile on every axis (a
+    single-grid-step plan pays zero padding waste and no pipeline
+    overhead; VMEM feasibility prunes it where it cannot fit).
     """
-    bms = sorted({_align_bm(c, m) for c in (8, 32, 64, 128, 256, 512)})
-    bns = sorted({_align_lane(c, n) for c in (128, 256, 512)})
-    bks = sorted({_align_lane(c, k) for c in (128, 256, 512)})
+    bms = sorted({_align_bm(c, m) for c in (8, 32, 64, 128, 256, 512)}
+                 | {_align_bm(m, m)})
+    bns = sorted({_align_lane(c, n) for c in (128, 256, 512)}
+                 | {_align_lane(n, n)})
+    bks = sorted({_align_lane(c, k) for c in (128, 256, 512)}
+                 | {_align_lane(k, k)})
     plans = []
     for bm in bms:
         for bn in bns:
@@ -133,7 +166,7 @@ def candidate_plans(m: int, n: int, k: int,
                 for kc in sorted({_align_kc(c, bk) for c in KC_CANDIDATES}):
                     if pm_layout == "mnk" and kc > 1 and (
                             kc > KC_MNK_MAX or
-                            bm * bn * kc * itemsize > CACHE_BUDGET):
+                            (bn + SUBLANE) * kc * itemsize > CACHE_BUDGET):
                         continue
                     cost = cm.pm_grid_cost(
                         m, n, k, bm, bn, bk, kc, itemsize=itemsize,
@@ -146,6 +179,84 @@ def candidate_plans(m: int, n: int, k: int,
         bk = _align_lane(LANE, k)
         plans = [TilePlan(bm, bn, bk, _align_kc(8, bk), pm_layout)]
     return plans
+
+
+def _divisor_near(target: int, extent: int) -> int:
+    """Largest tile <= ``target`` whose padded waste over ``extent`` is
+    small: prefer exact divisors of the extent, else the target itself."""
+    t = max(1, min(target, extent))
+    for cand in range(t, 0, -1):
+        if extent % cand == 0:
+            return cand
+        if cand <= t - 4:        # nothing nearby divides: accept padding
+            break
+    return t
+
+
+# The matmul "mnk" plans keep the live chunk inside CACHE_BUDGET; for the
+# fused conv that cap is measurably wrong -- the empirical winner at CNN
+# shapes is a full-plane tile whose (bh*bw, bf, kc) chunk far exceeds it
+# (the slab is walked once, not re-swept per grid step) -- so conv "mnk"
+# candidates get a looser ceiling and autotune arbitrates.
+CONV_MNK_CHUNK_BUDGET = 8 * 1024 * 1024
+
+
+def candidate_conv2d_plans(oh: int, ow: int, kh: int, kw: int, cin: int,
+                           cout: int, *, stride=(1, 1), itemsize: int = 4,
+                           pm_layout: str = "mkn",
+                           vmem_budget: int = VMEM_BUDGET
+                           ) -> list["Conv2DPlan"]:
+    """Enumerate budget-feasible plans for a fused 2D conv call.
+
+    Spatial tiles include the exact (oh, ow) extents (a full-plane tile
+    has zero padding waste and maximal window reuse); channel/filter
+    tiles follow the matmul K/N candidate ladders.  ``kc`` chunks the
+    flattened (kh*kw*bk) per-step reduction axis; "mnk" plans cap it at
+    :data:`KC_MNK_MAX` like the matmul planner.
+    """
+    sh, sv = stride
+    bhs = sorted({max(1, min(c, oh)) for c in (4, 8, 16, 32)} | {oh})
+    bws = sorted({_divisor_near(c, ow) for c in (8, 16, 32, 64, 128)} | {ow})
+    bks = sorted({max(1, min(c, cin)) for c in (8, 32, 64, 128)} | {cin})
+    bfs = sorted({_align_lane(c, cout) for c in (64, 128)}
+                 | {max(1, min(cout, 256))})
+    plans = []
+    for bh in bhs:
+        for bw in bws:
+            for bk in bks:
+                ktot = kh * kw * bk
+                for bf in bfs:
+                    for kc in sorted({_align_kc(c, ktot)
+                                      for c in KC_CANDIDATES}):
+                        if pm_layout == "mnk" and kc > 1 and (
+                                kc > KC_MNK_MAX or
+                                bh * bw * bf * kc * itemsize
+                                > CONV_MNK_CHUNK_BUDGET):
+                            continue
+                        cost = cm.conv2d_grid_cost(
+                            oh, ow, kh, kw, cin, cout, bh, bw, bk, kc, bf,
+                            sh, sv, itemsize=itemsize)
+                        if cost.vmem_bytes <= vmem_budget:
+                            plans.append(
+                                Conv2DPlan(bh, bw, bk, kc, bf, pm_layout))
+    if not plans:      # degenerate shapes: one minimal feasible plan
+        bk = max(1, min(8, cin))
+        plans = [Conv2DPlan(max(1, min(4, oh)), max(1, min(8, ow)), bk,
+                            _align_kc(8, kh * kw * bk),
+                            max(1, min(cout, 64)), pm_layout)]
+    return plans
+
+
+@functools.lru_cache(maxsize=1024)
+def _model_pick_conv2d(oh: int, ow: int, kh: int, kw: int, cin: int,
+                       cout: int, *, stride: tuple, itemsize: int,
+                       pm_layout: str) -> "Conv2DPlan":
+    sh, sv = stride
+    plans = candidate_conv2d_plans(oh, ow, kh, kw, cin, cout, stride=stride,
+                                   itemsize=itemsize, pm_layout=pm_layout)
+    return min(plans, key=lambda p: cm.conv2d_grid_cost(
+        oh, ow, kh, kw, cin, cout, *p.astuple(), sh, sv,
+        itemsize=itemsize).weighted)
 
 
 @functools.lru_cache(maxsize=1024)
@@ -197,9 +308,11 @@ def _warn_cache_miss(key: str) -> None:
     if key in _WARNED_MISS:
         return
     _WARNED_MISS.add(key)
+    fn = "autotune_conv2d" if key.startswith("sq_conv2d:") else \
+        "autotune_matmul"
     warnings.warn(
         f"autotune cache miss for {key}; falling back to the cost-model "
-        f"plan.  Run kernels.tuning.autotune_matmul once for this shape to "
+        f"plan.  Run kernels.tuning.{fn} once for this shape to "
         f"cache an empirical winner, or set REPRO_AUTOTUNE=0 to silence.",
         stacklevel=3)
 
@@ -258,6 +371,15 @@ def plan_matmul(m: int, n: int, k: int, dtype=jnp.float32, *,
     disables cache consultation (and the warning) entirely.  Explicit
     values are still clamped to the (padded) operand extent and aligned to
     the hardware granules, which may round them up (see module docstring).
+
+    Fully-specified plans skip cache and model (alignment still applies,
+    e.g. bm=100 rounds up to the next sublane multiple)::
+
+        >>> from repro.kernels import tuning
+        >>> tuning.plan_matmul(256, 256, 512, bm=64, bn=128, bk=128, kc=32)
+        TilePlan(bm=64, bn=128, bk=128, kc=32, pm_layout='mkn')
+        >>> tuning.plan_matmul(256, 256, 512, bm=100, bn=128, bk=128).bm
+        104
     """
     if bm is not None and bn is not None and bk is not None:
         # Fully specified: no enumeration, no cache consult.  Kept cheap on
@@ -307,6 +429,78 @@ def plan_conv(k_out: int, n_taps: int, dtype=jnp.float32, *,
     ptb = tb if tb is not None else (1 if interpret else 8)
     ptb = max(1, min(ptb, n_taps))
     return pbo, ptb
+
+
+def _conv2d_key(h: int, w: int, kh: int, kw: int, cin: int, cout: int,
+                dtype, stride=(1, 1), batch: int = 1) -> str:
+    sh, sv = stride
+    base = (f"sq_conv2d:{h}x{w}:k{kh}x{kw}:s{sh}x{sv}:c{cin}->{cout}:"
+            f"{jnp.dtype(dtype).name}")
+    return f"{base}:b{batch}" if batch > 1 else base
+
+
+def plan_conv2d(h: int, w: int, kh: int, kw: int, cin: int, cout: int,
+                dtype=jnp.float32, *, stride=(1, 1), batch: int = 1,
+                bh: Optional[int] = None, bw: Optional[int] = None,
+                bk: Optional[int] = None, kc: Optional[int] = None,
+                bf: Optional[int] = None,
+                pm_layout: str = "mkn") -> Conv2DPlan:
+    """Pick the (bh, bw, bk, kc, bf, pm_layout) plan for a fused 2D conv.
+
+    ``h`` / ``w`` are the *padded* input spatial extents the kernel will
+    see (user padding already applied); the output extents follow from
+    ``kh``/``kw`` and ``stride``.  ``dtype`` is the resolved *accumulator*
+    dtype (callers widen via ``sq.accum_dtype`` first, exactly like
+    :func:`plan_matmul` -- it keys the cache and sizes the VMEM terms,
+    and is not re-widened here).  Like :func:`plan_matmul`: explicit
+    user tiles > autotune cache (keyed on (h, w, kh, kw, cin, cout,
+    stride, dtype) and served only layout-matched) > the cost model
+    (:func:`repro.core.cost_model.conv2d_grid_cost` -- PM lane-ops plus
+    window-load traffic, so plans maximizing per-step window reuse win).
+    On a cache miss the planner warns once per key; ``REPRO_AUTOTUNE=0``
+    silences (see :func:`autotune_enabled`).
+
+    Fully-specified plans skip cache and model entirely (``kc`` is still
+    clamped to divide the flattened ``kh*kw*bk`` reduction axis)::
+
+        >>> from repro.kernels import tuning
+        >>> tuning.plan_conv2d(34, 34, 3, 3, 64, 64, bh=16, bw=32, bk=64,
+        ...                    kc=32, bf=64, pm_layout="mnk")
+        Conv2DPlan(bh=16, bw=32, bk=64, kc=32, bf=64, pm_layout='mnk')
+    """
+    sh, sv = stride
+    oh = (h - kh) // sh + 1
+    ow = (w - kw) // sv + 1
+    if oh <= 0 or ow <= 0:
+        raise ValueError(f"kernel {kh}x{kw} larger than padded input "
+                         f"{h}x{w}")
+    explicit = (bh, bw, bk, bf)
+    if all(v is not None for v in explicit):
+        pbk = max(1, min(bk, cin))
+        ktot = kh * kw * pbk
+        return Conv2DPlan(max(1, min(bh, oh)), max(1, min(bw, ow)), pbk,
+                          _align_kc(kc if kc is not None else ktot, ktot),
+                          max(1, min(bf, cout)), pm_layout)
+    itemsize = jnp.dtype(dtype).itemsize
+    use_cache = autotune_enabled()
+    key = _conv2d_key(h, w, kh, kw, cin, cout, dtype, stride, batch)
+    cached = load_cache().get(key) if use_cache else None
+    no_user = all(v is None for v in (bh, bw, bk, kc, bf))
+    if cached is not None and no_user \
+            and str(cached.get("pm_layout", pm_layout)) == pm_layout:
+        return Conv2DPlan(*(int(cached[f])
+                            for f in ("bh", "bw", "bk", "kc", "bf")),
+                          pm_layout)
+    if use_cache and cached is None and no_user:
+        _warn_cache_miss(key)
+    base = _model_pick_conv2d(oh, ow, kh, kw, cin, cout, stride=(sh, sv),
+                              itemsize=itemsize, pm_layout=pm_layout)
+    pbh = max(1, min(bh if bh is not None else base.bh, oh))
+    pbw = max(1, min(bw if bw is not None else base.bw, ow))
+    pbk = max(1, min(bk if bk is not None else base.bk, cin))
+    pbf = max(1, min(bf if bf is not None else base.bf, cout))
+    pkc = _align_kc(kc if kc is not None else base.kc, kh * kw * pbk)
+    return Conv2DPlan(pbh, pbw, pbk, pkc, pbf, pm_layout)
 
 
 # --------------------------------------------------------------------------
@@ -361,6 +555,56 @@ def autotune_matmul(shapes: Iterable[tuple[int, int, int]],
         cache[_key(kind, m, n, k, acc_dtype, batch)] = {
             "bm": best.bm, "bn": best.bn, "bk": best.bk, "kc": best.kc,
             "pm_layout": best.pm_layout, "us_per_call": best_us,
+        }
+    save_cache(cache, path)
+    return cache
+
+
+def autotune_conv2d(shapes: Iterable[tuple[int, int, int, int, int, int]],
+                    dtype=jnp.float32, *, stride=(1, 1),
+                    pm_layouts: tuple[str, ...] = ("mnk", "mkn"),
+                    max_candidates: int = 8, reps: int = 3,
+                    path: Optional[str] = None, batch: int = 1,
+                    verbose: bool = False) -> dict:
+    """Sweep fused-conv2d candidate plans; cache winners.
+
+    ``shapes`` holds (h, w, kh, kw, cin, cout) tuples where h/w are the
+    *padded* input extents (what :func:`plan_conv2d` keys on).  The
+    model-ranked top ``max_candidates`` plans per layout are timed via
+    :func:`benchmarks.kernel_timing.time_conv2d_plan`; the fastest is
+    written to the same JSON cache the planner consults.
+    """
+    from benchmarks import kernel_timing as kt     # lazy: benchmarks optional
+
+    acc_dtype = sq.accum_dtype(jnp.dtype(dtype))
+    itemsize = jnp.dtype(acc_dtype).itemsize
+    sh, sv = stride
+    cache = dict(load_cache(path))
+    for (h, w, kh, kw, cin, cout) in shapes:
+        oh = (h - kh) // sh + 1
+        ow = (w - kw) // sv + 1
+        best, best_us = None, float("inf")
+        for layout in pm_layouts:
+            plans = candidate_conv2d_plans(
+                oh, ow, kh, kw, cin, cout, stride=stride, itemsize=itemsize,
+                pm_layout=layout)
+            plans.sort(key=lambda p: cm.conv2d_grid_cost(
+                oh, ow, kh, kw, cin, cout, p.bh, p.bw, p.bk, p.kc, p.bf,
+                sh, sv, itemsize=itemsize).weighted)
+            for plan in plans[:max_candidates]:
+                us = kt.time_conv2d_plan(h, w, kh, kw, cin, cout, dtype,
+                                         plan, stride=stride, reps=reps,
+                                         batch=batch)
+                if verbose:
+                    print(f"  sq_conv2d {h}x{w} k{kh}x{kw} c{cin}->{cout} "
+                          f"{plan} -> {us:.1f}us")
+                if us < best_us:
+                    best, best_us = plan, us
+        cache[_conv2d_key(h, w, kh, kw, cin, cout, acc_dtype, stride,
+                          batch)] = {
+            "bh": best.bh, "bw": best.bw, "bk": best.bk, "kc": best.kc,
+            "bf": best.bf, "pm_layout": best.pm_layout,
+            "us_per_call": best_us,
         }
     save_cache(cache, path)
     return cache
