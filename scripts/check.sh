@@ -24,11 +24,14 @@ echo "== doctests (public-API examples) =="
 python -m pytest -q --doctest-modules \
   src/repro/core/einsum.py src/repro/core/counting.py \
   src/repro/configs/base.py src/repro/kernels/ops.py \
-  src/repro/kernels/tuning.py
+  src/repro/kernels/tuning.py src/repro/core/prepared.py
 
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
-  echo "== smoke bench (writes BENCH_kernels.json) =="
-  python benchmarks/run.py --json
+  echo "== smoke bench + regression gate (writes BENCH_kernels.json) =="
+  # --check compares fresh measurements against the seed baselines and the
+  # committed BENCH_kernels.json (read before --json overwrites it);
+  # BENCH_CHECK_TOL absorbs runner-speed drift on throttled CI machines.
+  BENCH_CHECK_TOL="${BENCH_CHECK_TOL:-0.15}" python benchmarks/run.py --json --check
 fi
 
 echo "check.sh: OK"

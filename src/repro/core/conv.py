@@ -224,16 +224,31 @@ def conv2d(x, w, *, stride=1, padding="VALID", mode: str = "standard",
         The materialized im2col reference: patches through the square
         matmul kernel (:func:`repro.kernels.ops.sq_conv2d_im2col`).
     ``square_pallas``
-        The fused window-streaming Pallas kernel
-        (:func:`repro.kernels.ops.sq_conv2d`) -- no patch tensor.
+        Planner-routed kernel execution: the fused window-streaming
+        Pallas kernel (:func:`repro.kernels.ops.sq_conv2d` -- no patch
+        tensor) where the window reuse pays, the im2col route where the
+        patch matrix stays cache-resident at tiny K volumes.  The choice
+        is made per shape by
+        :func:`repro.kernels.routing.select_conv2d_route`
+        (``REPRO_ROUTE`` pins it).
+
+    ``w`` may be a conv2d :class:`repro.core.prepared.PreparedOperand`
+    (:func:`repro.core.prepared.prepare_operand` with ``for_="conv2d"``):
+    the widened/laid-out filter planes and the ``Sw`` correction are then
+    reused across calls instead of recomputed -- the paper's
+    weight-stationary contract, bit-identical to raw dispatch.
     """
+    from repro.core.prepared import PreparedOperand
     if mode not in CONV2D_MODES:
         raise ValueError(f"unknown conv2d mode {mode!r}; expected one of "
                          f"{CONV2D_MODES}")
     if mode in ("square_exact", "square_pallas"):
         from repro.kernels import ops as kops    # lazy: kernels are optional
-        f = kops.sq_conv2d_im2col if mode == "square_exact" else kops.sq_conv2d
+        f = (kops.sq_conv2d_im2col if mode == "square_exact"
+             else kops.sq_conv2d_routed)
         return f(x, w, stride=stride, padding=padding, interpret=interpret)
+    if isinstance(w, PreparedOperand):
+        w = w.source
     x4, w4, kind = normalize_conv2d(x, w)
     strides = resolve_stride(stride)
     pads = resolve_padding(padding, x4.shape[2:], w4.shape[2:], strides)

@@ -29,7 +29,8 @@ __all__ = ["ArithCost", "mac_cost", "pm_mac_cost", "complex_mac_cost",
            "cpm4_cost", "cpm3_cost", "systolic_array_cost",
            "tensor_core_cost", "savings_table",
            "TileCost", "pm_tile_vmem_bytes", "pm_tile_vpu_ops",
-           "pm_grid_cost", "conv2d_window_elems", "conv2d_grid_cost"]
+           "pm_grid_cost", "conv2d_window_elems", "conv2d_patch_bytes",
+           "conv2d_grid_cost"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -215,6 +216,15 @@ def conv2d_window_elems(bh: int, bw: int, kh: int, kw: int, bk: int,
     deep.  The im2col alternative would touch ``bh*bw*kh*kw*bk`` -- the
     ratio of the two is the window-reuse factor the fused kernel banks."""
     return ((bh - 1) * sh + kh) * ((bw - 1) * sv + kw) * bk
+
+
+def conv2d_patch_bytes(oh: int, ow: int, kh: int, kw: int, cin: int,
+                       batch: int = 1, itemsize: int = 4) -> int:
+    """Bytes of the materialized im2col patch matrix
+    ``(B*oh*ow, cin*kh*kw)`` -- the O(oh*ow*kh*kw) HBM blowup the fused
+    kernel exists to avoid (paper §5.1).  The route planner keys the
+    fused-vs-im2col choice on whether this stays cache-resident."""
+    return batch * oh * ow * cin * kh * kw * itemsize
 
 
 def conv2d_grid_cost(oh: int, ow: int, kh: int, kw: int, cin: int, cout: int,

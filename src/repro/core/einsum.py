@@ -48,6 +48,7 @@ import jax.numpy as jnp
 
 from repro.core import counting
 from repro.core import matmul as fsmm
+from repro.core.prepared import PreparedOperand, unwrap
 
 __all__ = ["fs_einsum", "ContractionPlan", "plan_contraction",
            "resolve_mode"]
@@ -167,18 +168,32 @@ def _to_canonical(t, dims: str, target: str, shape3) -> jnp.ndarray:
 
 
 def _batched_matmul(a, b, mode: str, preferred):
-    """Canonical (B, M, K) @ (B, K, N) under a fair-square mode."""
+    """Canonical (B, M, K) @ (B, K, N) under a fair-square mode.
+
+    ``b`` may be a batched matmul :class:`PreparedOperand`; the
+    non-kernel modes use its raw source, ``square_pallas`` reuses the
+    prepared column slab.  The ``square_pallas`` route (batched grid vs
+    batch-folded row tiles vs the virtual fallback) is resolved by
+    :func:`repro.kernels.routing.select_matmul_route`.
+    """
     if mode == "square_virtual":
         # jnp.matmul batches natively, so the x2-carry/halving contract
         # lives in exactly one place
-        return fsmm.pm_matmul_virtual(a, b, preferred)
+        return fsmm.pm_matmul_virtual(a, unwrap(b), preferred)
     if mode == "square_exact":
-        return jax.vmap(fsmm.pm_matmul_exact)(a, b)
+        return jax.vmap(fsmm.pm_matmul_exact)(a, unwrap(b))
     if mode == "square_scan":
-        return jax.vmap(fsmm.pm_matmul_scan)(a, b)
+        return jax.vmap(fsmm.pm_matmul_scan)(a, unwrap(b))
     if mode == "square_pallas":
         from repro.kernels import ops as kops    # lazy: avoid import cycle
-        return kops.sq_matmul(a, b)
+        from repro.kernels import routing
+        B, M, K = a.shape
+        N = b.shape[-1] if not isinstance(b, PreparedOperand) else \
+            (b.shape[-2] if b.transposed else b.shape[-1])
+        route = routing.select_matmul_route(M, N, K, batch=B, dtype=a.dtype)
+        if route.name == "virtual":
+            return fsmm.pm_matmul_virtual(a, unwrap(b), preferred)
+        return kops.sq_matmul(a, b, fold=(route.name == "fold"))
     raise ValueError(f"unknown matmul mode {mode!r}; expected one of "
                      f"{fsmm.MODES}")
 
@@ -209,7 +224,9 @@ def fs_einsum(spec: str, x, y, *, mode: Optional[str] = None,
     True
     """
     x = jnp.asarray(x)
-    y = jnp.asarray(y)
+    prep = y if isinstance(y, PreparedOperand) else None
+    if prep is None:
+        y = jnp.asarray(y)
     mode = resolve_mode(mode, policy, site)
     if mode not in fsmm.MODES:
         raise ValueError(f"unknown matmul mode {mode!r}; expected one of "
@@ -225,19 +242,45 @@ def fs_einsum(spec: str, x, y, *, mode: Optional[str] = None,
 
     if mode == "standard":
         if preferred is None:
-            return jnp.einsum(spec, x, y)
-        return jnp.einsum(spec, x, y, preferred_element_type=preferred)
+            return jnp.einsum(spec, x, unwrap(y))
+        return jnp.einsum(spec, x, unwrap(y),
+                          preferred_element_type=preferred)
+
+    # A prepared y is consumed directly only when its canonical (K, N)
+    # layout IS the spec's: nothing summed out, single k/n (and batch)
+    # indices, and the y-side transpose matching how it was prepared.
+    # Anything else falls back to its raw source (still correct, just
+    # re-prepared per call).
+    prep_usable = prep is not None and plan.y_sum == "" \
+        and len(plan.k) == 1 and len(plan.n) == 1 and len(plan.batch) <= 1
+    if prep_usable:
+        if plan.batch:
+            prep_usable = (prep.kind == "matmul_batched"
+                           and not prep.transposed
+                           and plan.y_dims == plan.batch + plan.k + plan.n)
+        elif prep.transposed:
+            prep_usable = (prep.kind == "matmul"
+                           and plan.y_dims == plan.n + plan.k)
+        else:
+            prep_usable = (prep.kind == "matmul"
+                           and plan.y_dims == plan.k + plan.n)
+    if prep is not None and not prep_usable:
+        y = prep.source
+        prep = None
 
     # ---- canonicalize to (B, M, K) @ (B, K, N) ----
     x, x_dims = _sum_out(x, plan.x_dims, plan.x_sum)
-    y, y_dims = _sum_out(y, plan.y_dims, plan.y_sum)
+    if prep is None:
+        y, y_dims = _sum_out(y, plan.y_dims, plan.y_sum)
     if plan.batch:
         a = _to_canonical(x, x_dims, plan.batch + plan.m + plan.k, (B, M, K))
-        b = _to_canonical(y, y_dims, plan.batch + plan.k + plan.n, (B, K, N))
+        b = prep if prep is not None else _to_canonical(
+            y, y_dims, plan.batch + plan.k + plan.n, (B, K, N))
         out = _batched_matmul(a, b, mode, preferred)
     else:
         a = _to_canonical(x, x_dims, plan.m + plan.k, (M, K))
-        b = _to_canonical(y, y_dims, plan.k + plan.n, (K, N))
+        b = prep if prep is not None else _to_canonical(
+            y, y_dims, plan.k + plan.n, (K, N))
         out = fsmm.matmul(a, b, mode=mode, preferred=preferred)
 
     # ---- restore the requested output layout ----

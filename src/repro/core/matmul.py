@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import squares as sq
+from repro.core.prepared import PreparedOperand
 
 __all__ = ["matmul", "pm_matmul_exact", "pm_matmul_scan", "pm_matmul_virtual",
            "MODES", "set_default_mode", "get_default_mode"]
@@ -69,13 +70,6 @@ def set_default_mode(mode: str) -> None:
 
 def get_default_mode() -> str:
     return _DEFAULT_MODE
-
-
-def _check_shapes(a, b):
-    if a.shape[-1] != b.shape[0]:
-        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
-    if b.ndim != 2:
-        raise ValueError(f"rhs must be 2D (K, N), got {b.shape}")
 
 
 def _standard(a, b, preferred):
@@ -110,34 +104,45 @@ def pm_matmul_exact(a, b):
     return sq.halve(acc2)
 
 
-def pm_matmul_scan(a, b, block: int = 128):
+def pm_matmul_scan(a, b, block: int = 16):
     """Streamed faithful emulation: scan over K blocks (systolic streaming).
 
     The accumulator is *initialized with the corrections* ``Sa_i + Sb_j``,
-    exactly like the paper's Fig.1b / Fig.5b PEs, then PM terms stream in.
+    exactly like the paper's Fig.1b / Fig.5b PEs, then rank-2 PM blocks
+    stream in: each scan step contracts a ``block``-wide K slab in ONE
+    broadcast squaring pass over the (..., M, N, block) cube, reduced on
+    the *minor* axis (``b`` transposed once, outside the scan) -- the
+    dot-product-shaped loop nest XLA CPU vectorizes best, same layout
+    finding as the "mnk" Pallas kernels.  ``block`` trades the live
+    cube's footprint against scan-step count; ~16 keeps it inside the
+    cache working set at model-sized (256^3) shapes (measured ~19x over
+    the old full-K-slab (M, 128, N) layout: 41 ms -> 2.2 ms).
     """
     acc_dt = sq.accum_dtype(a.dtype)
     aw = a.astype(acc_dt)
     bw = b.astype(acc_dt)
     k = aw.shape[-1]
+    block = max(1, min(block, k))
     pad = (-k) % block
     if pad:
         # zero padding adds (0+0)^2 terms and zero corrections: exact.
         aw = jnp.pad(aw, [(0, 0)] * (aw.ndim - 1) + [(0, pad)])
         bw = jnp.pad(bw, [(0, pad), (0, 0)])
     nblk = aw.shape[-1] // block
+    n = bw.shape[1]
     sa = sq.row_correction(aw, axis=-1)
     sb = sq.col_correction(bw, axis=0)
     init = sa[..., None] + sb                    # accumulator init = Sa_i + Sb_j
-    init = jnp.broadcast_to(init, (*aw.shape[:-1], bw.shape[1])).astype(acc_dt)
+    init = jnp.broadcast_to(init, (*aw.shape[:-1], n)).astype(acc_dt)
 
     a_blocks = jnp.moveaxis(aw.reshape(*aw.shape[:-1], nblk, block), -2, 0)
-    b_blocks = bw.reshape(nblk, block, bw.shape[1])
+    bt = bw.T                                    # (N, K), transposed once
+    b_blocks = jnp.moveaxis(bt.reshape(n, nblk, block), -2, 0)
 
     def step(acc, ab):
-        ablk, bblk = ab                          # (..., block), (block, N)
-        term = jnp.sum(sq.square(ablk[..., :, None] + bblk[None, :, :]), axis=-2)
-        return acc + term, None
+        ablk, bblk = ab                          # (..., M, block), (N, block)
+        s = ablk[..., :, None, :] + bblk[None, :, :]   # (..., M, N, block)
+        return acc + jnp.sum(s * s, axis=-1), None
 
     acc2, _ = jax.lax.scan(step, init, (a_blocks, b_blocks))
     return sq.halve(acc2)
@@ -178,20 +183,52 @@ def pm_matmul_approx(a, b, *, drop_bits: int = 4, block: int = 128):
 
 
 def matmul(a, b, *, mode: Optional[str] = None, preferred=None):
-    """Dense contraction ``a[..., K] @ b[K, N]`` under a fair-square mode."""
-    _check_shapes(a, b)
+    """Dense contraction ``a[..., K] @ b[K, N]`` under a fair-square mode.
+
+    ``b`` may be a matmul :class:`repro.core.prepared.PreparedOperand`
+    (weight-stationary amortization, see :mod:`repro.core.prepared`): the
+    multiplier/virtual/exact/scan modes use its raw source (bit-identical
+    to raw dispatch), ``square_pallas`` reuses the prepared column slab.
+    The ``square_pallas`` route itself (kernel vs the MXU-form virtual
+    fallback below the kernel-overhead floor) is resolved by
+    :func:`repro.kernels.routing.select_matmul_route`.
+    """
+    prep = b if isinstance(b, PreparedOperand) else None
+    if prep is not None:
+        b_shape = ((prep.shape[-1], prep.shape[-2]) if prep.transposed
+                   else prep.shape)
+        # materialized lazily: the pallas route never touches the source
+        b_arr = lambda: (jnp.swapaxes(prep.source, -1, -2)
+                         if prep.transposed else prep.source)
+    else:
+        b_shape = b.shape
+        b_arr = lambda: b
+    if a.shape[-1] != b_shape[0]:
+        raise ValueError(f"contraction mismatch: {a.shape} @ "
+                         f"{tuple(b_shape)}")
+    if len(b_shape) != 2:
+        raise ValueError(f"rhs must be 2D (K, N), got {tuple(b_shape)}")
     mode = mode or _DEFAULT_MODE
     if mode == "standard":
-        out = _standard(a, b, preferred or sq.accum_dtype(a.dtype))
+        out = _standard(a, b_arr(), preferred or sq.accum_dtype(a.dtype))
     elif mode == "square_virtual":
-        out = pm_matmul_virtual(a, b, preferred)
+        out = pm_matmul_virtual(a, b_arr(), preferred)
     elif mode == "square_exact":
-        out = pm_matmul_exact(a, b)
+        out = pm_matmul_exact(a, b_arr())
     elif mode == "square_scan":
-        out = pm_matmul_scan(a, b)
+        out = pm_matmul_scan(a, b_arr())
     elif mode == "square_pallas":
         from repro.kernels import ops as kops    # lazy: avoid import cycle
-        out = kops.sq_matmul(a, b)
+        from repro.kernels import routing
+        import numpy as np
+        m_rows = int(np.prod(a.shape[:-1], dtype=np.int64))
+        k = a.shape[-1]
+        n = b_shape[-1]
+        route = routing.select_matmul_route(m_rows, n, k, dtype=a.dtype)
+        if route.name == "virtual":
+            out = pm_matmul_virtual(a, b_arr(), preferred)
+        else:
+            out = kops.sq_matmul(a, b)
     else:
         raise ValueError(f"unknown matmul mode {mode!r}; expected one of {MODES}")
     return out

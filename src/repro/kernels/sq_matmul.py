@@ -69,7 +69,8 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.pm_blocks import PM_LAYOUTS, pm_chunked_reduce
 
 __all__ = ["sq_matmul_kernel", "sq_matmul_pallas", "sq_matmul_batched_kernel",
-           "sq_matmul_batched_pallas", "pm_block_accum", "PM_LAYOUTS"]
+           "sq_matmul_batched_pallas", "sq_matmul_folded_kernel",
+           "pm_block_accum", "pm_block_accum_folded", "PM_LAYOUTS"]
 
 
 def pm_block_accum(acc, a, b, *, kc: int, pm_layout: str):
@@ -141,39 +142,107 @@ def sq_matmul_batched_kernel(a_ref, b_ref, sa_ref, sb_ref, out_ref, acc_ref,
             out_ref[...] = (acc * 0.5)[None]
 
 
+def pm_block_accum_folded(acc, a, b, *, kc: int, pm_layout: str):
+    """Batch-folded chunked PM accumulation.
+
+    a: (fb, bm, bk), b: (fb, bk, bn) values pre-widened to the accumulator
+    dtype; acc: the carried (fb, bm, bn) accumulator.  The ``fb`` batch
+    elements of one grid step are contracted in a single rank-4 broadcast
+    pass per chunk -- "folding batch into the M tile": ``fb * bm`` rows'
+    worth of PM work amortizes one grid step's issue overhead (the
+    small-(M, N), large-B regime of kernels.routing).
+    """
+    bk = a.shape[-1]
+    nc = bk // kc
+    if pm_layout == "mnk":
+        bt = jnp.swapaxes(b, 1, 2)                    # (fb, bn, bk)
+
+        def chunk(c, acc):
+            ab = jax.lax.dynamic_slice_in_dim(a, c * kc, kc, 2)
+            cb = jax.lax.dynamic_slice_in_dim(bt, c * kc, kc, 2)
+            s = ab[:, :, None, :] + cb[:, None, :, :]  # (fb, bm, bn, kc)
+            return acc + jnp.sum(s * s, axis=-1)
+    elif pm_layout == "mkn":
+        def chunk(c, acc):
+            ab = jax.lax.dynamic_slice_in_dim(a, c * kc, kc, 2)
+            cb = jax.lax.dynamic_slice_in_dim(b, c * kc, kc, 1)
+            s = ab[:, :, :, None] + cb[:, None, :, :]  # (fb, bm, kc, bn)
+            return acc + jnp.sum(s * s, axis=2)
+    else:
+        raise ValueError(f"unknown pm_layout {pm_layout!r}; expected one "
+                         f"of {PM_LAYOUTS}")
+    if nc == 1:
+        return chunk(0, acc)
+    return jax.lax.fori_loop(0, nc, chunk, acc)
+
+
+def sq_matmul_folded_kernel(a_ref, b_ref, sa_ref, sb_ref, out_ref, acc_ref,
+                            *, nk: int, kc: int, pm_layout: str,
+                            is_int: bool):
+    """One (batch-block, i, j, k) grid step with ``fb`` batch elements
+    folded into the row tile (see :func:`pm_block_accum_folded`)."""
+    k_step = pl.program_id(3)
+
+    @pl.when(k_step == 0)
+    def _init():
+        acc_ref[...] = sa_ref[...] + sb_ref[...]      # (fb,bm,1)+(fb,1,bn)
+
+    acc_ref[...] = pm_block_accum_folded(acc_ref[...], a_ref[...], b_ref[...],
+                                         kc=kc, pm_layout=pm_layout)
+
+    @pl.when(k_step == nk - 1)
+    def _finalize():
+        acc = acc_ref[...]
+        if is_int:
+            out_ref[...] = jax.lax.shift_right_arithmetic(
+                acc, jnp.ones_like(acc))
+        else:
+            out_ref[...] = acc * 0.5
+
+
 def sq_matmul_batched_pallas(a, b, sa, sb, *, bm: int = 256, bn: int = 256,
                              bk: int = 128, kc: int | None = None,
-                             pm_layout: str = "mkn",
+                             fb: int = 1, pm_layout: str = "mkn",
                              interpret: bool = False):
     """Batched pallas_call wrapper: a (B, m, k), b (B, k, n), corrections
-    sa (B, m, 1) / sb (B, 1, n).  One batch element per grid step on the
-    (new, outermost) batch grid axis -- batched GEMMs run natively instead
-    of collapsing to rows or falling back.  Operands pre-widened/padded as
-    in :func:`sq_matmul_pallas`."""
+    sa (B, m, 1) / sb (B, 1, n).  ``fb`` batch elements per grid step on
+    the (new, outermost) batch grid axis -- batched GEMMs run natively
+    instead of collapsing to rows or falling back.  ``fb == 1`` is the
+    one-element-per-step schedule; ``fb > 1`` folds a batch block into the
+    row tile (:func:`sq_matmul_folded_kernel`; B must be an fb multiple --
+    the ops wrapper zero-pads, and zero batch elements are exact no-ops).
+    Operands pre-widened/padded as in :func:`sq_matmul_pallas`."""
     nb, m, k = a.shape
     nb2, k2, n = b.shape
     assert nb == nb2 and k == k2
     assert sa.shape == (nb, m, 1) and sb.shape == (nb, 1, n)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    assert nb % fb == 0, (nb, fb)
     kc = bk if kc is None else kc
     assert bk % kc == 0, (bk, kc)
     nk = k // bk
     is_int = jnp.issubdtype(a.dtype, jnp.integer)
 
-    kernel = functools.partial(sq_matmul_batched_kernel, nk=nk, kc=kc,
-                               pm_layout=pm_layout, is_int=is_int)
+    if fb > 1:
+        kernel = functools.partial(sq_matmul_folded_kernel, nk=nk, kc=kc,
+                                   pm_layout=pm_layout, is_int=is_int)
+        scratch = pltpu.VMEM((fb, bm, bn), a.dtype)
+    else:
+        kernel = functools.partial(sq_matmul_batched_kernel, nk=nk, kc=kc,
+                                   pm_layout=pm_layout, is_int=is_int)
+        scratch = pltpu.VMEM((bm, bn), a.dtype)
     return pl.pallas_call(
         kernel,
-        grid=(nb, m // bm, n // bn, nk),
+        grid=(nb // fb, m // bm, n // bn, nk),
         in_specs=[
-            pl.BlockSpec((1, bm, bk), lambda bb, i, j, kk: (bb, i, kk)),
-            pl.BlockSpec((1, bk, bn), lambda bb, i, j, kk: (bb, kk, j)),
-            pl.BlockSpec((1, bm, 1), lambda bb, i, j, kk: (bb, i, 0)),
-            pl.BlockSpec((1, 1, bn), lambda bb, i, j, kk: (bb, 0, j)),
+            pl.BlockSpec((fb, bm, bk), lambda bb, i, j, kk: (bb, i, kk)),
+            pl.BlockSpec((fb, bk, bn), lambda bb, i, j, kk: (bb, kk, j)),
+            pl.BlockSpec((fb, bm, 1), lambda bb, i, j, kk: (bb, i, 0)),
+            pl.BlockSpec((fb, 1, bn), lambda bb, i, j, kk: (bb, 0, j)),
         ],
-        out_specs=pl.BlockSpec((1, bm, bn), lambda bb, i, j, kk: (bb, i, j)),
+        out_specs=pl.BlockSpec((fb, bm, bn), lambda bb, i, j, kk: (bb, i, j)),
         out_shape=jax.ShapeDtypeStruct((nb, m, n), a.dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), a.dtype)],
+        scratch_shapes=[scratch],
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),

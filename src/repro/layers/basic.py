@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import einsum as fse
+from repro.core import prepared as fsp
 from repro.core import squares as sq
 from repro.layers.param import ParamSpec
 
@@ -67,6 +68,10 @@ def dense_tp_reduce(p, x, *, mode: Optional[str] = None, out_dtype=None,
             or K % mesh.shape[axis] != 0):
         return dense_apply(p, x, mode=mode, out_dtype=out_dtype,
                            policy=policy, site=site)
+    # TP sharding splits the contraction axis, so the global-K prepared
+    # corrections do not apply per shard: the shard_map path always
+    # contracts the raw weight (each shard computes its local corrections).
+    w = fsp.unwrap(w)
     import numpy as np
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -98,7 +103,12 @@ def dense_tp_reduce(p, x, *, mode: Optional[str] = None, out_dtype=None,
 
 def dense_apply(p, x, *, mode: Optional[str] = None, out_dtype=None,
                 policy=None, site: str = "dense"):
-    """x[..., d_in] @ w[d_in, d_out] through the fair-square dispatch."""
+    """x[..., d_in] @ w[d_in, d_out] through the fair-square dispatch.
+
+    ``p["w"]`` may be a :class:`repro.core.prepared.PreparedOperand`
+    (weight-stationary inference: prepare once with
+    :func:`repro.core.prepared.prepare_operand` or
+    :meth:`repro.models.lm.LM.prepare_params`, reuse every call)."""
     w = p["w"]
     lead = x.shape[:-1]
     out = fse.fs_einsum("tk,kn->tn", x.reshape(-1, x.shape[-1]), w,

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import counting
+from repro.core import prepared
 from repro.core.einsum import fs_einsum
 from repro.layers import basic
 from repro.layers.param import ParamSpec
@@ -66,10 +67,14 @@ def attn_spec(cfg, stack: int = 0, cross: bool = False):
 
 
 def _proj_in(p, x, n, hd, mode, policy=None):
-    """x[..., d] @ w[d, n, hd] -> (..., n, hd), through fair-square dispatch."""
+    """x[..., d] @ w[d, n, hd] -> (..., n, hd), through fair-square dispatch.
+
+    ``p["w"]`` may be a PreparedOperand holding the already-reshaped
+    (d, n*hd) projection (see :meth:`repro.models.lm.LM.prepare_params`)."""
     w = p["w"]
-    d = w.shape[-3]
-    out = basic.dense_apply({"w": w.reshape(d, n * hd)}, x, mode=mode,
+    if not isinstance(w, prepared.PreparedOperand):
+        w = w.reshape(w.shape[-3], n * hd)
+    out = basic.dense_apply({"w": w}, x, mode=mode,
                             policy=policy, site="attn_qkv")
     out = out.reshape(*x.shape[:-1], n, hd)
     if "b" in p:
@@ -80,9 +85,14 @@ def _proj_in(p, x, n, hd, mode, policy=None):
 def _proj_out(p, x, mode, out_dtype, tp_reduce: bool = False, policy=None):
     """x[..., h, hd] @ w[h, hd, d] -> (..., d)."""
     w = p["w"]
-    h, hd, d = w.shape[-3:]
-    p2 = {"w": w.reshape(h * hd, d)}
-    xf = x.reshape(*x.shape[:-2], h * hd)
+    if isinstance(w, prepared.PreparedOperand):
+        h_hd = w.shape[0]                       # prepared as (h*hd, d)
+        p2 = {"w": w}
+        xf = x.reshape(*x.shape[:-2], h_hd)
+    else:
+        h, hd, d = w.shape[-3:]
+        p2 = {"w": w.reshape(h * hd, d)}
+        xf = x.reshape(*x.shape[:-2], h * hd)
     if tp_reduce:
         out = basic.dense_tp_reduce(p2, xf, mode=mode, policy=policy,
                                     site="attn_out")

@@ -186,12 +186,101 @@ class LM:
     # ------------------------------------------------------------ logits
     def logits(self, params, hidden):
         """Full logits (small models / tests only -- training uses the
-        chunked fused loss in repro.train.loss)."""
+        chunked fused loss in repro.train.loss).  A ``logits_prep`` entry
+        (set by :meth:`prepare_params`) supplies the prepared vocab table
+        -- the weight-stationary inference pattern."""
         cfg = self.cfg
-        table = params["embed"]["table"]
+        table = params.get("logits_prep")
+        if table is None:
+            table = params["embed"]["table"].astype(jnp.float32)
         return fs_einsum("bsd,vd->bsv", hidden.astype(jnp.float32),
-                         table.astype(jnp.float32), mode=cfg.matmul_mode,
+                         table, mode=cfg.matmul_mode,
                          policy=cfg.contraction_policy, site="logits")
+
+    # --------------------------------------------- prepared weights (infer)
+    def prepare_params(self, params, *, interpret=None):
+        """Weight-stationary inference params (paper §4-§5).
+
+        Returns a params tree where every dense/projection/expert weight
+        is wrapped in a :class:`repro.core.prepared.PreparedOperand`
+        (prepared ONCE: widened, corrections precomputed, tile-padded) and
+        a ``logits_prep`` entry carries the transposed vocab table, so
+        repeated forwards/decodes amortize the constant-operand work --
+        measurable under eager/interpret execution, free under jit
+        caching.  INFERENCE pattern: the prepared leaves are derived
+        values, not trainable params.
+
+        Layers under the ``lax.scan`` stack keep raw weights (scan slices
+        its operands along the period axis, which the prepared padded
+        layout does not support) -- use ``scan_layers=False`` configs to
+        prepare the whole stack.  Recurrent-mix weights also stay raw
+        (their specs transpose per step).
+        """
+        from repro.core.prepared import prepare_operand
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        H, KV = cfg.n_heads, cfg.n_kv_heads
+        interp = interpret
+
+        def prep_dense(p, site):
+            w = p["w"]
+            if w.ndim != 2:
+                return p                      # stacked (scan) leaf: keep raw
+            q = dict(p)
+            q["w"] = prepare_operand(w, site=site, interpret=interp)
+            return q
+
+        def prep_attn(p):
+            q = dict(p)
+            for nm, nh in (("wq", H), ("wk", KV), ("wv", KV)):
+                w = q[nm]["w"]
+                if w.ndim != 3:
+                    return p                  # stacked: keep the block raw
+                sub = dict(q[nm])
+                sub["w"] = prepare_operand(w.reshape(w.shape[0], nh * hd),
+                                           site="attn_qkv", interpret=interp)
+                q[nm] = sub
+            wo = q["wo"]["w"]
+            sub = dict(q["wo"])
+            sub["w"] = prepare_operand(wo.reshape(H * hd, wo.shape[-1]),
+                                       site="attn_out", interpret=interp)
+            q["wo"] = sub
+            return q
+
+        def prep_moe(p):
+            q = dict(p)
+            q["router"] = prep_dense(p["router"], "moe_router")
+            for nm in ("w_gate", "w_up", "w_down"):
+                w = p[nm]["w"]
+                if w.ndim != 3:
+                    return p
+                sub = dict(p[nm])
+                sub["w"] = prepare_operand(w, site="moe_expert",
+                                           interpret=interp)
+                q[nm] = sub
+            return q
+
+        def prep_block(p):
+            q = dict(p)
+            for key in ("attn", "xattn"):
+                if key in q:
+                    q[key] = prep_attn(q[key])
+            if "ffn" in q:
+                if "router" in q["ffn"]:
+                    q["ffn"] = prep_moe(q["ffn"])
+                else:
+                    q["ffn"] = {k: (prep_dense(v, "ffn") if k.startswith("w")
+                                    else v) for k, v in q["ffn"].items()}
+            return q
+
+        new = dict(params)
+        if "tail" in new:
+            new["tail"] = {k: prep_block(v) for k, v in new["tail"].items()}
+        table = params["embed"]["table"]
+        new["logits_prep"] = prepare_operand(table.astype(jnp.float32),
+                                             transpose=True, site="logits",
+                                             interpret=interp)
+        return new
 
     # ------------------------------------------------------------- cache
     def init_cache(self, batch_size: int, cache_len: int):

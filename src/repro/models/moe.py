@@ -12,6 +12,12 @@ expert GEMMs are batched einsums over the expert axis: FLOPs are exactly
 dense-compute inflation.
 
 Router aux (load-balance) loss follows Switch: E * sum_e f_e * P_e.
+
+The router weight and the batched (E, d, f) expert weights may arrive as
+:class:`repro.core.prepared.PreparedOperand` leaves (weight-stationary
+inference, see :meth:`repro.models.lm.LM.prepare_params`): ``fs_einsum``
+then reuses the prepared column slabs -- the batched expert GEMMs are
+exactly the constant-operand case the paper's §4 amortization targets.
 """
 from __future__ import annotations
 

@@ -15,14 +15,24 @@ import jax.numpy as jnp
 
 from repro.core import counting
 from repro.core.einsum import fs_einsum
+from repro.core.prepared import PreparedOperand
 
 __all__ = ["chunked_xent", "full_xent"]
+
+
+def _f32_table(table):
+    """The vocab table, f32-cast -- unless it arrives as a PreparedOperand
+    (weight-stationary serving: prepared once from the f32 table,
+    transposed; see repro.core.prepared)."""
+    if isinstance(table, PreparedOperand):
+        return table
+    return table.astype(jnp.float32)
 
 
 def _chunk_xent(hidden, labels, mask, table, mode=None, policy=None):
     """hidden (T, D) f32-ready; labels (T,); mask (T,); table (V, D)."""
     logits = fs_einsum("td,vd->tv", hidden.astype(jnp.float32),
-                       table.astype(jnp.float32), mode=mode, policy=policy,
+                       _f32_table(table), mode=mode, policy=policy,
                        site="loss")
     lse = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
@@ -79,7 +89,7 @@ def chunked_xent(hidden, labels, table, *, mask=None, chunk: int = 2048,
 def full_xent(hidden, labels, table, *, mask=None, mode=None, policy=None):
     """Reference unchunked xent (tests)."""
     logits = fs_einsum("bsd,vd->bsv", hidden.astype(jnp.float32),
-                       table.astype(jnp.float32), mode=mode, policy=policy,
+                       _f32_table(table), mode=mode, policy=policy,
                        site="loss")
     lse = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
