@@ -7,7 +7,9 @@ dry-run JSON if present.
 ``--json`` additionally writes ``BENCH_kernels.json``: the machine-readable
 perf trajectory (current kernel timings alongside the frozen seed-commit
 baselines, with speedup ratios) that future PRs use to track kernel
-speedups against this baseline.
+speedups against this baseline.  The serving-engine smoke bench
+(``benchmarks/serving.py``) rides along and writes ``BENCH_serving.json``
+(tokens/s, TTFT, cache-block utilization, square-routed fraction).
 
 ``--check`` is the CI bench regression gate: the fresh measurements are
 compared against the seed baselines (every ``speedup_vs_seed`` must stay
@@ -129,6 +131,10 @@ def check_regressions(payload, committed, tol=None):
       genuinely oscillate and stay informational;
     - a route-choice row whose planner decision flipped vs the committed
       file.
+
+    The serving-engine rows are gated separately by
+    :func:`benchmarks.serving.check_serving` (prepared-square tokens/s
+    >= 1.0x raw-square, square-routed fraction >= 0.9).
     """
     if tol is None:
         tol = float(os.environ.get("BENCH_CHECK_TOL", "0.0"))
@@ -162,7 +168,7 @@ def main(argv=None) -> None:
     check = "--check" in argv
     committed = load_committed() if check else None
 
-    from benchmarks import gatecost, kernel_timing, ratios
+    from benchmarks import gatecost, kernel_timing, ratios, serving
 
     # Timing rows are measured FIRST, while the process is cold: the claim
     # tables below burn ~a minute of sustained compute, and on quota-
@@ -173,6 +179,10 @@ def main(argv=None) -> None:
                    + kernel_timing.routed_conv2d_rows()
                    + kernel_timing.prepared_rows()
                    + kernel_timing.lm_forward_rows())
+    # Serving rows ride directly after the kernel timings: their gated
+    # quantity is an interleaved same-process ratio (prepared vs raw
+    # tokens/s), so later-phase throttling cannot flip it.
+    serving_rows = serving.serving_rows()
 
     # --- Paper claim 1: real matmul, eq (6): ratio -> 1 ---
     rows = ratios.real_matmul_ratio()
@@ -207,7 +217,18 @@ def main(argv=None) -> None:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['shape']},"
               f"{row['mode']}")
 
+    print("\n# serving engine (paged cache, continuous batching; "
+          "interp/eager)")
+    for row in serving_rows:
+        print(f"{row['name']},{row['tokens_per_s']:.2f}tok/s,"
+              f"ttft={row['mean_ttft_s'] * 1e3:.0f}ms,"
+              f"util={row['mean_block_utilization']:.2f},"
+              f"occupancy={row['batch_occupancy']:.2f}"
+              + (f",speedup_vs_raw={row['speedup_vs_raw']:.2f}"
+                 if "speedup_vs_raw" in row else ""))
+
     payload = build_bench_payload(timing_rows)
+    serving_payload = serving.build_serving_payload(serving_rows)
 
     # --- roofline summary from the dry-run, if present ---
     for path in ("dryrun_single_pod.json", "dryrun_multi_pod.json"):
@@ -217,7 +238,9 @@ def main(argv=None) -> None:
             print(format_table(build_report(path)))
 
     if check:
-        failures = check_regressions(payload, committed)
+        tol = float(os.environ.get("BENCH_CHECK_TOL", "0.0"))
+        failures = check_regressions(payload, committed) \
+            + serving.check_serving(serving_payload, tol)
         if failures:
             # Do NOT write the regressed payload: it would become the
             # next run's comparison baseline and silently ratchet the
@@ -231,6 +254,7 @@ def main(argv=None) -> None:
         print("\nbench regression gate: OK")
     if emit_json:
         write_bench_json(payload)
+        serving.write_serving_json(serving_payload)
 
     print("\nbenchmarks: ALL CLAIMS REPRODUCED")
 

@@ -27,6 +27,11 @@ python -m pytest -q --doctest-modules \
   src/repro/kernels/tuning.py src/repro/core/prepared.py
 
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
+  echo "== serving-engine demo (paged cache, continuous batching) =="
+  python -m repro.launch.serve --arch fairsquare-demo --reduced \
+    --requests 6 --max-new 4 --slots 4 --block-size 8 --blocks 32 \
+    --blocks-per-seq 6 --prefill-chunk 8
+
   echo "== smoke bench + regression gate (writes BENCH_kernels.json) =="
   # --check compares fresh measurements against the seed baselines and the
   # committed BENCH_kernels.json (read before --json overwrites it);

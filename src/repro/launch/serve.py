@@ -1,44 +1,42 @@
-"""Serving launcher: batched request serving with continuous batching.
+"""Serving launcher: the paged continuous-batching engine (default) or the
+dense reference Server (``--legacy``), with A/B switches for the
+fair-square datapath:
 
     PYTHONPATH=src python -m repro.launch.serve --arch fairsquare-demo \
         --reduced --requests 8 --max-new 16
+
+    # prepared-square serving (weight-stationary decode, paper §4-§5):
+    PYTHONPATH=src python -m repro.launch.serve --arch fairsquare-demo \
+        --reduced --prepared --matmul-mode square_pallas \
+        --policy square_gemms
+
+``--route`` pins the square_pallas execution route for the whole run
+(sets ``REPRO_ROUTE``; see kernels/routing.py), e.g. ``--route
+matmul=fold`` or ``--route virtual``.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 import jax
 import numpy as np
 
 from repro.configs import get_config
+from repro.configs.base import SQUARE_GEMMS_POLICY
+from repro.models.blocks import PAGEABLE_KINDS
 from repro.models.lm import build_model
+from repro.serve.engine import Engine, EngineConfig
 from repro.serve.server import Request, ServeConfig, Server
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="fairsquare-demo")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--matmul-mode", default=None)
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    if args.matmul_mode:
-        cfg = dataclasses.replace(cfg, matmul_mode=args.matmul_mode)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-
-    rng = np.random.default_rng(0)
+def make_requests(cfg, n: int, seed: int = 0, lo: int = 4, hi: int = 24):
+    rng = np.random.default_rng(seed)
     reqs = []
-    for rid in range(args.requests):
-        plen = int(rng.integers(4, 24))
+    for rid in range(n):
+        plen = int(rng.integers(lo, hi))
         extras = {}
         if cfg.prefix_tokens:
             extras["patches"] = rng.normal(
@@ -48,16 +46,94 @@ def main(argv=None):
                 size=(cfg.encoder_seq, cfg.d_model)).astype(np.float32)
         reqs.append(Request(rid, rng.integers(0, cfg.vocab, plen,
                                               dtype=np.int32), extras or None))
+    return reqs
 
-    server = Server(model, params, ServeConfig(max_batch=args.max_batch,
-                                               cache_len=128,
-                                               max_new_tokens=args.max_new))
-    t0 = time.perf_counter()
-    results = server.run(reqs)
-    dt = time.perf_counter() - t0
-    total_new = sum(len(v) for v in results.values())
-    print(f"served {len(results)} requests, {total_new} tokens "
-          f"in {dt:.2f}s ({total_new / dt:.1f} tok/s)")
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="fairsquare-demo")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--matmul-mode", default=None)
+    ap.add_argument("--policy", choices=["none", "square_gemms"],
+                    default="none",
+                    help="per-site contraction policy (square_gemms = "
+                         "square everywhere but the attention softmax path)")
+    ap.add_argument("--route", default=None,
+                    help="pin the square_pallas route (REPRO_ROUTE syntax: "
+                         "a route name or matmul=...,conv2d=...)")
+    ap.add_argument("--prepared", action="store_true",
+                    help="LM.prepare_params once at start: weight-"
+                         "stationary prepared operands on every serving "
+                         "GEMM")
+    ap.add_argument("--legacy", action="store_true",
+                    help="dense reference Server instead of the paged "
+                         "engine")
+    # legacy batch geometry
+    ap.add_argument("--max-batch", type=int, default=4)
+    # engine geometry
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--blocks", type=int, default=64)
+    ap.add_argument("--blocks-per-seq", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    args = ap.parse_args(argv)
+
+    if args.route:
+        os.environ["REPRO_ROUTE"] = args.route
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.matmul_mode:
+        cfg = dataclasses.replace(cfg, matmul_mode=args.matmul_mode)
+    if args.policy == "square_gemms":
+        cfg = dataclasses.replace(cfg,
+                                  contraction_policy=SQUARE_GEMMS_POLICY)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    legacy = args.legacy
+    if not legacy and (cfg.encoder_layers or cfg.prefix_tokens
+                       or any(k not in PAGEABLE_KINDS
+                              for k in cfg.layer_kinds)):
+        print(f"note: arch {cfg.name!r} has non-KV decode state; "
+              f"falling back to the dense reference Server")
+        legacy = True
+
+    reqs = make_requests(cfg, args.requests)
+
+    if legacy:
+        if args.prepared:
+            params = model.prepare_params(params)
+        server = Server(model, params,
+                        ServeConfig(max_batch=args.max_batch, cache_len=128,
+                                    max_new_tokens=args.max_new))
+        t0 = time.perf_counter()
+        results = server.run(reqs)
+        dt = time.perf_counter() - t0
+        total_new = sum(len(v) for v in results.values())
+        print(f"[legacy] served {len(results)} requests, {total_new} tokens "
+              f"in {dt:.2f}s ({total_new / dt:.1f} tok/s)")
+    else:
+        ecfg = EngineConfig(max_slots=args.slots, block_size=args.block_size,
+                            num_blocks=args.blocks,
+                            blocks_per_seq=args.blocks_per_seq,
+                            prefill_chunk=args.prefill_chunk,
+                            max_new_tokens=args.max_new,
+                            prepared=args.prepared)
+        engine = Engine(model, params, ecfg)
+        results = engine.run(reqs)
+        m = engine.metrics
+        print(f"[engine] served {len(results)} requests, {m.tokens_out} "
+              f"tokens in {m.wall_s:.2f}s ({m.tokens_per_s:.1f} tok/s, "
+              f"mode={cfg.matmul_mode}, prepared={args.prepared})")
+        print(f"  ttft mean {m.mean_ttft_s * 1e3:.0f}ms | block util "
+              f"{m.mean_utilization:.0%} (peak {m.peak_blocks_used} blk) | "
+              f"occupancy {m.batch_occupancy:.2f} slots/step | "
+              f"{m.prefill_chunks} prefill chunks, {m.decode_steps} decode "
+              f"steps, {m.preemptions} preemptions")
     for rid in sorted(results)[:4]:
         print(f"  req {rid}: {results[rid][:8]}...")
     assert len(results) == args.requests

@@ -24,7 +24,14 @@ from repro.core.einsum import fs_einsum
 from repro.layers import basic
 from repro.layers.param import ParamSpec
 
-__all__ = ["attn_spec", "attn_forward", "attn_decode", "chunked_attention"]
+__all__ = ["attn_spec", "attn_forward", "attn_decode", "chunked_attention",
+           "init_paged_kv_cache", "paged_slots", "paged_gather_indices",
+           "EMPTY_POS"]
+
+# Sentinel position of an unwritten / freed / padded physical cache slot.
+# Any value >= 2**29 is treated as "never attend" by the decode masks (the
+# dense cache uses the same convention for its ``pos`` buffer).
+EMPTY_POS = 2 ** 30
 
 NEG_INF = -1e30
 
@@ -268,7 +275,8 @@ def attn_forward(p, x, *, cfg, positions, causal: bool = True,
 
 
 def attn_decode(p, x, cache, pos, *, cfg, window: Optional[int] = None,
-                cross_cache=None, mode: Optional[str] = None, policy=None):
+                cross_cache=None, mode: Optional[str] = None, policy=None,
+                paged=None):
     """Single-token decode.  x: (B, 1, D); cache: dict(k, v) with layout
     (B, T, KV, hd) (ring buffer when ``window``).
 
@@ -279,7 +287,16 @@ def attn_decode(p, x, cache, pos, *, cfg, window: Optional[int] = None,
     batched scatter -- correct everywhere, but GSPMD lowers it with a full
     cache all-gather (measured 2.1 GB x 96 per step on moonshot decode), so
     the distributed launcher always decodes in lockstep.
+
+    ``paged`` switches to the paged-KV-cache path (the serving engine):
+    ``cache`` is then a POOL ``{"k": (P, KV, hd), "v": (P, KV, hd)}``
+    shared by every sequence, ``x`` may carry a multi-token chunk
+    ``(B, S, D)`` (chunked prefill) and ``pos`` is ``(B, S)`` absolute
+    positions with ``-1`` marking padding.  See :func:`_attn_paged_step`.
     """
+    if paged is not None:
+        return _attn_paged_step(p, x, cache, pos, cfg=cfg, window=window,
+                                mode=mode, policy=policy, paged=paged)
     B, _, D = x.shape
     hd = cfg.resolved_head_dim
     H, KV = cfg.n_heads, cfg.n_kv_heads
@@ -342,6 +359,104 @@ def attn_decode(p, x, cache, pos, *, cfg, window: Optional[int] = None,
     out = out.reshape(B, 1, H, hd).astype(dt)
     return _proj_out(p["wo"], out, mode, x.dtype,
                      tp_reduce=cfg.tp_bf16_reduce, policy=policy), new_cache
+
+
+def paged_slots(tables, positions, block_size: int):
+    """Physical pool slot of each (sequence, position) pair.
+
+    ``tables``: (B, nb) int32 block table (block ids into the shared pool;
+    block 0 is the reserved NULL block).  ``positions``: (B, S) absolute
+    token positions, ``-1`` for padding.  Returns (B, S) flat indices into
+    a (num_blocks * block_size, ...) pool; padded entries map to slot 0
+    (inside the null block, never attended because its ``pos_pool`` entry
+    stays :data:`EMPTY_POS`).
+    """
+    pos_r = jnp.maximum(positions, 0)
+    blk = jnp.take_along_axis(tables, pos_r // block_size, axis=1)
+    phys = blk * block_size + pos_r % block_size
+    return jnp.where(positions >= 0, phys, 0).astype(jnp.int32)
+
+
+def paged_gather_indices(tables, block_size: int):
+    """(B, nb * block_size) flat pool indices covering each sequence's
+    logical cache window, in position order (the gather-based attention
+    read: ``pool[idx]`` materializes a (B, T, KV, hd) view)."""
+    B, nb = tables.shape
+    offs = jnp.arange(block_size, dtype=tables.dtype)
+    return (tables[:, :, None] * block_size
+            + offs[None, None, :]).reshape(B, nb * block_size)
+
+
+def _attn_paged_step(p, x, cache, pos, *, cfg, window, mode, policy, paged):
+    """Multi-token attention step against the paged KV pool.
+
+    One code path serves both the engine's chunked prefill (S = chunk) and
+    batched decode (S = 1): new K/V are scattered to their physical slots,
+    then every query attends over the GATHERED logical window of its own
+    block table with an absolute-position causal mask -- prior chunks and
+    intra-chunk causality fall out of the same ``kv_pos <= q_pos`` rule.
+
+    ``paged``: dict(tables (B, nb), pos_pool (P,) -- already holding this
+    chunk's positions (the LM scatters once per step, shared across
+    layers), phys (B, S) precomputed by :func:`paged_slots`, block_size).
+    Sliding windows mask by position distance instead of ring-indexing, so
+    SWA archs run correctly (at full-length pool footprint).
+    """
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    dt = jnp.dtype(cfg.dtype)
+    pos_r = jnp.maximum(pos, 0)
+
+    q = _proj_in(p["wq"], x, H, hd, mode, policy).astype(dt)
+    k1 = _proj_in(p["wk"], x, KV, hd, mode, policy).astype(dt)
+    v1 = _proj_in(p["wv"], x, KV, hd, mode, policy).astype(dt)
+    qr = basic.rope(q, pos_r, cfg.rope_theta)
+    k1 = basic.rope(k1, pos_r, cfg.rope_theta)
+
+    phys = paged["phys"].reshape(B * S)
+    k_pool = cache["k"].at[phys].set(k1.reshape(B * S, KV, hd)
+                                     .astype(cache["k"].dtype))
+    v_pool = cache["v"].at[phys].set(v1.reshape(B * S, KV, hd)
+                                     .astype(cache["v"].dtype))
+
+    idx = paged_gather_indices(paged["tables"], paged["block_size"])
+    k = jnp.take(k_pool, idx, axis=0)                  # (B, T, KV, hd)
+    v = jnp.take(v_pool, idx, axis=0)
+    kv_pos = jnp.take(paged["pos_pool"], idx, axis=0)  # (B, T)
+
+    valid = (kv_pos[:, None, :] <= pos[:, :, None]) \
+        & (kv_pos[:, None, :] < 2 ** 29)               # (B, S, T)
+    if window is not None:
+        valid &= (pos[:, :, None] - kv_pos[:, None, :]) < window
+
+    qf = qr.reshape(B, S, KV, G, hd).astype(jnp.float32) * hd ** -0.5
+    s = fs_einsum("bqkgh,btkh->bkgqt", qf, k.astype(jnp.float32),
+                  mode=mode, policy=policy, site="attn_scores")
+    s = _softcap(s, cfg.attn_logit_softcap)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = fs_einsum("bkgqt,btkh->bqkgh", w, v.astype(jnp.float32),
+                    mode=mode, policy=policy, site="attn_pv")
+    out = out.reshape(B, S, H, hd).astype(dt)
+    return _proj_out(p["wo"], out, mode, x.dtype,
+                     tp_reduce=cfg.tp_bf16_reduce, policy=policy), \
+        {"k": k_pool, "v": v_pool}
+
+
+def init_paged_kv_cache(cfg, pool_slots: int):
+    """Empty paged KV pool: ``pool_slots`` = num_blocks * block_size
+    physical token slots shared by every sequence (block tables map logical
+    positions to slots).  Position bookkeeping lives in the engine's single
+    shared ``pos_pool`` -- the layout is identical across layers, so it is
+    not replicated per layer like the dense cache's ``pos``."""
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((pool_slots, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((pool_slots, cfg.n_kv_heads, hd), dt),
+    }
 
 
 def init_kv_cache(cfg, batch: int, max_len: int, window: Optional[int] = None):

@@ -166,7 +166,12 @@ def block_forward(kind: str, p, x, ctx) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
 
 
 def block_decode(kind: str, p, x, cache, ctx) -> Tuple[jnp.ndarray, Any]:
-    """Single-token decode step.  x: (B, 1, D)."""
+    """Single-token decode step.  x: (B, 1, D).
+
+    When ``ctx["paged"]`` is set (the serving engine), the attention cache
+    is the shared paged pool, ``x`` may be a multi-token chunk (B, S, D)
+    and ``ctx["pos"]`` is (B, S) -- see ``attention._attn_paged_step``.
+    """
     cfg = ctx["cfg"]
     mode = ctx["mode"]
     policy = ctx.get("policy")
@@ -174,9 +179,10 @@ def block_decode(kind: str, p, x, cache, ctx) -> Tuple[jnp.ndarray, Any]:
     h = _norm_apply(cfg, p["ln1"], x)
     if kind in ("attn", "moe", "lattn", "xdec"):
         out, new_kv = attn.attn_decode(
-            p["attn"], h, {k: cache[k] for k in ("k", "v", "pos")}, pos,
+            p["attn"], h,
+            {k: cache[k] for k in ("k", "v", "pos") if k in cache}, pos,
             cfg=cfg, window=_window_for(kind, cfg), mode=mode,
-            policy=policy)
+            policy=policy, paged=ctx.get("paged"))
         x = x + out
         new_cache = dict(cache)
         new_cache.update(new_kv)
@@ -214,6 +220,22 @@ def block_decode(kind: str, p, x, cache, ctx) -> Tuple[jnp.ndarray, Any]:
                                       policy=policy)
         return x, state
     raise ValueError(kind)
+
+
+#: Block kinds whose decode cache is a KV dict -- the kinds the paged
+#: serving engine supports (recurrent state and cross-attention caches are
+#: per-slot, not positional, so paging does not apply to them).
+PAGEABLE_KINDS = ("attn", "moe", "lattn")
+
+
+def block_init_paged_cache(kind: str, cfg, pool_slots: int):
+    """Empty paged KV pool for one layer (see ``attn.init_paged_kv_cache``)."""
+    if kind not in PAGEABLE_KINDS:
+        raise ValueError(
+            f"block kind {kind!r} has no paged decode cache; the paged "
+            f"serving engine supports {PAGEABLE_KINDS} (use the dense "
+            f"reference Server for recurrent / encoder-decoder archs)")
+    return attn.init_paged_kv_cache(cfg, pool_slots)
 
 
 def block_init_cache(kind: str, cfg, batch: int, cache_len: int,

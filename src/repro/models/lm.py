@@ -302,6 +302,92 @@ class LM:
                 for i, k in enumerate(tail)}
         return cache
 
+    # ------------------------------------------------------- paged decode
+    def init_paged_cache(self, pool_slots: int):
+        """Per-layer paged KV pools (the serving engine's cache): every
+        attention layer gets a ``(pool_slots, KV, hd)`` k/v pool shared by
+        all sequences; block tables (held by the engine) map each
+        sequence's logical positions onto pool slots.  Raises for archs
+        with non-KV decode state (recurrent / encoder-decoder) -- those
+        serve through the dense reference ``Server``."""
+        cfg = self.cfg
+        if cfg.encoder_layers or cfg.prefix_tokens:
+            raise ValueError(
+                "paged serving supports plain decoder LMs; encoder-decoder "
+                "and prefix-token archs use the dense reference Server")
+        n_scan, period, tail = _period_split(cfg)
+        cache: Dict[str, Any] = {}
+        if n_scan:
+            def stack(kind):
+                one = blk.block_init_paged_cache(kind, cfg, pool_slots)
+                return jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (n_scan,) + a.shape).copy(),
+                    one)
+            cache["scan"] = {f"pos{i}": stack(k)
+                             for i, k in enumerate(period)}
+        if tail:
+            cache["tail"] = {
+                f"layer{i}": blk.block_init_paged_cache(k, cfg, pool_slots)
+                for i, k in enumerate(tail)}
+        return cache
+
+    def decode_paged(self, params, cache, tokens, positions, tables,
+                     pos_pool, *, block_size: int):
+        """One multi-token step against the paged cache.
+
+        ``tokens``/``positions``: (B, S) int32, ``positions`` absolute with
+        ``-1`` marking padding (padded tokens write to the null block and
+        never attend).  S = 1 is batched continuous decode; S > 1 is a
+        chunked-prefill chunk.  ``tables``: (B, nb) block tables;
+        ``pos_pool``: (P,) shared physical-slot position ledger, scattered
+        ONCE here (not per layer -- the position layout is identical across
+        layers).  Returns (hidden (B, S, D), new_cache, new_pos_pool);
+        logits are the caller's call (decode wants every step, chunked
+        prefill only the last chunk).
+        """
+        from repro.models import attention as attn_mod
+        cfg = self.cfg
+        mode = cfg.matmul_mode
+        n_scan, period, tail = _period_split(cfg)
+        phys = attn_mod.paged_slots(tables, positions, block_size)
+        pos_pool = pos_pool.at[phys.reshape(-1)].set(
+            jnp.where(positions >= 0, positions,
+                      attn_mod.EMPTY_POS).reshape(-1).astype(pos_pool.dtype))
+        x = basic.embed_apply(params["embed"], jnp.maximum(tokens, 0))
+        x = (x * (cfg.d_model ** 0.5)).astype(jnp.dtype(cfg.dtype))
+        ctx = {"cfg": cfg, "mode": mode, "policy": cfg.contraction_policy,
+               "pos": positions,
+               "paged": {"tables": tables, "pos_pool": pos_pool,
+                         "phys": phys, "block_size": block_size}}
+
+        if n_scan:
+            def body(x, sl):
+                pslice, cslice = sl
+                new_c = {}
+                for i, k in enumerate(period):
+                    x, nc = blk.block_decode(k, pslice[f"pos{i}"], x,
+                                             cslice[f"pos{i}"], ctx)
+                    new_c[f"pos{i}"] = nc
+                return x, new_c
+
+            with counting.count_scale(n_scan):
+                x, new_scan = jax.lax.scan(body, x,
+                                           (params["scan"], cache["scan"]))
+            cache = dict(cache)
+            cache["scan"] = new_scan
+        for i, k in enumerate(tail):
+            x, nc = blk.block_decode(k, params["tail"][f"layer{i}"], x,
+                                     cache["tail"][f"layer{i}"], ctx)
+            cache = dict(cache)
+            cache["tail"] = dict(cache.get("tail", {}))
+            cache["tail"][f"layer{i}"] = nc
+
+        if cfg.norm == "layernorm":
+            x = basic.layernorm_apply(params["final_norm"], x)
+        else:
+            x = basic.rmsnorm_apply(params["final_norm"], x)
+        return x, cache, pos_pool
+
     # ------------------------------------------------------------ decode
     def decode_step(self, params, cache, tokens, pos):
         """One decode step.  tokens: (B, 1) int32; pos: (B,) absolute.

@@ -1,0 +1,371 @@
+"""Production serving engine: paged KV cache + ragged continuous batching.
+
+The reference :class:`~repro.serve.server.Server` prefills one request at
+a time into a dense per-slot cache and decodes the whole batch in one
+loop.  This engine is the production shape of the same loop:
+
+- **Paged KV cache** -- one physical pool per attention layer
+  (``LM.init_paged_cache``), fixed-size blocks handed out by a
+  :class:`~repro.serve.paged.BlockAllocator`, per-sequence block tables,
+  gather-based attention reads (``attention._attn_paged_step``).  Blocks
+  are allocated on admit, grown on demand during decode, and freed the
+  moment a sequence finishes -- memory scales with live tokens, not with
+  ``max_slots * max_len``.
+- **Continuous batching with per-slot ragged positions** -- every decode
+  step advances all live slots at their own absolute offsets (one (B, 1)
+  call); a finished slot is refilled from the queue without draining the
+  batch.
+- **Chunked prefill admission** -- prompts are processed in
+  ``prefill_chunk``-token chunks interleaved with decode steps (one chunk
+  per engine step), so a long prompt never stalls in-flight decodes.
+  Chunk attention reads the same paged pool, so prior chunks and
+  intra-chunk causality share one absolute-position mask.
+- **Prepared-weight decode path** -- ``prepared=True`` runs
+  ``LM.prepare_params`` ONCE at engine start and serves every decode /
+  prefill GEMM from the weight-stationary prepared operands (paper
+  §4-§5: the regime where a weight loaded once streams against many
+  activations is exactly LLM decode).
+- **Preemption** -- if the pool cannot grow a sequence mid-decode, the
+  youngest decoding slot is released and its request requeued (greedy
+  decode is deterministic, so a preempted request regenerates the same
+  tokens).
+
+Greedy outputs are token-for-token identical to one-request-at-a-time
+sequential generation (tested against the dense reference ``Server``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import EMPTY_POS
+from repro.serve import paged as paged_mod
+from repro.serve.server import Request
+
+__all__ = ["EngineConfig", "EngineMetrics", "Engine"]
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_slots: int = 8            # concurrent decode batch width
+    block_size: int = 16          # tokens per cache block
+    num_blocks: int = 64          # pool size (block 0 reserved null)
+    blocks_per_seq: int = 8       # per-sequence context ceiling, in blocks
+    prefill_chunk: int = 32       # prompt tokens processed per engine step
+    max_new_tokens: int = 32
+    eos_id: int = -1              # -1: never terminates early
+    temperature: float = 0.0      # 0 = greedy (the bit-equivalence mode)
+    prepared: bool = False        # LM.prepare_params at engine start
+    jit: bool = True              # False: eager steps (benchmarks -- the
+                                  # prepared amortization is visible only
+                                  # when the per-call prep really executes)
+
+    @property
+    def max_len(self) -> int:
+        return self.blocks_per_seq * self.block_size
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """Serving counters the benchmarks report (utilization as the metric,
+    per the multisystolic-array scheduling framing -- not single-call
+    latency)."""
+    tokens_out: int = 0
+    prefill_tokens: int = 0
+    decode_steps: int = 0
+    decode_slot_steps: int = 0    # sum of live slots over decode steps
+    prefill_chunks: int = 0
+    preemptions: int = 0
+    peak_blocks_used: int = 0
+    # running sum/count (not a per-step list: a long-lived engine steps
+    # forever and the bookkeeping must stay O(1))
+    util_sum: float = 0.0
+    util_steps: int = 0
+    ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
+    wall_s: float = 0.0
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+    @property
+    def mean_ttft_s(self) -> float:
+        return (sum(self.ttft_s.values()) / len(self.ttft_s)
+                if self.ttft_s else 0.0)
+
+    @property
+    def mean_utilization(self) -> float:
+        return self.util_sum / self.util_steps if self.util_steps else 0.0
+
+    @property
+    def batch_occupancy(self) -> float:
+        """Mean live slots per decode step (continuous-batching payoff)."""
+        return (self.decode_slot_steps / self.decode_steps
+                if self.decode_steps else 0.0)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "tokens_out": self.tokens_out,
+            "tokens_per_s": self.tokens_per_s,
+            "mean_ttft_s": self.mean_ttft_s,
+            "mean_block_utilization": self.mean_utilization,
+            "peak_blocks_used": self.peak_blocks_used,
+            "batch_occupancy": self.batch_occupancy,
+            "decode_steps": self.decode_steps,
+            "prefill_chunks": self.prefill_chunks,
+            "preemptions": self.preemptions,
+        }
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    n_prefilled: int = 0
+    pos: int = 0                  # next cache position to write (decode)
+    last_tok: int = 0
+    remaining: int = 0
+    state: str = "prefill"        # "prefill" | "decode"
+
+
+class Engine:
+    def __init__(self, model, params, cfg: EngineConfig, seed: int = 0):
+        self.model = model
+        self.cfg = cfg
+        self.params = (model.prepare_params(params) if cfg.prepared
+                       else params)
+        self.key = jax.random.PRNGKey(seed)
+
+        self.allocator = paged_mod.BlockAllocator(cfg.num_blocks,
+                                                  cfg.block_size)
+        self.tables = paged_mod.BlockTables(self.allocator, cfg.max_slots,
+                                            cfg.blocks_per_seq)
+        # arch eligibility (plain decoder LM, every layer's decode cache a
+        # KV dict) is validated here, before any jit setup
+        self.cache = model.init_paged_cache(cfg.num_blocks * cfg.block_size)
+        self.pos_pool = jnp.asarray(
+            paged_mod.empty_pos_pool(cfg.num_blocks, cfg.block_size))
+
+        bs = cfg.block_size
+
+        def _chunk(params, cache, pos_pool, tables, tokens, positions):
+            hidden, cache, pos_pool = model.decode_paged(
+                params, cache, tokens, positions, tables, pos_pool,
+                block_size=bs)
+            return hidden, cache, pos_pool
+
+        def _decode(params, cache, pos_pool, tables, tokens, positions):
+            hidden, cache, pos_pool = model.decode_paged(
+                params, cache, tokens, positions, tables, pos_pool,
+                block_size=bs)
+            logits = model.logits(params, hidden)[:, -1]   # (B, V)
+            return logits, cache, pos_pool
+
+        def _logits_at(params, hidden, idx):
+            h = jax.lax.dynamic_slice_in_dim(hidden, idx, 1, axis=1)
+            return model.logits(params, h)[:, 0]           # (1, V)
+
+        wrap = jax.jit if cfg.jit else (lambda f: f)
+        self._chunk = wrap(_chunk)
+        self._decode = wrap(_decode)
+        self._logits_at = wrap(_logits_at)
+
+        self.slots: List[Optional[_Slot]] = [None] * cfg.max_slots
+        self.queue: List[Request] = []
+        self.results: Dict[int, List[int]] = {}
+        self.metrics = EngineMetrics()
+        self._arrival: Dict[int, float] = {}
+
+    # ------------------------------------------------------------ helpers
+    def _sample(self, logits) -> np.ndarray:
+        if self.cfg.temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1))
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(jax.random.categorical(
+            sub, logits / self.cfg.temperature))
+
+    def _reset_pos(self, blocks: List[int]) -> None:
+        if blocks:
+            idx = self.tables.reset_slots_index(blocks)
+            self.pos_pool = self.pos_pool.at[jnp.asarray(idx)].set(EMPTY_POS)
+
+    def _release(self, slot_id: int) -> None:
+        self._reset_pos(self.tables.release(slot_id))
+        self.slots[slot_id] = None
+
+    def _finish(self, slot_id: int) -> None:
+        slot = self.slots[slot_id]
+        self.results[slot.req.rid] = slot.req.out
+        self._arrival.pop(slot.req.rid, None)    # bounded bookkeeping
+        self._release(slot_id)
+
+    def _preempt_for(self, needy_slot: int) -> bool:
+        """Release the youngest active slot (ties: highest slot id) and
+        requeue its request at the queue head.  Greedy regeneration is
+        deterministic, so outputs are unaffected -- only latency is.
+        Evicting strictly youngest-first (the needy slot may evict itself)
+        guarantees the oldest request always progresses: it is only ever
+        chosen when alone, and alone in the pool its whole-sequence need
+        fits by the submit() check, so its growth can never fail."""
+        del needy_slot
+        victims = [i for i, s in enumerate(self.slots) if s is not None]
+        if not victims:
+            return False
+        victim = max(victims, key=lambda i: (self._arrival[
+            self.slots[i].req.rid], i))
+        v = self.slots[victim]
+        # roll the victim's DELIVERED-token accounting back: tokens_out /
+        # ttft describe what reaches the caller, and the regeneration will
+        # recount them (prefill/decode step counters stay -- they measure
+        # executed work, which preemption really does repeat)
+        self.metrics.tokens_out -= len(v.req.out or [])
+        self.metrics.ttft_s.pop(v.req.rid, None)
+        v.req.out = None                      # regenerate from scratch
+        self.queue.insert(0, v.req)
+        self._release(victim)
+        self.metrics.preemptions += 1
+        return True
+
+    def submit(self, requests: List[Request]) -> None:
+        cfg = self.cfg
+        for req in requests:
+            if len(req.tokens) == 0:
+                raise ValueError(f"request {req.rid}: empty prompt (there "
+                                 f"is no position to sample the first "
+                                 f"token from)")
+            total = len(req.tokens) + cfg.max_new_tokens
+            if total > cfg.max_len:
+                raise ValueError(
+                    f"request {req.rid}: prompt {len(req.tokens)} + "
+                    f"max_new {cfg.max_new_tokens} exceeds the "
+                    f"per-sequence ceiling {cfg.max_len} "
+                    f"({cfg.blocks_per_seq} blocks x {cfg.block_size})")
+            if self.allocator.blocks_for(total) > cfg.num_blocks - 1:
+                raise ValueError(
+                    f"request {req.rid}: needs "
+                    f"{self.allocator.blocks_for(total)} blocks but the "
+                    f"pool only has {cfg.num_blocks - 1} allocatable ones")
+            self._arrival[req.rid] = time.perf_counter()
+            self.queue.append(req)
+
+    # ----------------------------------------------------------- schedule
+    def _admit(self) -> None:
+        for slot_id in range(self.cfg.max_slots):
+            if self.slots[slot_id] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            if not self.tables.ensure(slot_id, len(req.tokens)):
+                break                          # pool exhausted: wait
+            self.queue.pop(0)
+            self.slots[slot_id] = _Slot(req=req)
+
+    def _prefill_one(self) -> bool:
+        cfg = self.cfg
+        cand = [i for i, s in enumerate(self.slots)
+                if s is not None and s.state == "prefill"]
+        if not cand:
+            return False
+        # oldest arrival first: FIFO time-to-first-token
+        slot_id = min(cand, key=lambda i: (self._arrival[
+            self.slots[i].req.rid], i))
+        slot = self.slots[slot_id]
+        prompt = np.asarray(slot.req.tokens, np.int32)
+        lo = slot.n_prefilled
+        chunk = prompt[lo:lo + cfg.prefill_chunk]
+        C = cfg.prefill_chunk
+        toks = np.zeros((1, C), np.int32)
+        poss = np.full((1, C), -1, np.int32)
+        toks[0, :len(chunk)] = chunk
+        poss[0, :len(chunk)] = np.arange(lo, lo + len(chunk), dtype=np.int32)
+        tables_row = jnp.asarray(self.tables.table[slot_id:slot_id + 1])
+        hidden, self.cache, self.pos_pool = self._chunk(
+            self.params, self.cache, self.pos_pool, tables_row,
+            jnp.asarray(toks), jnp.asarray(poss))
+        slot.n_prefilled = lo + len(chunk)
+        self.metrics.prefill_chunks += 1
+        self.metrics.prefill_tokens += len(chunk)
+        if slot.n_prefilled == len(prompt):      # final chunk: first token
+            logits = self._logits_at(self.params, hidden,
+                                     jnp.int32(len(chunk) - 1))
+            tok = int(self._sample(logits)[0])
+            rid = slot.req.rid
+            self.metrics.ttft_s[rid] = time.perf_counter() - self._arrival[rid]
+            slot.req.out = [tok]
+            self.metrics.tokens_out += 1
+            slot.last_tok = tok
+            slot.pos = len(prompt)
+            slot.remaining = cfg.max_new_tokens - 1
+            slot.state = "decode"
+            if tok == cfg.eos_id or slot.remaining <= 0:
+                self._finish(slot_id)
+        return True
+
+    def _decode_all(self) -> bool:
+        cfg = self.cfg
+        live = [i for i, s in enumerate(self.slots)
+                if s is not None and s.state == "decode"]
+        if not live:
+            return False
+        # grow every live slot's table to cover this step's write; preempt
+        # youngest-first when the pool is dry
+        for slot_id in list(live):
+            while self.slots[slot_id] is not None and \
+                    not self.tables.ensure(slot_id, self.slots[slot_id].pos + 1):
+                if not self._preempt_for(slot_id):
+                    raise RuntimeError("cache pool exhausted and nothing "
+                                       "to preempt")
+        live = [i for i, s in enumerate(self.slots)
+                if s is not None and s.state == "decode"]
+        if not live:
+            return False
+        B = cfg.max_slots
+        toks = np.zeros((B, 1), np.int32)
+        poss = np.full((B, 1), -1, np.int32)
+        for i in live:
+            toks[i, 0] = self.slots[i].last_tok
+            poss[i, 0] = self.slots[i].pos
+        logits, self.cache, self.pos_pool = self._decode(
+            self.params, self.cache, self.pos_pool,
+            jnp.asarray(self.tables.table), jnp.asarray(toks),
+            jnp.asarray(poss))
+        nxt = self._sample(logits)
+        self.metrics.decode_steps += 1
+        self.metrics.decode_slot_steps += len(live)
+        for i in live:
+            slot = self.slots[i]
+            tok = int(nxt[i])
+            slot.req.out.append(tok)
+            self.metrics.tokens_out += 1
+            slot.pos += 1
+            slot.last_tok = tok
+            slot.remaining -= 1
+            if tok == cfg.eos_id or slot.remaining <= 0:
+                self._finish(i)
+        return True
+
+    def step(self) -> bool:
+        """One scheduler tick: admit, one prefill chunk, one ragged decode
+        step.  Returns False when there is nothing left to do."""
+        self._admit()
+        did = self._prefill_one()
+        did = self._decode_all() or did
+        self.metrics.util_sum += self.allocator.utilization
+        self.metrics.util_steps += 1
+        self.metrics.peak_blocks_used = max(self.metrics.peak_blocks_used,
+                                            self.allocator.used_blocks)
+        return did or bool(self.queue) \
+            or any(s is not None for s in self.slots)
+
+    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Serve ``requests`` to completion; returns {rid: generated ids}."""
+        self.submit(requests)
+        t0 = time.perf_counter()
+        while self.queue or any(s is not None for s in self.slots):
+            if not self.step():
+                break
+        self.metrics.wall_s += time.perf_counter() - t0
+        return dict(self.results)

@@ -1,0 +1,155 @@
+"""Paged KV-cache management: fixed-size blocks, per-sequence block tables.
+
+The serving engine's cache is a single physical pool per attention layer
+(``LM.init_paged_cache``: ``(num_blocks * block_size, KV, hd)`` token
+slots) plus ONE shared position ledger ``pos_pool`` (the logical layout is
+identical across layers, so it is not replicated per layer).  This module
+owns the host-side bookkeeping:
+
+- :class:`BlockAllocator` -- free-list allocation of fixed-size blocks.
+  Block 0 is RESERVED as the null block: unallocated block-table entries
+  and padded-token writes land there, and its ``pos_pool`` entries keep
+  the :data:`~repro.models.attention.EMPTY_POS` sentinel so gathered reads
+  from it never attend.
+- :class:`BlockTables` -- the (max_slots, blocks_per_seq) int32 table the
+  gather-based attention reads index through, with grow / release and a
+  freed-block ``pos_pool`` reset (a recycled block would otherwise leak
+  its previous owner's positions into the new owner's mask).
+
+Everything here is plain numpy / python -- the jax side only ever sees the
+current table snapshot and the scatter/gather indices derived from it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.models.attention import EMPTY_POS
+
+__all__ = ["BlockAllocator", "BlockTables", "empty_pos_pool", "NULL_BLOCK"]
+
+NULL_BLOCK = 0
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` fixed-size cache blocks.
+
+    Block 0 is the reserved null block and is never handed out.  ``alloc``
+    is all-or-nothing (a partial grant would strand blocks on callers that
+    cannot use them); ``free`` returns blocks to the tail of the free list
+    (FIFO reuse keeps recycling observable in tests).
+    """
+
+    def __init__(self, num_blocks: int, block_size: int):
+        if num_blocks < 2:
+            raise ValueError("need at least 2 blocks (block 0 is the "
+                             "reserved null block)")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        self._free: List[int] = list(range(1, num_blocks))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        """Allocated (non-null) blocks currently owned by sequences."""
+        return (self.num_blocks - 1) - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of allocatable blocks currently in use."""
+        return self.used_blocks / max(1, self.num_blocks - 1)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Blocks needed to hold ``n_tokens`` cache entries."""
+        return -(-max(0, int(n_tokens)) // self.block_size)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Grant ``n`` blocks, or None (untouched) if they are not free."""
+        if n > len(self._free):
+            return None
+        grant, self._free = self._free[:n], self._free[n:]
+        return grant
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b == NULL_BLOCK:
+                raise ValueError("cannot free the null block")
+            if b in self._free or not (0 < b < self.num_blocks):
+                raise ValueError(f"double/invalid free of block {b}")
+        self._free.extend(blocks)
+
+
+@dataclasses.dataclass
+class BlockTables:
+    """Per-slot block tables over a shared :class:`BlockAllocator`.
+
+    ``table[slot]`` lists the pool blocks holding that slot's logical
+    cache window in position order; unassigned entries stay
+    :data:`NULL_BLOCK`.  ``max_len`` = blocks_per_seq * block_size is the
+    engine's per-sequence context ceiling.
+    """
+    allocator: BlockAllocator
+    max_slots: int
+    blocks_per_seq: int
+
+    def __post_init__(self):
+        self.table = np.full((self.max_slots, self.blocks_per_seq),
+                             NULL_BLOCK, np.int32)
+        self._owned: List[List[int]] = [[] for _ in range(self.max_slots)]
+
+    @property
+    def max_len(self) -> int:
+        return self.blocks_per_seq * self.allocator.block_size
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned[slot])
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s table to cover ``n_tokens`` positions.
+
+        Returns False (tables untouched) if the pool cannot supply the
+        missing blocks -- the engine then preempts.  Raises if the request
+        exceeds the per-sequence ceiling (no allocation could ever help).
+        """
+        need = self.allocator.blocks_for(n_tokens)
+        if need > self.blocks_per_seq:
+            raise ValueError(
+                f"sequence needs {n_tokens} cache positions "
+                f"({need} blocks) > per-sequence ceiling {self.max_len} "
+                f"({self.blocks_per_seq} blocks)")
+        have = len(self._owned[slot])
+        if need <= have:
+            return True
+        grant = self.allocator.alloc(need - have)
+        if grant is None:
+            return False
+        self.table[slot, have:need] = grant
+        self._owned[slot].extend(grant)
+        return True
+
+    def release(self, slot: int) -> List[int]:
+        """Free all of ``slot``'s blocks; returns them so the engine can
+        reset their ``pos_pool`` entries (stale positions in a recycled
+        block would attend for its next owner)."""
+        blocks = self._owned[slot]
+        self._owned[slot] = []
+        self.table[slot, :] = NULL_BLOCK
+        if blocks:
+            self.allocator.free(blocks)
+        return blocks
+
+    def reset_slots_index(self, blocks: List[int]) -> np.ndarray:
+        """Flat pool-slot indices of ``blocks`` (for ``pos_pool`` resets)."""
+        bs = self.allocator.block_size
+        b = np.asarray(blocks, np.int32)
+        return (b[:, None] * bs + np.arange(bs, dtype=np.int32)).reshape(-1)
+
+
+def empty_pos_pool(num_blocks: int, block_size: int) -> np.ndarray:
+    """Fresh position ledger: every physical slot at the EMPTY sentinel."""
+    return np.full(num_blocks * block_size, EMPTY_POS, np.int32)

@@ -85,9 +85,15 @@ class Server:
                             one[tuple(oidx)].astype(full.dtype))
                 return full
 
+            req.out = [tok]
+            if tok == cfg.eos_id or cfg.max_new_tokens <= 1:
+                # first sampled token already terminates: never occupy a
+                # decode slot (previously the loop emitted one token PAST
+                # a prefill-time EOS; the paged engine checks both ends)
+                results[req.rid] = req.out
+                return
             cache = jax.tree.map(slot_set, cache, pcache)
             active[slot] = req
-            req.out = [tok]
             prefix = self.model.cfg.prefix_tokens or 0
             pos[slot] = len(req.tokens) + prefix
             last_tok[slot] = tok
@@ -99,7 +105,7 @@ class Server:
                     insert(slot, queue.pop(0))
             live = [s for s in range(cfg.max_batch) if active[s] is not None]
             if not live:
-                break
+                continue              # instantly-finished inserts: re-admit
             toks = jnp.asarray(last_tok[:, None])
             logits, cache = self._decode(self.params, cache, toks,
                                          jnp.asarray(pos))
