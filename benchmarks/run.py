@@ -134,7 +134,8 @@ def check_regressions(payload, committed, tol=None):
 
     The serving-engine rows are gated separately by
     :func:`benchmarks.serving.check_serving` (prepared-square tokens/s
-    >= 1.0x raw-square, square-routed fraction >= 0.9).
+    >= 1.0x raw-square, square-routed fraction >= 0.9, and the guarded
+    engine's resilience overhead within tolerance of prepared).
     """
     if tol is None:
         tol = float(os.environ.get("BENCH_CHECK_TOL", "0.0"))
@@ -225,7 +226,9 @@ def main(argv=None) -> None:
               f"util={row['mean_block_utilization']:.2f},"
               f"occupancy={row['batch_occupancy']:.2f}"
               + (f",speedup_vs_raw={row['speedup_vs_raw']:.2f}"
-                 if "speedup_vs_raw" in row else ""))
+                 if "speedup_vs_raw" in row else "")
+              + (f",speedup_vs_prepared={row['speedup_vs_prepared']:.2f}"
+                 if "speedup_vs_prepared" in row else ""))
 
     payload = build_bench_payload(timing_rows)
     serving_payload = serving.build_serving_payload(serving_rows)

@@ -7,14 +7,20 @@ cache-block utilization, batch occupancy -- and the paper's quantity, the
 fraction of serving contraction FLOPs routed through square-form
 arithmetic (`core/counting`).
 
-Three engine configurations ride one workload:
+Four engine configurations ride one workload:
 
 - ``standard``        -- multiplier-baseline GEMMs (context row);
 - ``square_raw``      -- ``square_pallas`` GEMMs, weights prepared per
                          call (the per-call column prep is real work);
 - ``square_prepared`` -- the same square route with ``LM.prepare_params``
                          run ONCE at engine start (paper §4-§5: the
-                         weight-stationary regime decode serving lives in).
+                         weight-stationary regime decode serving lives in);
+- ``square_guarded``  -- square_prepared plus the full resilience layer
+                         (``EngineConfig(guard=True)``: per-step logits
+                         finiteness checks AND the core-layer square-route
+                         guard, live because the bench is eager).  Its
+                         gated ratio vs square_prepared is the measured
+                         cost of the guard-rails on the happy path.
 
 Execution is EAGER (``EngineConfig(jit=False)``: the engine steps run
 op-by-op, like the prepared-operand rows in ``kernel_timing.py``): under
@@ -62,9 +68,9 @@ ENGINE_KW = dict(max_slots=8, block_size=8, num_blocks=64, blocks_per_seq=6,
 N_REQUESTS = 8
 
 
-def _run_once(model, params, *, prepared: bool) -> Engine:
+def _run_once(model, params, *, prepared: bool, guard: bool = False) -> Engine:
     eng = Engine(model, params, EngineConfig(prepared=prepared, jit=False,
-                                             **ENGINE_KW))
+                                             guard=guard, **ENGINE_KW))
     eng.run(make_requests(model.cfg, N_REQUESTS, seed=17, lo=4, hi=13))
     return eng
 
@@ -104,22 +110,25 @@ def serving_rows(reps: int = 2) -> List[Dict]:
     # costs (plan-cache fills, tuning-cache consults, allocator warmup)
     # that would otherwise bias whichever config runs first
     _run_once(model_sq, params, prepared=True)
+    _run_once(model_sq, params, prepared=True, guard=True)
     _run_once(model_std, params, prepared=False)
 
     best: Dict[str, Engine] = {}
     for _ in range(reps):
-        # interleave raw/prepared so the gated ratio is immune to
-        # progressive runner throttling across the bench
-        for key, model, prep in (("raw", model_sq, False),
-                                 ("prepared", model_sq, True),
-                                 ("standard", model_std, False)):
-            eng = _run_once(model, params, prepared=prep)
+        # interleave raw/prepared/guarded so the gated ratios are immune
+        # to progressive runner throttling across the bench
+        for key, model, prep, grd in (("raw", model_sq, False, False),
+                                      ("prepared", model_sq, True, False),
+                                      ("guarded", model_sq, True, True),
+                                      ("standard", model_std, False, False)):
+            eng = _run_once(model, params, prepared=prep, guard=grd)
             if key not in best or (eng.metrics.tokens_per_s
                                    > best[key].metrics.tokens_per_s):
                 best[key] = eng
 
     tps_raw = best["raw"].metrics.tokens_per_s
     tps_prep = best["prepared"].metrics.tokens_per_s
+    tps_grd = best["guarded"].metrics.tokens_per_s
     return [
         _row("serving_engine_standard[interp-eager]", "standard",
              best["standard"]),
@@ -130,6 +139,10 @@ def serving_rows(reps: int = 2) -> List[Dict]:
              "square_pallas/prepared", best["prepared"],
              fraction_square=fraction_square,
              speedup_vs_raw=tps_prep / tps_raw if tps_raw else 0.0),
+        _row("serving_engine_square_guarded[interp-eager]",
+             "square_pallas/prepared+guard", best["guarded"],
+             guard_trips=best["guarded"].metrics.guard_trips,
+             speedup_vs_prepared=tps_grd / tps_prep if tps_prep else 0.0),
     ]
 
 
@@ -152,7 +165,11 @@ def check_serving(payload: Dict, tol: float) -> List[str]:
       the weight-stationary serving contract);
     - the square engine must keep its contraction FLOPs square-routed
       (``fraction_square >= 0.9``: a dispatch regression that silently
-      reroutes serving GEMMs to the multiplier baseline fails here).
+      reroutes serving GEMMs to the multiplier baseline fails here);
+    - the guard-rails must stay cheap on the happy path: the guarded
+      engine's tokens/s must hold ``speedup_vs_prepared >= 1.0 - tol``
+      against the unguarded prepared engine, with zero guard trips on a
+      healthy workload.
     """
     failures = []
     rows = {r["name"]: r for r in payload.get("rows", [])}
@@ -168,6 +185,18 @@ def check_serving(payload: Dict, tol: float) -> List[str]:
             failures.append(
                 f"serving: fraction_square "
                 f"{prep.get('fraction_square', 0.0):.2f} < 0.90")
+    grd = rows.get("serving_engine_square_guarded[interp-eager]")
+    if grd is None:
+        failures.append("serving: guarded-square row missing")
+    else:
+        ratio = grd.get("speedup_vs_prepared", 0.0)
+        if ratio < 1.0 - tol:
+            failures.append(f"serving: guarded tokens/s ratio {ratio:.2f} "
+                            f"< {1.0 - tol:.2f} vs prepared (resilience "
+                            f"overhead regression)")
+        if grd.get("guard_trips", 0) != 0:
+            failures.append(f"serving: {grd['guard_trips']} guard trips "
+                            f"on the healthy bench workload")
     return failures
 
 

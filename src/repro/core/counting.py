@@ -173,6 +173,8 @@ class ContractionRecord:
     spec: str
     mode: str
     mults: int           # B*M*K*N scalar multiplies (scaled by count_scale)
+    demoted: bool = False   # served standard because the route-health
+                            # breaker (kernels/routing.RouteHealth) tripped
 
 
 @dataclasses.dataclass
@@ -180,8 +182,10 @@ class ContractionCounter:
     """Tally of fs_einsum contraction volume, split by dispatch mode."""
     records: List[ContractionRecord] = dataclasses.field(default_factory=list)
 
-    def record(self, site: str, spec: str, mode: str, mults: int) -> None:
-        self.records.append(ContractionRecord(site, spec, mode, mults))
+    def record(self, site: str, spec: str, mode: str, mults: int,
+               demoted: bool = False) -> None:
+        self.records.append(ContractionRecord(site, spec, mode, mults,
+                                              demoted))
 
     @property
     def total_mults(self) -> int:
@@ -201,13 +205,33 @@ class ContractionCounter:
         tot = self.total_mults
         return (self.square_mults / tot) if tot else 0.0
 
+    @property
+    def demoted_mults(self) -> int:
+        """Contraction volume served on the standard route because the
+        route-health circuit breaker demoted its call site (numerics
+        guard, see :mod:`repro.core.guards`)."""
+        return sum(r.mults for r in self.records if r.demoted)
+
+    @property
+    def fraction_demoted(self) -> float:
+        tot = self.total_mults
+        return (self.demoted_mults / tot) if tot else 0.0
+
+    def demoted_sites(self) -> List[str]:
+        """Call sites that served any demoted contraction (the audit's
+        view of guard-rail degradation -- observable, never silent)."""
+        return sorted({r.site for r in self.records if r.demoted})
+
     def by_site(self) -> Dict[str, Dict[str, int]]:
         out: Dict[str, Dict[str, int]] = {}
         for r in self.records:
-            d = out.setdefault(r.site, {"mults": 0, "square_mults": 0})
+            d = out.setdefault(r.site, {"mults": 0, "square_mults": 0,
+                                        "demoted_mults": 0})
             d["mults"] += r.mults
             if r.mode in SQUARE_MODES:
                 d["square_mults"] += r.mults
+            if r.demoted:
+                d["demoted_mults"] += r.mults
         return out
 
     def summary(self) -> Dict[str, object]:
@@ -215,6 +239,8 @@ class ContractionCounter:
             "total_mults": self.total_mults,
             "multiplies_replaced_by_squares": self.multiplies_replaced,
             "fraction_square": self.fraction_square,
+            "fraction_demoted": self.fraction_demoted,
+            "demoted_sites": self.demoted_sites(),
             "by_site": self.by_site(),
         }
 
@@ -268,10 +294,16 @@ def count_scale(n: int):
         _SCALES.pop()
 
 
-def note_contraction(*, site: str, spec: str, mode: str, mults: int) -> None:
-    """Record one contraction into every active counter (no-op otherwise)."""
+def note_contraction(*, site: str, spec: str, mode: str, mults: int,
+                     demoted: bool = False) -> None:
+    """Record one contraction into every active counter (no-op otherwise).
+
+    ``demoted=True`` marks a contraction that *would* have been
+    square-routed but was served standard because its route-health
+    breaker tripped (``mode`` is then the served mode, ``"standard"``).
+    """
     if not _COUNTERS:
         return
     scaled = int(mults) * _SCALES[-1]
     for ctr in _COUNTERS:
-        ctr.record(site or "einsum", spec, mode, scaled)
+        ctr.record(site or "einsum", spec, mode, scaled, demoted)

@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import counting
+from repro.core import guards
 from repro.core import matmul as fsmm
 from repro.core.prepared import PreparedOperand, unwrap
 
@@ -237,56 +238,86 @@ def fs_einsum(spec: str, x, y, *, mode: Optional[str] = None,
     M = _prod(plan.m, sizes)
     K = _prod(plan.k, sizes)
     N = _prod(plan.n, sizes)
-    counting.note_contraction(site=site or "einsum", spec=spec, mode=mode,
-                              mults=B * M * K * N)
 
-    if mode == "standard":
-        if preferred is None:
-            return jnp.einsum(spec, x, unwrap(y))
-        return jnp.einsum(spec, x, unwrap(y),
-                          preferred_element_type=preferred)
+    # ---- numerics guard: route-health circuit breaker (core/guards) ----
+    # A call site whose square-routed output tripped the finite check
+    # ``trip_limit`` times is DEMOTED: served on the standard route, the
+    # demotion noted into the contraction audit (observable degradation).
+    gp = guards.guard_policy()
+    hkey = None
+    demoted = False
+    if gp.enabled and mode in counting.SQUARE_MODES:
+        from repro.kernels import routing    # lazy: avoid import cycle
+        hkey = routing.health_key(site or "einsum", (B, M, K, N), x.dtype)
+        if routing.route_health().is_demoted(hkey):
+            mode, demoted = "standard", True
 
-    # A prepared y is consumed directly only when its canonical (K, N)
-    # layout IS the spec's: nothing summed out, single k/n (and batch)
-    # indices, and the y-side transpose matching how it was prepared.
-    # Anything else falls back to its raw source (still correct, just
-    # re-prepared per call).
-    prep_usable = prep is not None and plan.y_sum == "" \
-        and len(plan.k) == 1 and len(plan.n) == 1 and len(plan.batch) <= 1
-    if prep_usable:
+    def _execute(run_mode):
+        if run_mode == "standard":
+            if preferred is None:
+                return jnp.einsum(spec, x, unwrap(y))
+            return jnp.einsum(spec, x, unwrap(y),
+                              preferred_element_type=preferred)
+
+        # A prepared y is consumed directly only when its canonical (K, N)
+        # layout IS the spec's: nothing summed out, single k/n (and batch)
+        # indices, and the y-side transpose matching how it was prepared.
+        # Anything else falls back to its raw source (still correct, just
+        # re-prepared per call).
+        p, yy = prep, y
+        prep_usable = p is not None and plan.y_sum == "" \
+            and len(plan.k) == 1 and len(plan.n) == 1 and len(plan.batch) <= 1
+        if prep_usable:
+            if plan.batch:
+                prep_usable = (p.kind == "matmul_batched"
+                               and not p.transposed
+                               and plan.y_dims == plan.batch + plan.k + plan.n)
+            elif p.transposed:
+                prep_usable = (p.kind == "matmul"
+                               and plan.y_dims == plan.n + plan.k)
+            else:
+                prep_usable = (p.kind == "matmul"
+                               and plan.y_dims == plan.k + plan.n)
+        if p is not None and not prep_usable:
+            yy = p.source
+            p = None
+
+        # ---- canonicalize to (B, M, K) @ (B, K, N) ----
+        xx, x_dims = _sum_out(x, plan.x_dims, plan.x_sum)
+        if p is None:
+            yy, y_dims = _sum_out(yy, plan.y_dims, plan.y_sum)
         if plan.batch:
-            prep_usable = (prep.kind == "matmul_batched"
-                           and not prep.transposed
-                           and plan.y_dims == plan.batch + plan.k + plan.n)
-        elif prep.transposed:
-            prep_usable = (prep.kind == "matmul"
-                           and plan.y_dims == plan.n + plan.k)
+            a = _to_canonical(xx, x_dims, plan.batch + plan.m + plan.k,
+                              (B, M, K))
+            b = p if p is not None else _to_canonical(
+                yy, y_dims, plan.batch + plan.k + plan.n, (B, K, N))
+            out = _batched_matmul(a, b, run_mode, preferred)
         else:
-            prep_usable = (prep.kind == "matmul"
-                           and plan.y_dims == plan.k + plan.n)
-    if prep is not None and not prep_usable:
-        y = prep.source
-        prep = None
+            a = _to_canonical(xx, x_dims, plan.m + plan.k, (M, K))
+            b = p if p is not None else _to_canonical(
+                yy, y_dims, plan.k + plan.n, (K, N))
+            out = fsmm.matmul(a, b, mode=run_mode, preferred=preferred)
 
-    # ---- canonicalize to (B, M, K) @ (B, K, N) ----
-    x, x_dims = _sum_out(x, plan.x_dims, plan.x_sum)
-    if prep is None:
-        y, y_dims = _sum_out(y, plan.y_dims, plan.y_sum)
-    if plan.batch:
-        a = _to_canonical(x, x_dims, plan.batch + plan.m + plan.k, (B, M, K))
-        b = prep if prep is not None else _to_canonical(
-            y, y_dims, plan.batch + plan.k + plan.n, (B, K, N))
-        out = _batched_matmul(a, b, mode, preferred)
-    else:
-        a = _to_canonical(x, x_dims, plan.m + plan.k, (M, K))
-        b = prep if prep is not None else _to_canonical(
-            y, y_dims, plan.k + plan.n, (K, N))
-        out = fsmm.matmul(a, b, mode=mode, preferred=preferred)
+        # ---- restore the requested output layout ----
+        canon = plan.batch + plan.m + plan.n
+        out = out.reshape(tuple(sizes[d] for d in canon))
+        perm = tuple(canon.index(d) for d in plan.out_dims)
+        if perm != tuple(range(len(perm))):
+            out = jnp.transpose(out, perm)
+        return out
 
-    # ---- restore the requested output layout ----
-    canon = plan.batch + plan.m + plan.n
-    out = out.reshape(tuple(sizes[d] for d in canon))
-    perm = tuple(canon.index(d) for d in plan.out_dims)
-    if perm != tuple(range(len(perm))):
-        out = jnp.transpose(out, perm)
+    out = _execute(mode)
+
+    if hkey is not None and not demoted:
+        # check_finite is None under a jit trace (abstract values): the
+        # guard cannot fire there -- eager serving is the guarded regime.
+        ok = guards.check_finite(out)
+        if ok is False:
+            from repro.kernels import routing
+            routing.route_health().record_trip(hkey, limit=gp.trip_limit)
+            out = _execute("standard")
+            mode, demoted = "standard", True
+
+    counting.note_contraction(site=site or "einsum", spec=spec, mode=mode,
+                              mults=B * M * K * N, demoted=demoted)
     return out

@@ -1,0 +1,128 @@
+"""Numerical guard-rails for the square datapath (graceful degradation).
+
+The paper's widen-before-square rule (:func:`repro.core.squares.
+widen_for_sum`) guarantees that ``a + b`` cannot overflow *in the
+accumulator dtype* -- but nothing guarantees that ``(a + b)^2`` stays
+finite there.  The per-dtype saturation boundaries (pinned by
+``tests/test_squares_extremes.py``):
+
+- **f32 / bf16** operands square in f32, so any ``|a + b| >
+  sqrt(f32_max) ~ 1.84e19`` saturates the PM term to ``inf`` -- while the
+  standard multiplier route (``a @ b``) at the same magnitudes may still
+  be finite (``1e19 * 1e19 = 1e38 < f32_max``).  bf16 reaches the
+  boundary easily (bf16_max ~ 3.39e38).
+- **f16** operands widen to f32 where one PM square can NEVER saturate
+  (``(2 * 65504)^2 ~ 1.7e10``); only K-deep accumulation can.
+- **int8** is exact by construction (``(127+127)^2`` fits int32 with
+  ~33k-deep accumulation headroom).
+
+So the square route has a failure regime the standard route does not.
+This module is the runtime guard: behind a policy flag, the dispatcher
+(:func:`repro.core.einsum.fs_einsum`) checks square-routed outputs for
+non-finite values and -- together with the per-(site, shape, dtype)
+circuit breaker in :mod:`repro.kernels.routing` (``RouteHealth``) --
+*demotes* a repeatedly-tripping call site to the standard route instead
+of serving ``inf``/``nan``.  Degradation is observable, never silent:
+every trip/demotion is logged once and surfaces in
+:mod:`repro.core.counting`'s square-fraction audit.
+
+The value check is only possible on **concrete** arrays: under a ``jit``
+trace the output is an abstract tracer and :func:`check_finite` returns
+``None`` (skip).  Guarded serving therefore runs the engine in eager mode
+(``EngineConfig(jit=False)``); a jitted engine still gets the
+engine-level logit guard (concrete post-jit values).
+
+Enable globally with ``REPRO_GUARD=1``, programmatically with
+:func:`set_guard_policy`, or scoped with the :func:`guarded` context
+manager (the serving engine wraps each step in it when
+``EngineConfig(guard=True)``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["GuardPolicy", "guard_policy", "set_guard_policy", "guarded",
+           "check_finite", "DEFAULT_TRIP_LIMIT"]
+
+# Guard trips of one (site, shape, dtype) key before the route-health
+# registry demotes it to the standard route (the circuit breaker's K).
+DEFAULT_TRIP_LIMIT = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardPolicy:
+    """Runtime numerics-guard policy.
+
+    ``enabled``     -- check square-routed contraction outputs for
+                       non-finite values (eager execution only);
+    ``trip_limit``  -- trips of one (site, shape, dtype) key before the
+                       route-health circuit breaker demotes it to the
+                       standard route for the rest of the process.
+    """
+    enabled: bool = False
+    trip_limit: int = DEFAULT_TRIP_LIMIT
+
+
+def _env_default() -> GuardPolicy:
+    return GuardPolicy(enabled=os.environ.get("REPRO_GUARD", "") == "1")
+
+
+_POLICY_STACK: List[GuardPolicy] = []
+
+
+def guard_policy() -> GuardPolicy:
+    """The active guard policy (innermost :func:`guarded` region >
+    :func:`set_guard_policy` > ``$REPRO_GUARD``)."""
+    if _POLICY_STACK:
+        return _POLICY_STACK[-1]
+    return _env_default()
+
+
+def set_guard_policy(enabled: bool,
+                     trip_limit: int = DEFAULT_TRIP_LIMIT) -> None:
+    """Set the process-level guard policy (clears any scoped regions)."""
+    del _POLICY_STACK[:]
+    _POLICY_STACK.append(GuardPolicy(enabled=enabled, trip_limit=trip_limit))
+
+
+@contextlib.contextmanager
+def guarded(enabled: bool = True, trip_limit: int = DEFAULT_TRIP_LIMIT):
+    """Scope a guard policy to a region (restores the previous one on
+    exit -- interleaved guarded/unguarded engine runs must not leak
+    state into each other)."""
+    _POLICY_STACK.append(GuardPolicy(enabled=enabled, trip_limit=trip_limit))
+    try:
+        yield
+    finally:
+        _POLICY_STACK.pop()
+
+
+def check_finite(x) -> Optional[bool]:
+    """Whether ``x`` is entirely finite, or ``None`` when unknowable.
+
+    ``None`` means the value is an abstract tracer (inside a ``jit``
+    trace there is no number to check) -- callers must treat that as
+    "cannot guard here", not as a pass or a trip.  Integer arrays are
+    finite by construction and short-circuit without a device reduce.
+
+    The float probe is a single sum-reduce, not an elementwise
+    ``isfinite`` pass: any ``inf``/``nan`` entry taints the sum to a
+    non-finite value (``inf - inf = nan``), so there are NO false
+    passes.  The converse false *trip* -- all-finite entries whose sum
+    overflows -- needs magnitudes at the dtype boundary, exactly the
+    regime the guard should demote anyway; and a trip only reroutes to
+    the standard path, so it can cost throughput, never correctness.
+    This keeps the happy-path guard at one cheap reduce per contraction
+    (the overhead the ``serving_engine_square_guarded`` bench row gates).
+    """
+    if isinstance(x, jax.core.Tracer):
+        return None
+    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.integer):
+        return True
+    return bool(jnp.isfinite(jnp.sum(x)))

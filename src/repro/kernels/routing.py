@@ -44,8 +44,9 @@ Overrides (most specific wins):
 from __future__ import annotations
 
 import dataclasses
+import logging
 import os
-from typing import Optional
+from typing import Dict, Optional
 
 import jax.numpy as jnp
 
@@ -56,7 +57,11 @@ from repro.kernels import tuning
 __all__ = ["Route", "select_route", "select_matmul_route",
            "select_conv2d_route", "set_route_override", "route_key",
            "MATMUL_ROUTES", "CONV2D_ROUTES", "VIRTUAL_FLOOR_MULTS",
-           "FOLD_STEP_LANE_OPS", "IM2COL_PATCH_BYTES_MAX", "IM2COL_K_MAX"]
+           "FOLD_STEP_LANE_OPS", "IM2COL_PATCH_BYTES_MAX", "IM2COL_K_MAX",
+           "RouteHealth", "route_health", "reset_route_health",
+           "health_key"]
+
+logger = logging.getLogger("repro.routing")
 
 MATMUL_ROUTES = ("kernel", "batched", "fold", "virtual")
 CONV2D_ROUTES = ("fused", "im2col")
@@ -207,6 +212,72 @@ def select_conv2d_route(oh: int, ow: int, kh: int, kw: int, cin: int,
                                f"K volume {kvol} below one lane group")
     return Route("fused", f"patch matrix {patch}B / K volume {kvol} in the "
                           f"window-streaming regime")
+
+
+# --------------------------------------------------------------------------
+# Route health: the per-(site, shape, dtype) circuit breaker.
+#
+# The numerics guard (repro.core.guards) checks square-routed contraction
+# outputs for non-finite values; every trip is recorded here.  After
+# ``trip_limit`` trips of one key, the key is DEMOTED: the dispatcher
+# serves that call site on the standard (multiplier) route from then on.
+# Demotion is logged exactly once per key and is visible in the
+# contraction counter's square-fraction audit (the demoted contractions
+# note ``mode="standard"`` with ``demoted=True``) -- degradation is
+# observable, never silent.  State is per-process and resettable
+# (:func:`reset_route_health`), mirroring how a serving deployment would
+# re-arm breakers on model reload.
+# --------------------------------------------------------------------------
+
+def health_key(site: str, sizes, dtype) -> str:
+    """Circuit-breaker key of one contraction call site.
+
+    ``sizes`` is any shape-describing tuple (the dispatcher passes the
+    canonical ``(B, M, K, N)``); dtype is the *operand* dtype -- the trip
+    regime is set by the operand magnitudes entering ``(a+b)^2``.
+    """
+    sig = "x".join(str(int(s)) for s in sizes)
+    return f"{site}|{sig}|{jnp.dtype(dtype).name}"
+
+
+@dataclasses.dataclass
+class RouteHealth:
+    """Trip counts and demotions, keyed by :func:`health_key`."""
+    trips: Dict[str, int] = dataclasses.field(default_factory=dict)
+    demotions: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    def record_trip(self, key: str, limit: int,
+                    reason: str = "non-finite square-route output") -> bool:
+        """Record one guard trip; returns True when this trip demotes."""
+        self.trips[key] = self.trips.get(key, 0) + 1
+        if key not in self.demotions and self.trips[key] >= max(1, limit):
+            self.demotions[key] = (f"{reason} ({self.trips[key]} trips)")
+            logger.warning(
+                "route-health: demoting %s to the standard route after "
+                "%d guard trips (%s)", key, self.trips[key], reason)
+            return True
+        return False
+
+    def is_demoted(self, key: str) -> bool:
+        return key in self.demotions
+
+    def summary(self) -> Dict[str, object]:
+        return {"trips": dict(self.trips),
+                "demotions": dict(self.demotions)}
+
+
+_HEALTH = RouteHealth()
+
+
+def route_health() -> RouteHealth:
+    """The process-wide route-health registry."""
+    return _HEALTH
+
+
+def reset_route_health() -> None:
+    """Re-arm every breaker (tests / model reload)."""
+    _HEALTH.trips.clear()
+    _HEALTH.demotions.clear()
 
 
 def select_route(kind: str, sizes: dict, *, dtype=jnp.float32) -> Route:

@@ -78,6 +78,22 @@ def main(argv=None):
     ap.add_argument("--blocks", type=int, default=64)
     ap.add_argument("--blocks-per-seq", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    # resilience (engine only)
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline from submit, in ms "
+                         "(expired requests end TIMED_OUT with partial "
+                         "tokens)")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bounded admission queue depth; overflow is shed "
+                         "per --shed-policy")
+    ap.add_argument("--shed-policy", choices=["reject-new", "evict-oldest"],
+                    default="reject-new",
+                    help="full-queue policy: refuse the newcomer, or evict "
+                         "the oldest queued request")
+    ap.add_argument("--guard", action="store_true",
+                    help="numerics guard: fail non-finite-logits slots "
+                         "cleanly and let the core-layer route-health "
+                         "breaker demote saturating square-route sites")
     args = ap.parse_args(argv)
 
     if args.route:
@@ -122,11 +138,17 @@ def main(argv=None):
                             blocks_per_seq=args.blocks_per_seq,
                             prefill_chunk=args.prefill_chunk,
                             max_new_tokens=args.max_new,
-                            prepared=args.prepared)
+                            prepared=args.prepared,
+                            deadline_s=(args.deadline_ms / 1e3
+                                        if args.deadline_ms is not None
+                                        else None),
+                            queue_limit=args.queue_limit,
+                            shed_policy=args.shed_policy,
+                            guard=args.guard)
         engine = Engine(model, params, ecfg)
-        results = engine.run(reqs)
+        eresults = engine.run(reqs)
         m = engine.metrics
-        print(f"[engine] served {len(results)} requests, {m.tokens_out} "
+        print(f"[engine] served {len(eresults)} requests, {m.tokens_out} "
               f"tokens in {m.wall_s:.2f}s ({m.tokens_per_s:.1f} tok/s, "
               f"mode={cfg.matmul_mode}, prepared={args.prepared})")
         print(f"  ttft mean {m.mean_ttft_s * 1e3:.0f}ms | block util "
@@ -134,6 +156,12 @@ def main(argv=None):
               f"occupancy {m.batch_occupancy:.2f} slots/step | "
               f"{m.prefill_chunks} prefill chunks, {m.decode_steps} decode "
               f"steps, {m.preemptions} preemptions")
+        by_status = {}
+        for r in eresults.values():
+            by_status[str(r.status)] = by_status.get(str(r.status), 0) + 1
+        print(f"  terminals: {by_status} | shed {m.shed} | timeouts "
+              f"{m.timeouts} | guard trips {m.guard_trips}")
+        results = {rid: r.tokens for rid, r in eresults.items()}
     for rid in sorted(results)[:4]:
         print(f"  req {rid}: {results[rid][:8]}...")
     assert len(results) == args.requests

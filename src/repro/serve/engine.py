@@ -1,4 +1,5 @@
-"""Production serving engine: paged KV cache + ragged continuous batching.
+"""Production serving engine: paged KV cache + ragged continuous batching,
+with structured failure semantics.
 
 The reference :class:`~repro.serve.server.Server` prefills one request at
 a time into a dense per-slot cache and decodes the whole batch in one
@@ -18,24 +19,57 @@ loop.  This engine is the production shape of the same loop:
 - **Chunked prefill admission** -- prompts are processed in
   ``prefill_chunk``-token chunks interleaved with decode steps (one chunk
   per engine step), so a long prompt never stalls in-flight decodes.
-  Chunk attention reads the same paged pool, so prior chunks and
-  intra-chunk causality share one absolute-position mask.
 - **Prepared-weight decode path** -- ``prepared=True`` runs
   ``LM.prepare_params`` ONCE at engine start and serves every decode /
   prefill GEMM from the weight-stationary prepared operands (paper
   §4-§5: the regime where a weight loaded once streams against many
   activations is exactly LLM decode).
-- **Preemption** -- if the pool cannot grow a sequence mid-decode, the
-  youngest decoding slot is released and its request requeued (greedy
-  decode is deterministic, so a preempted request regenerates the same
-  tokens).
+
+Resilience contract (the part PR 5 lacked)
+------------------------------------------
+Nothing a single request does -- an oversize prompt, a deadline it
+cannot meet, a poisoned logits row, repeated preemption, even a failing
+model step -- may kill the batch.  Every submitted request ends in
+exactly one **terminal status** (:class:`RequestStatus`), returned as a
+:class:`RequestResult` from :meth:`Engine.run` / drained from
+:meth:`Engine.drain_finished` after :meth:`Engine.step`:
+
+``COMPLETED``    finished normally (EOS or ``max_new_tokens``);
+``REJECTED``     refused at ``submit`` (invalid geometry, or shed by the
+                 bounded admission queue's load-shed policy);
+``TIMED_OUT``    its deadline or the run's wall budget expired (partial
+                 tokens are returned);
+``FAILED``       a fault the engine absorbed on its behalf: preemption
+                 budget exhausted, persistent step failures, non-finite
+                 logits (numerics guard), or the no-progress watchdog;
+``CANCELLED``    :meth:`Engine.cancel` was called on it.
+
+Mechanisms: per-request **deadlines** (``EngineConfig.deadline_s`` /
+``Request.deadline_s``) and a per-run wall budget (``max_wall_s``); a
+**bounded admission queue** (``queue_limit``) with an explicit shed
+policy (``reject-new`` | ``evict-oldest``); a **preemption budget**
+(``max_preemptions``) so two long requests can never thrash each other
+forever; bounded **step retries** (``max_step_retries`` -- the model
+calls are functional, so a failed call mutated nothing and retrying is
+token-exact); a **no-progress watchdog** (``watchdog_steps``) that
+converts a stuck scheduler into surfaced errors; and an engine-level
+**numerics guard** (``guard=True``) that fails a slot whose logits go
+non-finite instead of serving garbage argmax tokens (the core-layer
+guard -- square-route demotion -- lives in :mod:`repro.core.guards` /
+:mod:`repro.kernels.routing` and is scoped over every step when
+``guard=True``).  Terminal paths all release their slot's blocks, so
+the allocator's free count returns to its initial value however a run
+ends (chaos-tested under seeded fault injection, ``serve/faults.py``).
 
 Greedy outputs are token-for-token identical to one-request-at-a-time
-sequential generation (tested against the dense reference ``Server``).
+sequential generation (tested against the dense reference ``Server``),
+with or without faults for every request a fault does not poison.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import enum
 import time
 from typing import Dict, List, Optional
 
@@ -43,11 +77,44 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import guards
 from repro.models.attention import EMPTY_POS
 from repro.serve import paged as paged_mod
+from repro.serve.faults import FaultInjector, FaultyAllocator
 from repro.serve.server import Request
 
-__all__ = ["EngineConfig", "EngineMetrics", "Engine"]
+__all__ = ["EngineConfig", "EngineMetrics", "Engine", "RequestStatus",
+           "RequestResult", "SHED_POLICIES"]
+
+SHED_POLICIES = ("reject-new", "evict-oldest")
+
+
+class RequestStatus(str, enum.Enum):
+    """Terminal request statuses (see the module docstring)."""
+    COMPLETED = "completed"
+    REJECTED = "rejected"
+    TIMED_OUT = "timed_out"
+    FAILED = "failed"
+    CANCELLED = "cancelled"
+
+    def __str__(self):
+        return self.value
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """One request's terminal outcome.  ``tokens`` holds whatever was
+    generated before the terminal event (complete output for
+    ``COMPLETED``, partial for ``TIMED_OUT``/``FAILED``/``CANCELLED``,
+    empty for ``REJECTED``)."""
+    rid: int
+    status: RequestStatus
+    tokens: List[int]
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status is RequestStatus.COMPLETED
 
 
 @dataclasses.dataclass
@@ -63,7 +130,26 @@ class EngineConfig:
     prepared: bool = False        # LM.prepare_params at engine start
     jit: bool = True              # False: eager steps (benchmarks -- the
                                   # prepared amortization is visible only
-                                  # when the per-call prep really executes)
+                                  # when the per-call prep really executes;
+                                  # also the regime where the core-layer
+                                  # numerics guard can check values)
+    # ---- resilience (see module docstring) ----
+    deadline_s: Optional[float] = None   # per-request wall budget from
+                                         # submit (Request.deadline_s wins)
+    max_wall_s: Optional[float] = None   # whole-run() budget
+    queue_limit: Optional[int] = None    # bounded admission queue depth
+    shed_policy: str = "reject-new"      # full-queue policy (SHED_POLICIES)
+    max_preemptions: int = 8      # per-request; exceeded -> FAILED
+    max_step_retries: int = 8     # consecutive failed model calls tolerated
+    watchdog_steps: int = 200     # no-progress ticks before surfacing
+    guard: bool = False           # numerics guard: fail non-finite-logits
+                                  # slots; scope the core-layer square-route
+                                  # guard over every step
+
+    def __post_init__(self):
+        if self.shed_policy not in SHED_POLICIES:
+            raise ValueError(f"unknown shed_policy {self.shed_policy!r}; "
+                             f"expected one of {SHED_POLICIES}")
 
     @property
     def max_len(self) -> int:
@@ -74,7 +160,8 @@ class EngineConfig:
 class EngineMetrics:
     """Serving counters the benchmarks report (utilization as the metric,
     per the multisystolic-array scheduling framing -- not single-call
-    latency)."""
+    latency), plus the backpressure/failure counters the resilience layer
+    surfaces."""
     tokens_out: int = 0
     prefill_tokens: int = 0
     decode_steps: int = 0
@@ -82,6 +169,17 @@ class EngineMetrics:
     prefill_chunks: int = 0
     preemptions: int = 0
     peak_blocks_used: int = 0
+    # ---- backpressure / failure accounting ----
+    completed: int = 0
+    rejected: int = 0             # refused at submit (invalid or shed)
+    shed: int = 0                 # of rejected: evicted by `evict-oldest`
+    timeouts: int = 0             # deadline / wall-budget expiries
+    failures: int = 0             # FAILED terminals (budget, steps, guard)
+    cancelled: int = 0
+    step_failures: int = 0        # caught model-call exceptions (retried)
+    watchdog_trips: int = 0
+    guard_trips: int = 0          # non-finite logits rows caught
+    peak_queue_depth: int = 0
     # running sum/count (not a per-step list: a long-lived engine steps
     # forever and the bookkeeping must stay O(1))
     util_sum: float = 0.0
@@ -95,6 +193,10 @@ class EngineMetrics:
 
     @property
     def mean_ttft_s(self) -> float:
+        """Mean time-to-first-token over requests that GOT a first token.
+        Shed/rejected requests never enter ``ttft_s`` (they saw no model
+        work), so backpressure cannot skew the latency read; the empty
+        case is 0.0, never a division by zero."""
         return (sum(self.ttft_s.values()) / len(self.ttft_s)
                 if self.ttft_s else 0.0)
 
@@ -119,6 +221,16 @@ class EngineMetrics:
             "decode_steps": self.decode_steps,
             "prefill_chunks": self.prefill_chunks,
             "preemptions": self.preemptions,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "shed": self.shed,
+            "timeouts": self.timeouts,
+            "failures": self.failures,
+            "cancelled": self.cancelled,
+            "step_failures": self.step_failures,
+            "watchdog_trips": self.watchdog_trips,
+            "guard_trips": self.guard_trips,
+            "peak_queue_depth": self.peak_queue_depth,
         }
 
 
@@ -133,15 +245,21 @@ class _Slot:
 
 
 class Engine:
-    def __init__(self, model, params, cfg: EngineConfig, seed: int = 0):
+    def __init__(self, model, params, cfg: EngineConfig, seed: int = 0,
+                 faults: Optional[FaultInjector] = None):
         self.model = model
         self.cfg = cfg
         self.params = (model.prepare_params(params) if cfg.prepared
                        else params)
         self.key = jax.random.PRNGKey(seed)
+        self._faults = faults
 
         self.allocator = paged_mod.BlockAllocator(cfg.num_blocks,
                                                   cfg.block_size)
+        if faults is not None:
+            # the wrapper delegates state to the real allocator, so leak
+            # accounting still reads the true pool
+            self.allocator = FaultyAllocator(self.allocator, faults)
         self.tables = paged_mod.BlockTables(self.allocator, cfg.max_slots,
                                             cfg.blocks_per_seq)
         # arch eligibility (plain decoder LM, every layer's decode cache a
@@ -176,11 +294,23 @@ class Engine:
 
         self.slots: List[Optional[_Slot]] = [None] * cfg.max_slots
         self.queue: List[Request] = []
-        self.results: Dict[int, List[int]] = {}
+        self.results: Dict[int, RequestResult] = {}
         self.metrics = EngineMetrics()
+        self._newly_finished: List[RequestResult] = []
         self._arrival: Dict[int, float] = {}
+        self._deadline: Dict[int, float] = {}     # rid -> absolute engine time
+        self._preempts: Dict[int, int] = {}       # rid -> times preempted
+        self._tick = 0
+        self._skew = 0.0                          # fault-injected clock skew
+        self._idle_ticks = 0                      # watchdog state
+        self._fail_streak = {"prefill": 0, "decode": 0}
 
     # ------------------------------------------------------------ helpers
+    def _now(self) -> float:
+        """The engine clock: wall time plus any injected skew (deadlines
+        run on this clock, so chaos tests expire them without sleeping)."""
+        return time.perf_counter() + self._skew
+
     def _sample(self, logits) -> np.ndarray:
         if self.cfg.temperature <= 0.0:
             return np.asarray(jnp.argmax(logits, axis=-1))
@@ -197,12 +327,141 @@ class Engine:
         self._reset_pos(self.tables.release(slot_id))
         self.slots[slot_id] = None
 
-    def _finish(self, slot_id: int) -> None:
-        slot = self.slots[slot_id]
-        self.results[slot.req.rid] = slot.req.out
-        self._arrival.pop(slot.req.rid, None)    # bounded bookkeeping
+    # ------------------------------------------------- terminal accounting
+    def _count_terminal(self, status: RequestStatus) -> None:
+        m = self.metrics
+        if status is RequestStatus.COMPLETED:
+            m.completed += 1
+        elif status is RequestStatus.TIMED_OUT:
+            m.timeouts += 1
+        elif status is RequestStatus.FAILED:
+            m.failures += 1
+        elif status is RequestStatus.CANCELLED:
+            m.cancelled += 1
+
+    def _result(self, req: Request, status: RequestStatus,
+                error: Optional[str] = None) -> RequestResult:
+        """Record a request's terminal status (bounded bookkeeping: every
+        per-rid map is popped here, whatever the terminal path)."""
+        res = RequestResult(req.rid, status, list(req.out or []), error)
+        self.results[req.rid] = res
+        self._newly_finished.append(res)
+        self._arrival.pop(req.rid, None)
+        self._deadline.pop(req.rid, None)
+        self._preempts.pop(req.rid, None)
+        self._count_terminal(status)
+        return res
+
+    def _terminate(self, slot_id: int, status: RequestStatus,
+                   error: Optional[str] = None) -> None:
+        """End a slotted request: record the terminal status (partial
+        tokens kept) and recycle its blocks."""
+        self._result(self.slots[slot_id].req, status, error)
         self._release(slot_id)
 
+    def _finish(self, slot_id: int) -> None:
+        self._terminate(slot_id, RequestStatus.COMPLETED)
+
+    def _reject(self, req: Request, msg: str, shed: bool = False) -> None:
+        self.metrics.rejected += 1
+        if shed:
+            self.metrics.shed += 1
+        self._result(req, RequestStatus.REJECTED, msg)
+
+    # ----------------------------------------------------------- admission
+    def submit(self, requests: List[Request]) -> None:
+        """Enqueue requests.  Invalid or shed requests are REJECTED with a
+        terminal status (never an exception -- one bad request must not
+        kill a batch); the single raising case is a duplicate ``rid``,
+        which is a caller bug that would corrupt the results keying."""
+        cfg = self.cfg
+        for req in requests:
+            if req.rid in self.results or req.rid in self._arrival:
+                raise ValueError(
+                    f"duplicate request id {req.rid}: a rid already "
+                    f"queued, in flight, or finished would silently "
+                    f"overwrite its result; use fresh rids per request")
+            if len(req.tokens) == 0:
+                self._reject(req, "empty prompt (there is no position to "
+                                  "sample the first token from)")
+                continue
+            total = len(req.tokens) + cfg.max_new_tokens
+            if total > cfg.max_len:
+                self._reject(
+                    req, f"prompt {len(req.tokens)} + max_new "
+                         f"{cfg.max_new_tokens} exceeds the per-sequence "
+                         f"ceiling {cfg.max_len} ({cfg.blocks_per_seq} "
+                         f"blocks x {cfg.block_size})")
+                continue
+            if self.allocator.blocks_for(total) > cfg.num_blocks - 1:
+                self._reject(
+                    req, f"needs {self.allocator.blocks_for(total)} blocks "
+                         f"but the pool only has {cfg.num_blocks - 1} "
+                         f"allocatable ones")
+                continue
+            if cfg.queue_limit is not None \
+                    and len(self.queue) >= cfg.queue_limit:
+                if cfg.shed_policy == "reject-new":
+                    self._reject(req, f"admission queue full "
+                                      f"(queue_limit={cfg.queue_limit}, "
+                                      f"shed_policy=reject-new)", shed=True)
+                    continue
+                # evict-oldest: shed the oldest *queued* request (in-flight
+                # work is never thrown away by admission pressure)
+                victim = self.queue.pop(0)
+                self._reject(victim,
+                             f"shed from the admission queue by a newer "
+                             f"request (queue_limit={cfg.queue_limit}, "
+                             f"shed_policy=evict-oldest)", shed=True)
+            now = self._now()
+            self._arrival[req.rid] = now
+            budget = (req.deadline_s if req.deadline_s is not None
+                      else cfg.deadline_s)
+            if budget is not None:
+                self._deadline[req.rid] = now + float(budget)
+            self.queue.append(req)
+            self.metrics.peak_queue_depth = max(
+                self.metrics.peak_queue_depth, len(self.queue))
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or in-flight request (terminal status
+        CANCELLED, partial tokens returned, blocks recycled).  Returns
+        False if ``rid`` is not pending."""
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                self._result(req, RequestStatus.CANCELLED, "cancelled")
+                return True
+        for slot_id, slot in enumerate(self.slots):
+            if slot is not None and slot.req.rid == rid:
+                self._terminate(slot_id, RequestStatus.CANCELLED, "cancelled")
+                return True
+        return False
+
+    def drain_finished(self) -> List[RequestResult]:
+        """Terminal results accumulated since the last drain (streaming
+        callers poll this after each :meth:`step`)."""
+        out, self._newly_finished = self._newly_finished, []
+        return out
+
+    # ------------------------------------------------------------ deadlines
+    def _expire_deadlines(self) -> None:
+        if not self._deadline:
+            return
+        now = self._now()
+        expired = {rid for rid, dl in self._deadline.items() if now >= dl}
+        if not expired:
+            return
+        for req in [q for q in self.queue if q.rid in expired]:
+            self.queue.remove(req)
+            self._result(req, RequestStatus.TIMED_OUT,
+                         "deadline expired while queued")
+        for slot_id, slot in enumerate(self.slots):
+            if slot is not None and slot.req.rid in expired:
+                self._terminate(slot_id, RequestStatus.TIMED_OUT,
+                                "deadline expired mid-generation")
+
+    # ----------------------------------------------------------- preemption
     def _preempt_for(self, needy_slot: int) -> bool:
         """Release the youngest active slot (ties: highest slot id) and
         requeue its request at the queue head.  Greedy regeneration is
@@ -210,7 +469,11 @@ class Engine:
         Evicting strictly youngest-first (the needy slot may evict itself)
         guarantees the oldest request always progresses: it is only ever
         chosen when alone, and alone in the pool its whole-sequence need
-        fits by the submit() check, so its growth can never fail."""
+        fits by the submit() check, so its growth can never fail.
+
+        A victim past its preemption budget FAILS cleanly instead of
+        requeueing (its blocks are still freed): two long requests can
+        degrade each other's latency, never livelock the engine."""
         del needy_slot
         victims = [i for i, s in enumerate(self.slots) if s is not None]
         if not victims:
@@ -218,42 +481,29 @@ class Engine:
         victim = max(victims, key=lambda i: (self._arrival[
             self.slots[i].req.rid], i))
         v = self.slots[victim]
+        rid = v.req.rid
+        self.metrics.preemptions += 1
+        n = self._preempts[rid] = self._preempts.get(rid, 0) + 1
+        if n > self.cfg.max_preemptions:
+            # partial tokens stay in the result: they were delivered work
+            self._terminate(victim, RequestStatus.FAILED,
+                            f"preemption budget exhausted ({n} preemptions "
+                            f"> max_preemptions={self.cfg.max_preemptions})")
+            return True
         # roll the victim's DELIVERED-token accounting back: tokens_out /
         # ttft describe what reaches the caller, and the regeneration will
         # recount them (prefill/decode step counters stay -- they measure
         # executed work, which preemption really does repeat)
         self.metrics.tokens_out -= len(v.req.out or [])
-        self.metrics.ttft_s.pop(v.req.rid, None)
+        self.metrics.ttft_s.pop(rid, None)
         v.req.out = None                      # regenerate from scratch
         self.queue.insert(0, v.req)
         self._release(victim)
-        self.metrics.preemptions += 1
         return True
 
-    def submit(self, requests: List[Request]) -> None:
-        cfg = self.cfg
-        for req in requests:
-            if len(req.tokens) == 0:
-                raise ValueError(f"request {req.rid}: empty prompt (there "
-                                 f"is no position to sample the first "
-                                 f"token from)")
-            total = len(req.tokens) + cfg.max_new_tokens
-            if total > cfg.max_len:
-                raise ValueError(
-                    f"request {req.rid}: prompt {len(req.tokens)} + "
-                    f"max_new {cfg.max_new_tokens} exceeds the "
-                    f"per-sequence ceiling {cfg.max_len} "
-                    f"({cfg.blocks_per_seq} blocks x {cfg.block_size})")
-            if self.allocator.blocks_for(total) > cfg.num_blocks - 1:
-                raise ValueError(
-                    f"request {req.rid}: needs "
-                    f"{self.allocator.blocks_for(total)} blocks but the "
-                    f"pool only has {cfg.num_blocks - 1} allocatable ones")
-            self._arrival[req.rid] = time.perf_counter()
-            self.queue.append(req)
-
     # ----------------------------------------------------------- schedule
-    def _admit(self) -> None:
+    def _admit(self) -> bool:
+        admitted = False
         for slot_id in range(self.cfg.max_slots):
             if self.slots[slot_id] is not None or not self.queue:
                 continue
@@ -262,6 +512,25 @@ class Engine:
                 break                          # pool exhausted: wait
             self.queue.pop(0)
             self.slots[slot_id] = _Slot(req=req)
+            admitted = True
+        return admitted
+
+    def _step_failed(self, kind: str, exc: Exception,
+                     involved: List[int]) -> None:
+        """A model call raised.  The calls are functional (state is
+        assigned only on success), so nothing was mutated: retrying next
+        tick is token-exact.  ``max_step_retries`` consecutive failures
+        convert into clean per-request FAILED terminals."""
+        self.metrics.step_failures += 1
+        self._fail_streak[kind] += 1
+        if self._fail_streak[kind] > self.cfg.max_step_retries:
+            msg = (f"{kind} step failed {self._fail_streak[kind]} "
+                   f"consecutive times (max_step_retries="
+                   f"{self.cfg.max_step_retries}): {exc!r}")
+            for slot_id in involved:
+                if self.slots[slot_id] is not None:
+                    self._terminate(slot_id, RequestStatus.FAILED, msg)
+            self._fail_streak[kind] = 0
 
     def _prefill_one(self) -> bool:
         cfg = self.cfg
@@ -282,18 +551,33 @@ class Engine:
         toks[0, :len(chunk)] = chunk
         poss[0, :len(chunk)] = np.arange(lo, lo + len(chunk), dtype=np.int32)
         tables_row = jnp.asarray(self.tables.table[slot_id:slot_id + 1])
-        hidden, self.cache, self.pos_pool = self._chunk(
-            self.params, self.cache, self.pos_pool, tables_row,
-            jnp.asarray(toks), jnp.asarray(poss))
+        try:
+            if self._faults is not None:
+                self._faults.before_step("prefill")
+            hidden, cache, pos_pool = self._chunk(
+                self.params, self.cache, self.pos_pool, tables_row,
+                jnp.asarray(toks), jnp.asarray(poss))
+        except Exception as e:                        # noqa: BLE001
+            self._step_failed("prefill", e, [slot_id])
+            return False
+        self._fail_streak["prefill"] = 0
+        self.cache, self.pos_pool = cache, pos_pool
         slot.n_prefilled = lo + len(chunk)
         self.metrics.prefill_chunks += 1
         self.metrics.prefill_tokens += len(chunk)
         if slot.n_prefilled == len(prompt):      # final chunk: first token
             logits = self._logits_at(self.params, hidden,
                                      jnp.int32(len(chunk) - 1))
+            # one reduce + scalar transfer (nan/+inf propagate through
+            # max), not an elementwise isfinite over the vocab row
+            if cfg.guard and not np.isfinite(float(jnp.max(logits))):
+                self.metrics.guard_trips += 1
+                self._terminate(slot_id, RequestStatus.FAILED,
+                                "non-finite prefill logits (numerics guard)")
+                return True
             tok = int(self._sample(logits)[0])
             rid = slot.req.rid
-            self.metrics.ttft_s[rid] = time.perf_counter() - self._arrival[rid]
+            self.metrics.ttft_s[rid] = self._now() - self._arrival[rid]
             slot.req.out = [tok]
             self.metrics.tokens_out += 1
             slot.last_tok = tok
@@ -311,15 +595,21 @@ class Engine:
         if not live:
             return False
         # grow every live slot's table to cover this step's write; preempt
-        # youngest-first when the pool is dry
+        # youngest-first when the pool is dry.  A slot that can neither
+        # grow nor find a victim (transient allocator exhaustion) simply
+        # skips this tick -- it retries next tick, and the watchdog
+        # surfaces the condition if it never clears.
+        blocked = set()
         for slot_id in list(live):
             while self.slots[slot_id] is not None and \
-                    not self.tables.ensure(slot_id, self.slots[slot_id].pos + 1):
+                    not self.tables.ensure(slot_id,
+                                           self.slots[slot_id].pos + 1):
                 if not self._preempt_for(slot_id):
-                    raise RuntimeError("cache pool exhausted and nothing "
-                                       "to preempt")
+                    blocked.add(slot_id)
+                    break
         live = [i for i, s in enumerate(self.slots)
-                if s is not None and s.state == "decode"]
+                if s is not None and s.state == "decode"
+                and i not in blocked]
         if not live:
             return False
         B = cfg.max_slots
@@ -328,14 +618,38 @@ class Engine:
         for i in live:
             toks[i, 0] = self.slots[i].last_tok
             poss[i, 0] = self.slots[i].pos
-        logits, self.cache, self.pos_pool = self._decode(
-            self.params, self.cache, self.pos_pool,
-            jnp.asarray(self.tables.table), jnp.asarray(toks),
-            jnp.asarray(poss))
+        try:
+            if self._faults is not None:
+                self._faults.before_step("decode")
+            logits, cache, pos_pool = self._decode(
+                self.params, self.cache, self.pos_pool,
+                jnp.asarray(self.tables.table), jnp.asarray(toks),
+                jnp.asarray(poss))
+        except Exception as e:                        # noqa: BLE001
+            self._step_failed("decode", e, live)
+            return False
+        self._fail_streak["decode"] = 0
+        self.cache, self.pos_pool = cache, pos_pool
+        if self._faults is not None:
+            logits = self._faults.poison_logits(logits,
+                                                self.metrics.decode_steps)
         nxt = self._sample(logits)
+        finite = None
+        if cfg.guard:
+            # per-row max probe: nan/+inf propagate, so a poisoned row
+            # reads non-finite with one reduce instead of an elementwise
+            # isfinite pass over (slots, vocab)
+            finite = np.isfinite(np.asarray(jnp.max(logits, axis=-1)))
         self.metrics.decode_steps += 1
         self.metrics.decode_slot_steps += len(live)
         for i in live:
+            if finite is not None and not finite[i]:
+                # fail THIS slot, not the batch: argmax over a poisoned
+                # row would silently serve token 0 forever
+                self.metrics.guard_trips += 1
+                self._terminate(i, RequestStatus.FAILED,
+                                "non-finite logits (numerics guard)")
+                continue
             slot = self.slots[i]
             tok = int(nxt[i])
             slot.req.out.append(tok)
@@ -347,24 +661,78 @@ class Engine:
                 self._finish(i)
         return True
 
+    # ------------------------------------------------------------ watchdog
+    def _watchdog_fire(self) -> None:
+        """No scheduler progress for ``watchdog_steps`` consecutive ticks
+        with work still pending: convert the stall into surfaced per-
+        request errors instead of an infinite ``run()`` loop."""
+        self.metrics.watchdog_trips += 1
+        msg = (f"watchdog: no scheduler progress for {self._idle_ticks} "
+               f"consecutive steps (persistent allocator exhaustion or "
+               f"failing model calls)")
+        for req in list(self.queue):
+            self.queue.remove(req)
+            self._result(req, RequestStatus.FAILED, msg)
+        for slot_id, slot in enumerate(self.slots):
+            if slot is not None:
+                self._terminate(slot_id, RequestStatus.FAILED, msg)
+        self._idle_ticks = 0
+
+    def _abort_remaining(self, status: RequestStatus, msg: str) -> None:
+        for req in list(self.queue):
+            self.queue.remove(req)
+            self._result(req, status, msg)
+        for slot_id, slot in enumerate(self.slots):
+            if slot is not None:
+                self._terminate(slot_id, status, msg)
+
+    # ----------------------------------------------------------------- API
     def step(self) -> bool:
-        """One scheduler tick: admit, one prefill chunk, one ragged decode
-        step.  Returns False when there is nothing left to do."""
-        self._admit()
-        did = self._prefill_one()
-        did = self._decode_all() or did
+        """One scheduler tick: expire deadlines, admit, one prefill chunk,
+        one ragged decode step.  Returns False when there is nothing left
+        to do.  Newly-terminal results are available from
+        :meth:`drain_finished`."""
+        self._tick += 1
+        if self._faults is not None:
+            self._skew += self._faults.clock_skew(self._tick)
+        guard_ctx = (guards.guarded() if self.cfg.guard
+                     else contextlib.nullcontext())
+        with guard_ctx:
+            self._expire_deadlines()
+            did = self._admit()
+            did = self._prefill_one() or did
+            did = self._decode_all() or did
         self.metrics.util_sum += self.allocator.utilization
         self.metrics.util_steps += 1
         self.metrics.peak_blocks_used = max(self.metrics.peak_blocks_used,
                                             self.allocator.used_blocks)
-        return did or bool(self.queue) \
+        pending = bool(self.queue) \
             or any(s is not None for s in self.slots)
+        if pending and not did:
+            self._idle_ticks += 1
+            if self._idle_ticks >= self.cfg.watchdog_steps:
+                self._watchdog_fire()
+                pending = False
+        else:
+            self._idle_ticks = 0
+        return did or pending
 
-    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Serve ``requests`` to completion; returns {rid: generated ids}."""
+    def run(self, requests: List[Request]) -> Dict[int, RequestResult]:
+        """Serve ``requests`` until every one reaches a terminal status;
+        returns {rid: :class:`RequestResult`}.  Faults are absorbed into
+        per-request statuses -- ``run`` itself raises only for caller
+        bugs (duplicate rids)."""
         self.submit(requests)
         t0 = time.perf_counter()
+        e0 = self._now()
         while self.queue or any(s is not None for s in self.slots):
+            if self.cfg.max_wall_s is not None \
+                    and self._now() - e0 >= self.cfg.max_wall_s:
+                self._abort_remaining(
+                    RequestStatus.TIMED_OUT,
+                    f"run wall budget exhausted "
+                    f"(max_wall_s={self.cfg.max_wall_s})")
+                break
             if not self.step():
                 break
         self.metrics.wall_s += time.perf_counter() - t0

@@ -35,6 +35,9 @@ class Request:
     tokens: np.ndarray            # (prompt_len,)
     extras: Optional[Dict[str, np.ndarray]] = None
     out: Optional[List[int]] = None
+    deadline_s: Optional[float] = None    # per-request wall budget from
+                                          # submit (engine only; overrides
+                                          # EngineConfig.deadline_s)
 
 
 class Server:
@@ -54,6 +57,12 @@ class Server:
     def run(self, requests: List[Request]) -> Dict[int, List[int]]:
         """Serve all requests to completion; returns {rid: generated ids}."""
         cfg = self.cfg
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            dupes = sorted({r for r in rids if rids.count(r) > 1})
+            raise ValueError(
+                f"duplicate request ids {dupes}: results are keyed by rid, "
+                f"so duplicates would silently overwrite each other")
         queue = list(requests)
         results: Dict[int, List[int]] = {}
         # batch-of-one prefill, slot-batched decode

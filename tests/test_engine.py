@@ -1,7 +1,11 @@
 """Serving-engine integration tests: continuous batching over the paged
 cache, chunked prefill, slot recycling, EOS / exhaustion, preemption, and
 token-for-token equivalence against sequential one-request-at-a-time
-generation through the dense reference Server."""
+generation through the dense reference Server -- plus the resilience
+surface: terminal statuses, deadlines, the bounded admission queue's shed
+policies, cancellation, and the preemption budget."""
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -9,7 +13,7 @@ import pytest
 from repro.configs import get_config
 from repro.launch.serve import make_requests
 from repro.models.lm import build_model
-from repro.serve.engine import Engine, EngineConfig
+from repro.serve.engine import Engine, EngineConfig, RequestStatus
 from repro.serve.server import Request, ServeConfig, Server
 
 
@@ -22,6 +26,11 @@ def _model(arch="deepseek-7b"):
 
 def _ragged_requests(cfg, n, lo=3, hi=20, seed=0):
     return make_requests(cfg, n, seed=seed, lo=lo, hi=hi)
+
+
+def _toks(results):
+    """{rid: generated ids} view of an engine result dict."""
+    return {rid: r.tokens for rid, r in results.items()}
 
 
 def _sequential_reference(model, params, requests, max_new, cache_len=64,
@@ -46,9 +55,11 @@ def test_engine_eight_concurrent_ragged_matches_sequential():
     results = eng.run([Request(r.rid, r.tokens) for r in reqs])
     ref = _sequential_reference(model, params, reqs, max_new=6)
     assert sorted(results) == list(range(10))
-    assert results == ref
+    assert all(r.ok for r in results.values())
+    assert _toks(results) == ref
     m = eng.metrics
     assert m.tokens_out == 60
+    assert m.completed == 10
     assert m.batch_occupancy > 1.0        # decode really ran batched
     assert 0.0 < m.mean_utilization <= 1.0
     assert len(m.ttft_s) == 10
@@ -62,7 +73,8 @@ def test_engine_slot_recycling_more_requests_than_slots():
         prefill_chunk=16, max_new_tokens=4))
     results = eng.run([Request(r.rid, r.tokens) for r in reqs])
     assert sorted(results) == list(range(9))
-    assert results == _sequential_reference(model, params, reqs, max_new=4)
+    assert _toks(results) == _sequential_reference(model, params, reqs,
+                                                   max_new=4)
     # 9 requests over 3 slots: blocks were freed and reallocated
     assert eng.allocator.used_blocks == 0
     assert eng.metrics.peak_blocks_used <= 31
@@ -75,7 +87,7 @@ def test_engine_max_new_tokens_exhaustion():
         max_slots=4, block_size=8, num_blocks=32, blocks_per_seq=6,
         prefill_chunk=8, max_new_tokens=5))
     results = eng.run(reqs)
-    assert all(len(v) == 5 for v in results.values())
+    assert all(len(v.tokens) == 5 for v in results.values())
 
 
 def test_engine_eos_mid_batch():
@@ -87,8 +99,8 @@ def test_engine_eos_mid_batch():
     probe = Engine(model, params, EngineConfig(
         max_slots=6, block_size=8, num_blocks=64, blocks_per_seq=6,
         prefill_chunk=16, max_new_tokens=3))
-    first = {rid: out[0]
-             for rid, out in probe.run([Request(r.rid, r.tokens)
+    first = {rid: res.tokens[0]
+             for rid, res in probe.run([Request(r.rid, r.tokens)
                                         for r in reqs]).items()}
     eos = first[0]
     stoppers = {rid for rid, t in first.items() if t == eos}
@@ -100,10 +112,10 @@ def test_engine_eos_mid_batch():
     results = eng.run([Request(r.rid, r.tokens) for r in reqs])
     ref = _sequential_reference(model, params, reqs, max_new=6,
                                 eos_id=int(eos))
-    assert results == ref
+    assert _toks(results) == ref
     for rid in stoppers:
-        assert results[rid] == [eos]      # stopped at the first token
-    assert any(len(v) > 1 for v in results.values())
+        assert results[rid].tokens == [eos]   # stopped at the first token
+    assert any(len(v.tokens) > 1 for v in results.values())
     assert eng.allocator.used_blocks == 0
 
 
@@ -119,7 +131,8 @@ def test_engine_prefill_chunking_edges():
         max_slots=3, block_size=4, num_blocks=32, blocks_per_seq=8,
         prefill_chunk=4, max_new_tokens=4))
     results = eng.run([Request(r.rid, r.tokens) for r in reqs])
-    assert results == _sequential_reference(model, params, reqs, max_new=4)
+    assert _toks(results) == _sequential_reference(model, params, reqs,
+                                                   max_new=4)
     assert eng.metrics.prefill_chunks >= 1 + 2 + 6
 
 
@@ -133,11 +146,13 @@ def test_engine_preemption_regenerates_identically():
         max_slots=4, block_size=4, num_blocks=13, blocks_per_seq=8,
         prefill_chunk=16, max_new_tokens=8))
     results = eng.run([Request(r.rid, r.tokens) for r in reqs])
-    assert results == _sequential_reference(model, params, reqs, max_new=8)
+    assert _toks(results) == _sequential_reference(model, params, reqs,
+                                                   max_new=8)
     assert eng.metrics.preemptions > 0
     # delivered-token accounting rolls back on preemption: tokens_out must
     # equal what reached the caller, not include discarded generations
-    assert eng.metrics.tokens_out == sum(len(v) for v in results.values())
+    assert eng.metrics.tokens_out == sum(len(v.tokens)
+                                         for v in results.values())
     assert len(eng.metrics.ttft_s) == len(reqs)
 
 
@@ -152,7 +167,7 @@ def test_engine_prepared_weights_match_raw():
     prep = Engine(model, params, EngineConfig(prepared=True, **kw))
     r_raw = raw.run([Request(r.rid, r.tokens) for r in reqs])
     r_prep = prep.run([Request(r.rid, r.tokens) for r in reqs])
-    assert r_raw == r_prep
+    assert _toks(r_raw) == _toks(r_prep)
 
 
 def test_engine_moe_arch():
@@ -162,10 +177,15 @@ def test_engine_moe_arch():
         max_slots=4, block_size=8, num_blocks=32, blocks_per_seq=6,
         prefill_chunk=8, max_new_tokens=4))
     results = eng.run([Request(r.rid, r.tokens) for r in reqs])
-    assert results == _sequential_reference(model, params, reqs, max_new=4)
+    assert _toks(results) == _sequential_reference(model, params, reqs,
+                                                   max_new=4)
 
 
 def test_engine_rejects_unsupported_archs_and_oversize():
+    """Unsupported architectures still raise at construction (a config
+    bug, not a request fault); invalid REQUESTS get a terminal REJECTED
+    status instead of an exception -- one bad request must never kill a
+    batch."""
     cfg, model, params = _model("whisper-large-v3")
     with pytest.raises(ValueError):
         Engine(model, params, EngineConfig())
@@ -173,7 +193,199 @@ def test_engine_rejects_unsupported_archs_and_oversize():
     eng = Engine(model, params, EngineConfig(
         max_slots=2, block_size=4, num_blocks=16, blocks_per_seq=4,
         max_new_tokens=8))
-    with pytest.raises(ValueError):            # 12 + 8 > 16-token ceiling
-        eng.submit([Request(0, np.zeros(12, np.int32))])
-    with pytest.raises(ValueError):            # empty prompt
-        eng.submit([Request(1, np.zeros(0, np.int32))])
+    eng.submit([Request(0, np.zeros(12, np.int32)),   # 12 + 8 > 16 ceiling
+                Request(1, np.zeros(0, np.int32))])   # empty prompt
+    assert eng.results[0].status is RequestStatus.REJECTED
+    assert "ceiling" in eng.results[0].error
+    assert eng.results[1].status is RequestStatus.REJECTED
+    assert eng.results[1].tokens == []
+    assert eng.metrics.rejected == 2 and eng.metrics.shed == 0
+    assert not eng.queue                     # neither was enqueued
+    # a valid request alongside rejected ones still completes
+    good = _ragged_requests(cfg, 1, lo=4, hi=6, seed=11)[0]
+    res = eng.run([Request(2, good.tokens)])
+    assert res[2].ok and len(res[2].tokens) == 8
+    assert set(res) == {0, 1, 2}             # rejections stay in results
+
+
+def test_engine_duplicate_rid_raises():
+    """Duplicate rids are a caller bug (results are keyed by rid): the
+    one submit-time condition that raises rather than rejects, whether
+    the collision is within one batch or against an earlier request."""
+    cfg, model, params = _model()
+    eng = Engine(model, params, EngineConfig(
+        max_slots=2, block_size=8, num_blocks=32, blocks_per_seq=4,
+        prefill_chunk=8, max_new_tokens=3))
+    reqs = _ragged_requests(cfg, 2, lo=4, hi=8, seed=12)
+    with pytest.raises(ValueError, match="duplicate request id"):
+        eng.submit([Request(7, reqs[0].tokens), Request(7, reqs[1].tokens)])
+    eng2 = Engine(model, params, EngineConfig(
+        max_slots=2, block_size=8, num_blocks=32, blocks_per_seq=4,
+        prefill_chunk=8, max_new_tokens=3))
+    eng2.run([Request(7, reqs[0].tokens)])
+    with pytest.raises(ValueError, match="duplicate request id"):
+        eng2.submit([Request(7, reqs[1].tokens)])  # collides with finished
+
+
+def test_engine_bounded_queue_reject_new():
+    """queue_limit + reject-new: overflow requests are REJECTED (and
+    counted as shed) at submit; admitted ones complete normally."""
+    cfg, model, params = _model()
+    reqs = _ragged_requests(cfg, 6, lo=4, hi=8, seed=13)
+    eng = Engine(model, params, EngineConfig(
+        max_slots=2, block_size=8, num_blocks=32, blocks_per_seq=4,
+        prefill_chunk=8, max_new_tokens=3,
+        queue_limit=3, shed_policy="reject-new"))
+    results = eng.run([Request(r.rid, r.tokens) for r in reqs])
+    shed = {rid for rid, r in results.items()
+            if r.status is RequestStatus.REJECTED}
+    assert shed == {3, 4, 5}                  # the newest three
+    done = {rid: r.tokens for rid, r in results.items() if r.ok}
+    ref = _sequential_reference(model, params, reqs[:3], max_new=3)
+    assert done == ref
+    m = eng.metrics
+    assert m.shed == 3 and m.rejected == 3 and m.peak_queue_depth == 3
+    # shed requests never enter TTFT accounting
+    assert set(m.ttft_s) == {0, 1, 2}
+
+
+def test_engine_bounded_queue_evict_oldest():
+    """queue_limit + evict-oldest: the oldest QUEUED request is shed to
+    admit the newcomer; in-flight work is never evicted by admission."""
+    cfg, model, params = _model()
+    reqs = _ragged_requests(cfg, 6, lo=4, hi=8, seed=13)
+    eng = Engine(model, params, EngineConfig(
+        max_slots=2, block_size=8, num_blocks=32, blocks_per_seq=4,
+        prefill_chunk=8, max_new_tokens=3,
+        queue_limit=3, shed_policy="evict-oldest"))
+    results = eng.run([Request(r.rid, r.tokens) for r in reqs])
+    shed = {rid for rid, r in results.items()
+            if r.status is RequestStatus.REJECTED}
+    assert shed == {0, 1, 2}                  # the oldest three
+    done = {rid: r.tokens for rid, r in results.items() if r.ok}
+    ref = _sequential_reference(model, params, reqs[3:], max_new=3)
+    assert done == ref
+    assert eng.metrics.shed == 3
+
+
+def test_engine_deadline_expiry_and_per_request_override():
+    """An already-expired config deadline times every request out (partial
+    or empty tokens, blocks recycled); a per-request deadline override
+    lets one request opt out and complete."""
+    cfg, model, params = _model()
+    reqs = _ragged_requests(cfg, 3, lo=4, hi=8, seed=14)
+    eng = Engine(model, params, EngineConfig(
+        max_slots=2, block_size=8, num_blocks=32, blocks_per_seq=4,
+        prefill_chunk=8, max_new_tokens=3, deadline_s=0.0))
+    batch = [Request(r.rid, r.tokens) for r in reqs]
+    batch[1].deadline_s = 3600.0              # override: effectively none
+    free0 = eng.allocator.free_blocks
+    results = eng.run(batch)
+    assert results[0].status is RequestStatus.TIMED_OUT
+    assert results[2].status is RequestStatus.TIMED_OUT
+    assert results[1].ok and len(results[1].tokens) == 3
+    assert eng.allocator.free_blocks == free0
+    assert eng.metrics.timeouts == 2
+
+
+def test_engine_max_wall_budget_zero_times_out_everything():
+    cfg, model, params = _model()
+    reqs = _ragged_requests(cfg, 3, lo=4, hi=8, seed=15)
+    eng = Engine(model, params, EngineConfig(
+        max_slots=2, block_size=8, num_blocks=32, blocks_per_seq=4,
+        prefill_chunk=8, max_new_tokens=3, max_wall_s=0.0))
+    results = eng.run([Request(r.rid, r.tokens) for r in reqs])
+    assert all(r.status is RequestStatus.TIMED_OUT
+               for r in results.values())
+    assert eng.allocator.used_blocks == 0
+
+
+def test_engine_cancel_queued_and_inflight():
+    cfg, model, params = _model()
+    reqs = _ragged_requests(cfg, 4, lo=4, hi=8, seed=16)
+    eng = Engine(model, params, EngineConfig(
+        max_slots=2, block_size=8, num_blocks=32, blocks_per_seq=4,
+        prefill_chunk=8, max_new_tokens=6))
+    eng.submit([Request(r.rid, r.tokens) for r in reqs])
+    assert eng.cancel(3)                      # still queued (2 slots)
+    while eng.step():
+        if 0 in {s.req.rid for s in eng.slots if s is not None} \
+                and (eng.results.get(0) is None) and eng.cancel(0):
+            break
+    while eng.step():
+        pass
+    results = dict(eng.results)
+    assert results[3].status is RequestStatus.CANCELLED
+    assert results[3].tokens == []
+    assert results[0].status is RequestStatus.CANCELLED
+    assert results[1].ok and results[2].ok
+    assert eng.metrics.cancelled == 2
+    assert eng.allocator.used_blocks == 0
+    assert not eng.cancel(99)                 # unknown rid: no-op
+
+
+def test_engine_preemption_budget_fails_cleanly():
+    """With max_preemptions=0 a pool too small to finish both requests
+    FAILS the younger one (partial tokens kept, blocks freed) instead of
+    thrashing; the older request still completes exactly."""
+    cfg, model, params = _model()
+    reqs = _ragged_requests(cfg, 4, lo=10, hi=14, seed=7)
+    eng = Engine(model, params, EngineConfig(
+        max_slots=4, block_size=4, num_blocks=13, blocks_per_seq=8,
+        prefill_chunk=16, max_new_tokens=8, max_preemptions=0))
+    results = eng.run([Request(r.rid, r.tokens) for r in reqs])
+    failed = {rid for rid, r in results.items()
+              if r.status is RequestStatus.FAILED}
+    assert failed and eng.metrics.failures == len(failed)
+    ref = _sequential_reference(model, params, reqs, max_new=8)
+    for rid, r in results.items():
+        if r.ok:
+            assert r.tokens == ref[rid]
+        else:
+            assert "preemption budget" in r.error
+    assert eng.allocator.used_blocks == 0
+    # FAILED partials were delivered work: tokens_out counts them too
+    assert eng.metrics.tokens_out == sum(len(r.tokens)
+                                         for r in results.values())
+
+
+def test_engine_drain_finished_streams_terminals():
+    cfg, model, params = _model()
+    reqs = _ragged_requests(cfg, 3, lo=4, hi=8, seed=17)
+    eng = Engine(model, params, EngineConfig(
+        max_slots=2, block_size=8, num_blocks=32, blocks_per_seq=4,
+        prefill_chunk=8, max_new_tokens=3))
+    eng.submit([Request(r.rid, r.tokens) for r in reqs])
+    seen = []
+    while eng.step():
+        seen.extend(eng.drain_finished())
+    seen.extend(eng.drain_finished())
+    assert sorted(r.rid for r in seen) == [0, 1, 2]
+    assert all(r.ok for r in seen)
+    assert eng.drain_finished() == []         # drained exactly once
+
+
+def test_engine_metrics_summary_never_divides_by_zero():
+    """summary() on a fresh engine -- and on one whose every request was
+    shed before any model work -- must return finite numbers."""
+    cfg, model, params = _model()
+    eng = Engine(model, params, EngineConfig(
+        max_slots=2, block_size=8, num_blocks=32, blocks_per_seq=4,
+        max_new_tokens=3))
+    s = eng.metrics.summary()
+    assert s["tokens_per_s"] == 0.0 and s["mean_ttft_s"] == 0.0
+    assert s["batch_occupancy"] == 0.0
+    eng2 = Engine(model, params, EngineConfig(
+        max_slots=2, block_size=8, num_blocks=32, blocks_per_seq=4,
+        max_new_tokens=3, queue_limit=0, shed_policy="reject-new"))
+    reqs = _ragged_requests(cfg, 2, lo=4, hi=8, seed=18)
+    results = eng2.run([Request(r.rid, r.tokens) for r in reqs])
+    assert all(r.status is RequestStatus.REJECTED for r in results.values())
+    s = eng2.metrics.summary()
+    assert s["mean_ttft_s"] == 0.0            # no TTFT entries, no ZeroDiv
+    assert s["rejected"] == 2
+
+
+def test_engine_config_validates_shed_policy():
+    with pytest.raises(ValueError, match="shed_policy"):
+        EngineConfig(shed_policy="drop-everything")

@@ -1,0 +1,201 @@
+"""Chaos tests: the serving engine's resilience contract under seeded,
+deterministic fault injection (serve/faults.py).
+
+The contract, asserted under every schedule:
+- every submitted request ends in exactly one terminal status; no
+  exception escapes ``Engine.run``;
+- every request NOT poisoned by a fault finishes token-identically to
+  the fault-free run (greedy regeneration after preemption / retry after
+  a failed functional step is exact);
+- zero leaked blocks: the allocator's free count returns to its initial
+  value however the run ends;
+- metrics stay self-consistent (terminal counts sum to submissions,
+  tokens_out equals delivered tokens).
+
+Fixed seeds make every schedule reproducible; set ``REPRO_CHAOS_SEEDS``
+(comma-separated ints) to sweep more schedules locally.
+"""
+import os
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import make_requests
+from repro.models.lm import build_model
+from repro.serve.engine import Engine, EngineConfig, RequestStatus
+from repro.serve.faults import (FaultInjector, FaultPlan, FaultyAllocator,
+                                InjectedFault)
+from repro.serve.server import Request
+
+_SEEDS = tuple(int(s) for s in
+               os.environ.get("REPRO_CHAOS_SEEDS", "0,1,2").split(","))
+
+ENGINE_KW = dict(max_slots=4, block_size=8, num_blocks=48, blocks_per_seq=6,
+                 prefill_chunk=8, max_new_tokens=5)
+
+
+@pytest.fixture(scope="module")
+def world():
+    cfg = get_config("deepseek-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = make_requests(cfg, 6, seed=0, lo=4, hi=20)
+    base = Engine(model, params, EngineConfig(**ENGINE_KW)).run(
+        [Request(r.rid, r.tokens) for r in reqs])
+    assert all(r.ok for r in base.values())
+    return cfg, model, params, reqs, {rid: r.tokens
+                                      for rid, r in base.items()}
+
+
+def _fresh(reqs):
+    return [Request(r.rid, r.tokens) for r in reqs]
+
+
+def _run(model, params, reqs, plan, **cfg_kw):
+    eng = Engine(model, params, EngineConfig(**{**ENGINE_KW, **cfg_kw}),
+                 faults=FaultInjector(plan))
+    free0 = eng.allocator.free_blocks
+    results = eng.run(_fresh(reqs))
+    return eng, results, free0
+
+
+def _check_contract(eng, results, free0, n_submitted):
+    """The invariants every schedule must leave intact."""
+    assert len(results) == n_submitted
+    assert all(isinstance(r.status, RequestStatus)
+               for r in results.values())
+    assert eng.allocator.free_blocks == free0          # zero leaked blocks
+    assert eng.allocator.used_blocks == 0
+    m = eng.metrics
+    assert (m.completed + m.rejected + m.timeouts + m.failures
+            + m.cancelled) == n_submitted
+    assert m.tokens_out == sum(len(r.tokens) for r in results.values())
+
+
+def test_transient_alloc_and_step_faults_are_token_invisible(world):
+    """Scattered allocator exhaustion + transient decode/prefill raises:
+    every request still completes with exactly the fault-free tokens."""
+    cfg, model, params, reqs, base = world
+    plan = FaultPlan.of(alloc_fail=(1, 3, 5, 8), decode_fail=(0, 4, 9),
+                        prefill_fail=(2, 6))
+    eng, results, free0 = _run(model, params, reqs, plan)
+    _check_contract(eng, results, free0, len(reqs))
+    assert all(r.ok for r in results.values())
+    assert {rid: r.tokens for rid, r in results.items()} == base
+    assert eng.metrics.step_failures == 5              # all were absorbed
+    assert eng._faults.injected["alloc"] >= 1
+
+
+def test_persistent_decode_failure_fails_requests_not_engine(world):
+    """A decode path that never recovers: the step-retry budget converts
+    it into per-request FAILED terminals -- run() returns, nothing
+    hangs, nothing leaks."""
+    cfg, model, params, reqs, base = world
+    plan = FaultPlan.of(decode_fail=range(10_000))
+    eng, results, free0 = _run(model, params, reqs, plan,
+                               max_step_retries=3, watchdog_steps=50)
+    _check_contract(eng, results, free0, len(reqs))
+    assert all(r.status is RequestStatus.FAILED for r in results.values())
+    assert all("consecutive" in r.error for r in results.values())
+    assert eng.metrics.failures == len(reqs)
+
+
+def test_persistent_alloc_exhaustion_trips_watchdog(world):
+    """An allocator that never hands out a block stalls admission
+    forever; the no-progress watchdog surfaces it as per-request errors
+    instead of an infinite run() loop."""
+    cfg, model, params, reqs, base = world
+    plan = FaultPlan.of(alloc_fail=range(10_000))
+    eng, results, free0 = _run(model, params, reqs, plan,
+                               watchdog_steps=10)
+    _check_contract(eng, results, free0, len(reqs))
+    assert all(r.status is RequestStatus.FAILED for r in results.values())
+    assert all("watchdog" in r.error for r in results.values())
+    assert eng.metrics.watchdog_trips == 1
+
+
+def test_nan_logits_fail_one_slot_batch_survives(world):
+    """A NaN poisoned into one slot's logits row with guard=True: that
+    request FAILS cleanly (guard trip), every other request completes
+    token-identically."""
+    cfg, model, params, reqs, base = world
+    plan = FaultPlan.of(nan_logits={2: 1})
+    eng, results, free0 = _run(model, params, reqs, plan, guard=True)
+    _check_contract(eng, results, free0, len(reqs))
+    bad = [rid for rid, r in results.items() if not r.ok]
+    assert len(bad) == 1
+    assert results[bad[0]].status is RequestStatus.FAILED
+    assert "numerics guard" in results[bad[0]].error
+    assert eng.metrics.guard_trips == 1
+    for rid, r in results.items():
+        if r.ok:
+            assert r.tokens == base[rid]
+
+
+def test_nan_logits_without_guard_serve_garbage(world):
+    """The counterfactual the guard exists for: guard=False lets the
+    poisoned slot keep decoding (argmax over NaN rows), silently
+    diverging from the true tokens.  The engine itself still terminates
+    cleanly -- garbage output, not a crash."""
+    cfg, model, params, reqs, base = world
+    plan = FaultPlan.of(nan_logits={2: 1})
+    eng, results, free0 = _run(model, params, reqs, plan, guard=False)
+    _check_contract(eng, results, free0, len(reqs))
+    assert all(r.ok for r in results.values())
+    assert any(r.tokens != base[rid] for rid, r in results.items())
+
+
+def test_clock_skew_expires_deadlines_without_sleeping(world):
+    """Injected clock skew jumps the engine clock past every deadline at
+    tick 3: in-flight and queued requests get TIMED_OUT terminals (with
+    whatever tokens they had) and their blocks come back."""
+    cfg, model, params, reqs, base = world
+    plan = FaultPlan.of(clock_skew={3: 3600.0})
+    eng, results, free0 = _run(model, params, reqs, plan, deadline_s=60.0)
+    _check_contract(eng, results, free0, len(reqs))
+    assert any(r.status is RequestStatus.TIMED_OUT
+               for r in results.values())
+    for rid, r in results.items():      # completed-before-skew still exact
+        if r.ok:
+            assert r.tokens == base[rid]
+    assert eng.metrics.timeouts >= 1
+    assert eng._faults.injected["skew"] == 1
+
+
+@pytest.mark.parametrize("seed", _SEEDS)
+def test_random_fault_schedules_hold_the_contract(world, seed):
+    """Seeded random schedules (alloc exhaustion + transient step raises):
+    the full contract holds and -- transient faults only -- every request
+    completes token-identically to the fault-free run."""
+    cfg, model, params, reqs, base = world
+    plan = FaultPlan.random(seed)
+    eng, results, free0 = _run(model, params, reqs, plan)
+    _check_contract(eng, results, free0, len(reqs))
+    assert all(r.ok for r in results.values())
+    assert {rid: r.tokens for rid, r in results.items()} == base
+
+
+def test_fault_plan_random_is_deterministic():
+    assert FaultPlan.random(7) == FaultPlan.random(7)
+    assert FaultPlan.random(7) != FaultPlan.random(8)
+
+
+def test_faulty_allocator_delegates_state():
+    from repro.serve.paged import BlockAllocator
+    inj = FaultInjector(FaultPlan.of(alloc_fail=(0,)))
+    alloc = FaultyAllocator(BlockAllocator(8, 4), inj)
+    assert alloc.alloc(1) is None            # injected exhaustion
+    got = alloc.alloc(2)                     # delegates to the real pool
+    assert got is not None and len(got) == 2
+    assert alloc.used_blocks == 2            # state reads the true pool
+    alloc.free(got)
+    assert alloc.used_blocks == 0
+
+
+def test_injected_fault_is_a_runtime_error():
+    inj = FaultInjector(FaultPlan.of(decode_fail=(0,)))
+    with pytest.raises(InjectedFault):
+        inj.before_step("decode")
+    inj.before_step("decode")                # ordinal 1: clean
+    assert inj.calls["decode"] == 2 and inj.injected["decode"] == 1

@@ -1,0 +1,181 @@
+"""Numerics guard-rail tests: the square-route circuit breaker.
+
+The failure regime (see core/guards.py): f32 operands with magnitudes
+around 1e19 whose products CANCEL -- the standard route (a @ b) sums
+alternating +-1e38 terms to a finite value, while the square route's PM
+term ``(a + b)^2`` saturates f32 at ``|a + b| > sqrt(f32_max) ~ 1.84e19``.
+With the guard enabled, fs_einsum detects the non-finite square-routed
+output, falls back to standard for that call, and after ``trip_limit``
+trips of the same (site, shape, dtype) key the route-health registry
+demotes the site outright -- visible in the counting audit, never silent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import counting, guards
+from repro.core.einsum import fs_einsum
+from repro.kernels import routing
+
+
+@pytest.fixture(autouse=True)
+def _fresh_route_health():
+    routing.reset_route_health()
+    yield
+    routing.reset_route_health()
+
+
+def _cancelling_operands(m=4, k=8, n=4, mag=1e19):
+    """f32 operands where standard products cancel (finite) but the PM
+    square ``(a+b)^2 = (2e19)^2`` saturates f32: the guard's regime."""
+    x = np.full((m, k), mag, np.float32)
+    x[:, 1::2] *= -1.0                     # alternating signs down K
+    y = np.full((k, n), mag, np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+# ---------------------------------------------------------------- policy
+def test_guard_policy_default_off_and_scoping(monkeypatch):
+    monkeypatch.delenv("REPRO_GUARD", raising=False)
+    del guards._POLICY_STACK[:]
+    assert not guards.guard_policy().enabled
+    with guards.guarded(trip_limit=5):
+        p = guards.guard_policy()
+        assert p.enabled and p.trip_limit == 5
+        with guards.guarded(enabled=False):
+            assert not guards.guard_policy().enabled
+        assert guards.guard_policy().enabled
+    assert not guards.guard_policy().enabled
+    monkeypatch.setenv("REPRO_GUARD", "1")
+    assert guards.guard_policy().enabled
+    guards.set_guard_policy(False)
+    assert not guards.guard_policy().enabled   # set_ overrides the env
+    del guards._POLICY_STACK[:]
+
+
+def test_check_finite_concrete_integer_and_tracer():
+    assert guards.check_finite(jnp.ones((2, 2))) is True
+    assert guards.check_finite(jnp.asarray([1.0, jnp.inf])) is False
+    assert guards.check_finite(jnp.asarray([1.0, jnp.nan])) is False
+    assert guards.check_finite(jnp.ones((3,), jnp.int32)) is True
+
+    seen = []
+
+    @jax.jit
+    def f(v):
+        seen.append(guards.check_finite(v))
+        return v
+
+    f(jnp.ones(3))
+    assert seen == [None]                  # tracers are unknowable: skip
+
+
+# ------------------------------------------------------- circuit breaker
+def test_route_health_records_and_demotes():
+    h = routing.RouteHealth()
+    key = routing.health_key("ffn", (1, 4, 8, 4), jnp.float32)
+    assert key == "ffn|1x4x8x4|float32"
+    assert not h.record_trip(key, limit=3)       # trip 1
+    assert not h.record_trip(key, limit=3)       # trip 2
+    assert h.record_trip(key, limit=3)           # trip 3: demoted (True once)
+    assert not h.record_trip(key, limit=3)       # already demoted: no re-log
+    assert h.is_demoted(key)
+    assert h.trips[key] == 4
+    assert "3 trips" in h.demotions[key]
+    s = h.summary()
+    assert key in s["demotions"] and s["trips"][key] == 4
+
+
+def test_square_route_trips_and_demotes_with_finite_fallback():
+    """The end-to-end pipeline: each guarded call whose square output
+    goes non-finite serves the standard fallback (finite!), and after
+    trip_limit trips the site is demoted pre-dispatch -- all of it
+    visible in the counting audit."""
+    x, y = _cancelling_operands()
+    ref = jnp.einsum("mk,kn->mn", x, y)
+    assert bool(jnp.isfinite(ref).all())
+    # unguarded: the square route really does saturate on this input
+    raw = fs_einsum("mk,kn->mn", x, y, mode="square_exact")
+    assert not bool(jnp.isfinite(raw).all())
+
+    key = routing.health_key("trip_site", (1, 4, 8, 4), jnp.float32)
+    with guards.guarded(trip_limit=3):
+        with counting.track_contractions() as ctr:
+            for i in range(5):
+                out = fs_einsum("mk,kn->mn", x, y, mode="square_exact",
+                                site="trip_site")
+                # every guarded call returns the FINITE fallback
+                assert bool(jnp.isfinite(out).all()), f"call {i}"
+                np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+    h = routing.route_health()
+    assert h.is_demoted(key)
+    assert h.trips[key] == 3               # demoted calls skip the check
+    s = ctr.summary()
+    assert s["demoted_sites"] == ["trip_site"]
+    assert s["fraction_demoted"] == 1.0    # every call served standard
+    assert s["fraction_square"] == 0.0
+    assert s["by_site"]["trip_site"]["demoted_mults"] > 0
+
+
+def test_guard_disabled_leaves_square_route_alone():
+    x, y = _cancelling_operands()
+    with counting.track_contractions() as ctr:
+        out = fs_einsum("mk,kn->mn", x, y, mode="square_exact",
+                        site="unguarded")
+    assert not bool(jnp.isfinite(out).all())     # saturates, unchecked
+    assert routing.route_health().summary()["trips"] == {}
+    assert ctr.summary()["fraction_square"] == 1.0
+    assert ctr.summary()["fraction_demoted"] == 0.0
+
+
+def test_guard_passes_finite_square_outputs_untouched():
+    """Healthy inputs under guard: no trips, square route keeps serving,
+    audit shows full square fraction."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))
+    with guards.guarded():
+        with counting.track_contractions() as ctr:
+            out = fs_einsum("mk,kn->mn", x, y, mode="square_exact",
+                            site="healthy")
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.einsum("mk,kn->mn", x, y)),
+                               rtol=1e-4, atol=1e-5)
+    assert routing.route_health().summary()["trips"] == {}
+    assert ctr.summary()["fraction_square"] == 1.0
+
+
+def test_demotion_is_per_site_shape_dtype_key():
+    """Tripping one site must not demote another site (or another shape
+    at the same site)."""
+    x, y = _cancelling_operands()
+    rng = np.random.default_rng(1)
+    gx = jnp.asarray(rng.normal(size=(4, 8)).astype(np.float32))
+    gy = jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))
+    with guards.guarded(trip_limit=1):
+        fs_einsum("mk,kn->mn", x, y, mode="square_exact", site="bad")
+        out = fs_einsum("mk,kn->mn", gx, gy, mode="square_exact",
+                        site="good")
+    h = routing.route_health()
+    assert h.is_demoted(routing.health_key("bad", (1, 4, 8, 4),
+                                           jnp.float32))
+    assert not h.is_demoted(routing.health_key("good", (1, 4, 8, 4),
+                                               jnp.float32))
+    assert bool(jnp.isfinite(out).all())
+
+
+def test_guard_skips_check_under_jit_trace():
+    """Inside jit the outputs are tracers: the guard must neither trip
+    nor alter results (check_finite -> None -> skip)."""
+    x, y = _cancelling_operands()
+
+    @jax.jit
+    def f(a, b):
+        return fs_einsum("mk,kn->mn", a, b, mode="square_exact",
+                         site="jitted")
+
+    with guards.guarded(trip_limit=1):
+        out = f(x, y)
+    assert not bool(jnp.isfinite(out).all())     # unguarded behaviour
+    assert routing.route_health().summary()["trips"] == {}

@@ -1,0 +1,152 @@
+"""Stateful chaos test for the paged-cache bookkeeping (hypothesis).
+
+A RuleBasedStateMachine drives BlockAllocator + BlockTables through
+arbitrary interleavings of the operations the engine performs -- grow
+(ensure), release, preempt (release + later re-admission), plus direct
+alloc/free traffic from a rogue co-tenant -- and checks after every step
+that the pool can never be corrupted:
+
+- conservation: free + owned-by-anyone == num_blocks - 1, always;
+- no aliasing: a block is owned by at most one slot (and never by both a
+  slot and the free list);
+- the null block is never granted and never freed;
+- double-free and foreign-free raise instead of corrupting the free list;
+- a released slot's table rows are all NULL and its pos_pool positions
+  are back at the EMPTY sentinel (no stale positions for the next owner).
+
+hypothesis is an optional dev dependency; this module skips without it.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis.stateful import (RuleBasedStateMachine, invariant, rule)
+
+from repro.models.attention import EMPTY_POS
+from repro.serve import paged
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+NUM_BLOCKS = 17       # deliberately tight: exhaustion paths get exercised
+BLOCK_SIZE = 4
+MAX_SLOTS = 4
+BLOCKS_PER_SEQ = 5
+
+
+class PagedChaos(RuleBasedStateMachine):
+    def __init__(self):
+        super().__init__()
+        self.alloc = paged.BlockAllocator(NUM_BLOCKS, BLOCK_SIZE)
+        self.tables = paged.BlockTables(self.alloc, MAX_SLOTS,
+                                        BLOCKS_PER_SEQ)
+        self.pos_pool = paged.empty_pos_pool(NUM_BLOCKS, BLOCK_SIZE)
+        self.loose = []               # blocks we alloc'd outside the tables
+        self.slot_tokens = [0] * MAX_SLOTS
+
+    # ------------------------------------------------------------- rules
+    @rule(slot=st.integers(0, MAX_SLOTS - 1),
+          n_tokens=st.integers(1, BLOCKS_PER_SEQ * BLOCK_SIZE))
+    def grow(self, slot, n_tokens):
+        before = self.tables.owned(slot)
+        ok = self.tables.ensure(slot, n_tokens)
+        if ok:
+            self.slot_tokens[slot] = max(self.slot_tokens[slot], n_tokens)
+            # growth is monotone and exactly covers the ask
+            owned = self.tables.owned(slot)
+            assert owned[:len(before)] == before
+            assert len(owned) >= self.alloc.blocks_for(n_tokens)
+            # simulate the engine writing positions into the new coverage
+            idx = self.tables.reset_slots_index(owned)
+            self.pos_pool[idx[:n_tokens]] = np.arange(n_tokens)
+        else:
+            # a refused grow leaves the slot untouched
+            assert self.tables.owned(slot) == before
+
+    @rule(slot=st.integers(0, MAX_SLOTS - 1))
+    def release(self, slot):
+        owned = self.tables.owned(slot)
+        blocks = self.tables.release(slot)
+        assert blocks == owned
+        # the engine's _reset_pos: recycled blocks drop their positions
+        if blocks:
+            idx = self.tables.reset_slots_index(blocks)
+            self.pos_pool[idx] = EMPTY_POS
+        self.slot_tokens[slot] = 0
+        assert self.tables.owned(slot) == []
+        assert (self.tables.table[slot] == paged.NULL_BLOCK).all()
+
+    @rule(slot=st.integers(0, MAX_SLOTS - 1),
+          n_tokens=st.integers(1, BLOCKS_PER_SEQ * BLOCK_SIZE))
+    def preempt_and_readmit(self, slot, n_tokens):
+        """The engine's preemption shape: release then re-ensure."""
+        self.release(slot)
+        self.grow(slot, n_tokens)
+
+    @rule(n=st.integers(1, 4))
+    def co_tenant_alloc(self, n):
+        got = self.alloc.alloc(n)
+        if got is not None:
+            assert len(got) == n
+            assert paged.NULL_BLOCK not in got
+            self.loose.extend(got)
+
+    @rule()
+    def co_tenant_free(self):
+        if self.loose:
+            self.alloc.free([self.loose.pop()])
+
+    @rule()
+    def double_free_raises(self):
+        if self.loose:
+            b = self.loose[-1]
+            self.alloc.free([self.loose.pop()])
+            with pytest.raises(ValueError, match="double/invalid"):
+                self.alloc.free([b])
+
+    @rule()
+    def null_block_free_raises(self):
+        with pytest.raises(ValueError, match="null block"):
+            self.alloc.free([paged.NULL_BLOCK])
+
+    @rule(slot=st.integers(0, MAX_SLOTS - 1))
+    def oversize_grow_raises_without_alloc(self, slot):
+        free_before = self.alloc.free_blocks
+        owned_before = self.tables.owned(slot)
+        with pytest.raises(ValueError, match="ceiling"):
+            self.tables.ensure(slot, BLOCKS_PER_SEQ * BLOCK_SIZE + 1)
+        assert self.alloc.free_blocks == free_before
+        assert self.tables.owned(slot) == owned_before
+
+    # -------------------------------------------------------- invariants
+    @invariant()
+    def conservation_and_no_aliasing(self):
+        owned = [b for s in range(MAX_SLOTS) for b in self.tables.owned(s)]
+        everything = owned + self.loose + self.alloc._free
+        # every allocatable block is in exactly one place
+        assert sorted(everything) == list(range(1, NUM_BLOCKS))
+        assert self.alloc.free_blocks + len(owned) + len(self.loose) \
+            == NUM_BLOCKS - 1
+        assert 0.0 <= self.alloc.utilization <= 1.0
+
+    @invariant()
+    def tables_consistent_with_ownership(self):
+        for s in range(MAX_SLOTS):
+            owned = self.tables.owned(s)
+            row = self.tables.table[s]
+            assert list(row[:len(owned)]) == owned
+            assert (row[len(owned):] == paged.NULL_BLOCK).all()
+
+    @invariant()
+    def free_blocks_hold_no_stale_positions(self):
+        """Any block on the free list must be position-clean: if it were
+        recycled to a new slot right now, no stale position could attend."""
+        if self.alloc._free:
+            idx = self.tables.reset_slots_index(self.alloc._free)
+            assert (self.pos_pool[idx] == EMPTY_POS).all()
+
+
+TestPagedChaos = PagedChaos.TestCase

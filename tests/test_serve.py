@@ -3,6 +3,7 @@ greedy determinism vs a manual decode loop."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.models.lm import build_model
@@ -67,3 +68,17 @@ def test_server_slot_recycling_more_requests_than_slots():
                                             max_new_tokens=3))
     results = srv.run(reqs)
     assert len(results) == 5
+
+
+def test_server_duplicate_rid_raises():
+    """Results are keyed by rid, so a duplicate would silently drop one
+    request's output -- refuse it up front (same contract as the paged
+    engine's submit())."""
+    cfg, model, params = _model()
+    rng = np.random.default_rng(3)
+    reqs = [Request(4, rng.integers(0, cfg.vocab, 5, dtype=np.int32)),
+            Request(4, rng.integers(0, cfg.vocab, 6, dtype=np.int32))]
+    srv = Server(model, params, ServeConfig(max_batch=2, cache_len=32,
+                                            max_new_tokens=3))
+    with pytest.raises(ValueError, match="duplicate request ids"):
+        srv.run(reqs)

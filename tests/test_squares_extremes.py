@@ -1,0 +1,146 @@
+"""Extreme-magnitude coverage for the widen-before-square path
+(core/squares.py), pinning WHERE ``(a+b)^2`` saturates per dtype.
+
+The square route buys one multiply per PM term at the cost of a hotter
+intermediate: ``(a+b)^2`` peaks at twice the operand magnitude squared,
+4x the product ``a*b``.  The per-dtype boundaries these tests pin:
+
+==========  ==============  ================================================
+operands    square dtype    saturation boundary
+==========  ==============  ================================================
+f32         f32             ``|a+b| > sqrt(f32_max) ~ 1.844e19`` -> inf,
+                            while ``a*b`` (up to ``~3.4e38``) may be finite:
+                            the square route fails FIRST.
+bf16        f32 (widened)   same boundary, trivially reachable: bf16 spans
+                            to ``~3.39e38``, so half the exponent range
+                            squares to inf.
+f16         f32 (widened)   a single PM square can NEVER saturate --
+                            ``(2 * 65504)^2 ~ 1.72e10``; only accumulation
+                            over K > ~2e28 terms could, which no real
+                            contraction reaches.
+int8        int32 (widened) exact by construction: ``(127+127)^2 = 64516``
+                            with ``2^31 / 64516 ~ 33k``-deep accumulation
+                            headroom before int32 wraps.
+==========  ==============  ================================================
+
+The f32/bf16 rows are the reason :mod:`repro.core.guards` exists: the
+square route has a failure regime the standard route does not, so
+guarded serving demotes a tripping site instead of emitting inf/nan.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import squares as sq
+from repro.core.einsum import fs_einsum
+
+F32_MAX = float(np.finfo(np.float32).max)          # ~3.4028e38
+PM_BOUNDARY = float(np.sqrt(F32_MAX))              # ~1.8447e19
+F16_MAX = float(np.finfo(np.float16).max)          # 65504
+
+
+# ----------------------------------------------------------------- f32
+def test_f32_pm_saturates_at_sqrt_f32max():
+    below = jnp.float32(0.9e19)        # a+b = 1.8e19 < boundary
+    above = jnp.float32(1.0e19)        # a+b = 2.0e19 > boundary
+    assert bool(jnp.isfinite(sq.pm(below, below)))
+    assert not bool(jnp.isfinite(sq.pm(above, above)))
+    # ...while the plain product at the same magnitudes is still finite:
+    # the square route fails strictly before the multiplier route
+    assert bool(jnp.isfinite(above * above))       # 1e38 < f32_max
+    # pm_neg has the mirrored regime (a - b with opposite signs)
+    assert not bool(jnp.isfinite(sq.pm_neg(above, -above)))
+    assert bool(jnp.isfinite(sq.pm_neg(above, above)))     # (a-b)^2 = 0
+
+
+def test_f32_pm_recovers_product_below_boundary():
+    a = jnp.float32(1.2e18)
+    b = jnp.float32(3.4e18)
+    two_ab = sq.pm(a, b) - sq.square(a) - sq.square(b)
+    np.testing.assert_allclose(float(sq.halve(two_ab)), float(a * b),
+                               rtol=1e-6)
+
+
+# ----------------------------------------------------------------- bf16
+def test_bf16_widens_to_f32_and_reaches_the_boundary():
+    """bf16 spans to ~3.39e38, so operands half-way up its exponent range
+    already saturate the widened f32 square -- the easiest dtype to trip
+    the guard with."""
+    a = jnp.asarray(1e19, jnp.bfloat16)
+    assert sq.widen_for_sum(a).dtype == jnp.float32
+    assert sq.accum_dtype(jnp.bfloat16) == jnp.float32
+    assert not bool(jnp.isfinite(sq.pm(a, a)))     # (2e19)^2 > f32_max
+    w = sq.widen_for_sum(a)
+    assert bool(jnp.isfinite(w * w))               # product still finite
+    safe = jnp.asarray(9e18, jnp.bfloat16)
+    assert bool(jnp.isfinite(sq.pm(safe, safe)))
+
+
+def test_bf16_matmul_square_route_saturates_where_standard_survives():
+    """End-to-end bf16 contraction at the boundary: standard finite
+    (products cancel), square route inf/nan -- the exact situation the
+    route-health breaker demotes."""
+    k = 8
+    x = np.full((4, k), 1e19, np.float32)
+    x[:, 1::2] *= -1.0
+    xb = jnp.asarray(x, jnp.bfloat16)
+    yb = jnp.asarray(np.full((k, 4), 1e19, np.float32), jnp.bfloat16)
+    std = fs_einsum("mk,kn->mn", xb, yb, mode="standard")
+    exact = fs_einsum("mk,kn->mn", xb, yb, mode="square_exact")
+    assert bool(jnp.isfinite(std).all())
+    assert not bool(jnp.isfinite(exact).all())
+
+
+# ----------------------------------------------------------------- f16
+def test_f16_single_square_can_never_saturate():
+    """Worst-case f16 operands widen to f32 where the PM square is tiny
+    relative to f32_max: no single square can saturate, ever."""
+    a = jnp.asarray(F16_MAX, jnp.float16)
+    assert sq.widen_for_sum(a).dtype == jnp.float32
+    worst = sq.pm(a, a)                            # (131008)^2 ~ 1.72e10
+    assert bool(jnp.isfinite(worst))
+    assert float(worst) < 2e10
+    # only accumulation could overflow, at a depth beyond any real K
+    assert F32_MAX / float(worst) > 1e28
+
+
+def test_f16_extreme_matmul_matches_standard():
+    """Max-magnitude f16 operands through a deep contraction: the square
+    route stays finite and matches the widened-multiplier reference."""
+    k = 512
+    rng = np.random.default_rng(0)
+    signs = rng.choice([-1.0, 1.0], size=(4, k)).astype(np.float32)
+    xh = jnp.asarray(signs * F16_MAX, jnp.float16)
+    yh = jnp.asarray(np.full((k, 4), F16_MAX, np.float16))
+    exact = fs_einsum("mk,kn->mn", xh, yh, mode="square_exact")
+    ref = jnp.einsum("mk,kn->mn", xh.astype(jnp.float32),
+                     yh.astype(jnp.float32))
+    assert bool(jnp.isfinite(exact).all())
+    np.testing.assert_allclose(np.asarray(exact, np.float32),
+                               np.asarray(ref), rtol=1e-4)
+
+
+# ----------------------------------------------------------------- int8
+def test_int8_pm_is_exact_at_full_magnitude():
+    a = jnp.asarray(127, jnp.int8)
+    b = jnp.asarray(-128, jnp.int8)
+    assert sq.widen_for_sum(a).dtype == jnp.int32
+    assert int(sq.pm(a, a)) == 254 * 254           # 64516, fits easily
+    two_ab = sq.pm(a, b) - sq.square(a) - sq.square(b)
+    assert int(sq.halve(two_ab)) == 127 * -128     # exact, no rounding
+    # headroom: ~33k full-magnitude accumulations before int32 wraps
+    assert (2**31) // (254 * 254) > 33_000
+
+
+def test_int8_extreme_matmul_is_exact():
+    """Full-magnitude int8 through a K=1024 contraction: bit-exact
+    against the int32 multiplier reference (paper's exactness claim for
+    integer arithmetic, at the dtype's extremes)."""
+    k = 1024
+    rng = np.random.default_rng(1)
+    x = rng.choice(np.asarray([-128, 127], np.int8), size=(4, k))
+    y = rng.choice(np.asarray([-128, 127], np.int8), size=(k, 4))
+    exact = fs_einsum("mk,kn->mn", jnp.asarray(x), jnp.asarray(y),
+                      mode="square_exact")
+    ref = np.asarray(x, np.int64) @ np.asarray(y, np.int64)
+    assert int(np.abs(ref).max()) < 2**31          # inside the headroom
+    np.testing.assert_array_equal(np.asarray(exact, np.int64), ref)
