@@ -134,8 +134,11 @@ def check_regressions(payload, committed, tol=None):
 
     The serving-engine rows are gated separately by
     :func:`benchmarks.serving.check_serving` (prepared-square tokens/s
-    >= 1.0x raw-square, square-routed fraction >= 0.9, and the guarded
-    engine's resilience overhead within tolerance of prepared).
+    >= 1.0x raw-square, square-routed fraction >= 0.9, the guarded
+    engine's resilience overhead within tolerance of prepared, the
+    paged-attn kernel route within tolerance of gather with identical
+    greedy tokens, and SWA window eviction strictly reducing
+    peak_blocks_used).
     """
     if tol is None:
         tol = float(os.environ.get("BENCH_CHECK_TOL", "0.0"))
@@ -182,8 +185,10 @@ def main(argv=None) -> None:
                    + kernel_timing.lm_forward_rows())
     # Serving rows ride directly after the kernel timings: their gated
     # quantity is an interleaved same-process ratio (prepared vs raw
-    # tokens/s), so later-phase throttling cannot flip it.
-    serving_rows = serving.serving_rows()
+    # tokens/s), so later-phase throttling cannot flip it.  The jitted
+    # long-context rows (paged-attn kernel vs gather, SWA eviction
+    # footprint) follow -- same-process interleaved ratios as well.
+    serving_rows = serving.serving_rows() + serving.long_context_rows()
 
     # --- Paper claim 1: real matmul, eq (6): ratio -> 1 ---
     rows = ratios.real_matmul_ratio()
@@ -228,7 +233,11 @@ def main(argv=None) -> None:
               + (f",speedup_vs_raw={row['speedup_vs_raw']:.2f}"
                  if "speedup_vs_raw" in row else "")
               + (f",speedup_vs_prepared={row['speedup_vs_prepared']:.2f}"
-                 if "speedup_vs_prepared" in row else ""))
+                 if "speedup_vs_prepared" in row else "")
+              + (f",speedup_vs_gather={row['speedup_vs_gather']:.2f}"
+                 if "speedup_vs_gather" in row else "")
+              + (f",peak_blocks={row['peak_blocks_used']}"
+                 if row["name"].startswith("serving_engine_swa") else ""))
 
     payload = build_bench_payload(timing_rows)
     serving_payload = serving.build_serving_payload(serving_rows)

@@ -27,6 +27,12 @@ echo "== chaos suite (fixed-seed fault injection + guard rails) =="
 REPRO_CHAOS_SEEDS="${REPRO_CHAOS_SEEDS:-0,1,2}" python -m pytest -q \
   tests/test_faults.py tests/test_guards.py tests/test_paged_chaos.py
 
+echo "== paged-attention kernel equivalence + windowed eviction =="
+# the serving-read contract: kernel route greedy-token-identical to the
+# gather route (MHA/GQA/SWA/MoE), SWA eviction logit-invisible with the
+# footprint capped at the window -- pinned explicitly, not just via tier-1
+python -m pytest -q tests/test_paged_attn_kernel.py tests/test_paged_cache.py
+
 echo "== doctests (public-API examples) =="
 python -m pytest -q --doctest-modules \
   src/repro/core/einsum.py src/repro/core/counting.py \

@@ -41,6 +41,7 @@ CONTRACTION_SITES = (
     "recurrent_gates",  # xLSTM / RG-LRU gate projections
     "recurrent_mix",    # recurrent state-mix contractions (scan bodies)
     "recurrent_proj",   # recurrent block dense projections
+    "attn_paged",       # fused paged-attention read (serving decode path)
 )
 
 

@@ -30,7 +30,7 @@ __all__ = ["ArithCost", "mac_cost", "pm_mac_cost", "complex_mac_cost",
            "tensor_core_cost", "savings_table",
            "TileCost", "pm_tile_vmem_bytes", "pm_tile_vpu_ops",
            "pm_grid_cost", "conv2d_window_elems", "conv2d_patch_bytes",
-           "conv2d_grid_cost"]
+           "conv2d_grid_cost", "paged_attn_gather_bytes"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -225,6 +225,16 @@ def conv2d_patch_bytes(oh: int, ow: int, kh: int, kw: int, cin: int,
     kernel exists to avoid (paper §5.1).  The route planner keys the
     fused-vs-im2col choice on whether this stays cache-resident."""
     return batch * oh * ow * cin * kh * kw * itemsize
+
+
+def paged_attn_gather_bytes(t: int, kv_heads: int, hd: int, *,
+                            batch: int = 1, itemsize: int = 4) -> int:
+    """Bytes the dense paged read moves to materialize the gathered
+    ``(B, T, KV, hd)`` K and V windows (read from the pool + write of the
+    gathered copy, both tensors) -- the traffic the fused block-streaming
+    kernel avoids.  Scales with the pool-length ceiling ``t``, not live
+    context, which is why the gather loses at long ``t``."""
+    return 2 * 2 * batch * t * kv_heads * hd * itemsize
 
 
 def conv2d_grid_cost(oh: int, ow: int, kh: int, kw: int, cin: int, cout: int,

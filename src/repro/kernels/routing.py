@@ -28,6 +28,14 @@ resolved once per (shape, dtype) at dispatch time:
                    when the patch matrix stays cache-resident and the
                    flattened K axis is tiny).
 
+``paged_attn`` routes
+    ``kernel``  -- the fused block-table-streaming Pallas kernel
+                   (:mod:`repro.kernels.sq_paged_attn`): no gathered
+                   window, traffic scales with the table walk;
+    ``gather``  -- the dense ``jnp.take`` read path (wins for short
+                   pools, where one gather beats a many-step grid, and
+                   is the only route for integer-logits paths).
+
 Overrides (most specific wins):
 
 1. ``REPRO_ROUTE`` -- force a route globally (``REPRO_ROUTE=fused``) or
@@ -55,9 +63,12 @@ from repro.core import squares as sq
 from repro.kernels import tuning
 
 __all__ = ["Route", "select_route", "select_matmul_route",
-           "select_conv2d_route", "set_route_override", "route_key",
-           "MATMUL_ROUTES", "CONV2D_ROUTES", "VIRTUAL_FLOOR_MULTS",
-           "FOLD_STEP_LANE_OPS", "IM2COL_PATCH_BYTES_MAX", "IM2COL_K_MAX",
+           "select_conv2d_route", "select_paged_attn_route",
+           "set_route_override", "route_key",
+           "MATMUL_ROUTES", "CONV2D_ROUTES", "PAGED_ATTN_ROUTES",
+           "VIRTUAL_FLOOR_MULTS", "FOLD_STEP_LANE_OPS",
+           "IM2COL_PATCH_BYTES_MAX", "IM2COL_K_MAX",
+           "PAGED_KERNEL_MAX_S", "PAGED_KERNEL_MIN_T",
            "RouteHealth", "route_health", "reset_route_health",
            "health_key"]
 
@@ -65,6 +76,10 @@ logger = logging.getLogger("repro.routing")
 
 MATMUL_ROUTES = ("kernel", "batched", "fold", "virtual")
 CONV2D_ROUTES = ("fused", "im2col")
+PAGED_ATTN_ROUTES = ("kernel", "gather")
+
+_KIND_ROUTES = {"matmul": MATMUL_ROUTES, "conv2d": CONV2D_ROUTES,
+                "paged_attn": PAGED_ATTN_ROUTES}
 
 # Contraction volume (B*M*K*N scalar multiplies) below which one
 # pallas_call's fixed overhead (grid setup + a mandatory grid step,
@@ -87,6 +102,18 @@ FOLD_MIN_BATCH = 4
 IM2COL_PATCH_BYTES_MAX = tuning.CACHE_BUDGET
 IM2COL_K_MAX = tuning.LANE
 
+# The fused paged-attention kernel streams one pool block per grid step;
+# its win condition is a long table walk amortizing a small query tile.
+# Decode steps carry a handful of query rows (S <= chunk of new tokens,
+# usually 1); above that the score tile rematerializes per block and the
+# dense gather's single big contraction wins.
+PAGED_KERNEL_MAX_S = 8
+# Below this pool-length ceiling the gathered (B, T, KV, hd) window is
+# small enough that one jnp.take + one einsum beats nb sequential grid
+# steps' fixed overhead (same ~4096-lane-op step charge as the GEMM
+# routes).  64 tokens ~ the measured interpret-mode crossover ballpark.
+PAGED_KERNEL_MIN_T = 64
+
 
 @dataclasses.dataclass(frozen=True)
 class Route:
@@ -98,16 +125,18 @@ class Route:
         return self.name
 
 
-_ALL_ROUTES = frozenset(MATMUL_ROUTES) | frozenset(CONV2D_ROUTES)
+_ALL_ROUTES = frozenset().union(*_KIND_ROUTES.values())
 
 
 def _env_route(kind: str, valid) -> Optional[str]:
     """Parse ``REPRO_ROUTE`` for ``kind``.
 
-    A bare route name applies to every kind it is valid for (route names
-    are disjoint across kinds, so ``REPRO_ROUTE=fused`` pins conv2d and
-    leaves matmul on the planner); a ``kind=route`` comma list scopes
-    explicitly; ``auto`` defers.  Unknown route names raise."""
+    A bare route name applies to every kind it is valid for -- most
+    names pin exactly one kind (``REPRO_ROUTE=fused`` pins conv2d and
+    leaves matmul on the planner), but ``kernel`` is shared by matmul
+    and paged_attn and a bare pin applies to both; use a ``kind=route``
+    comma list to scope explicitly.  ``auto`` defers.  Unknown route
+    names raise."""
     v = os.environ.get("REPRO_ROUTE", "").strip()
     if not v or v == "auto":
         return None
@@ -152,7 +181,10 @@ def set_route_override(kind: str, sizes: dict, route: str,
     """Pin a route for an exact shape in the tuning cache (the empirical
     counterpart of the cost-model rules; consulted by
     :func:`select_route` whenever autotune is enabled)."""
-    valid = MATMUL_ROUTES if kind == "matmul" else CONV2D_ROUTES
+    valid = _KIND_ROUTES.get(kind)
+    if valid is None:
+        raise ValueError(f"unknown route kind {kind!r}; expected one of "
+                         f"{tuple(_KIND_ROUTES)}")
     if route not in valid:
         raise ValueError(f"unknown {kind} route {route!r}; expected one of "
                          f"{valid}")
@@ -212,6 +244,40 @@ def select_conv2d_route(oh: int, ow: int, kh: int, kw: int, cin: int,
                                f"K volume {kvol} below one lane group")
     return Route("fused", f"patch matrix {patch}B / K volume {kvol} in the "
                           f"window-streaming regime")
+
+
+def select_paged_attn_route(s: int, t: int, *, batch: int = 1,
+                            kv_heads: int = 1, group: int = 1,
+                            hd: int = 64, dtype=jnp.float32) -> Route:
+    """Resolve the paged-KV attention read route of a decode/chunk step.
+
+    ``s`` is the query-tile length (new tokens this step), ``t`` the
+    logical pool length the block table spans (``blocks_per_seq *
+    block_size``).  Integer dtypes always gather (the fused kernel's
+    softmax path is float-only)."""
+    if not jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        return Route("gather", f"{jnp.dtype(dtype).name} operands: the "
+                               f"fused softmax kernel is float-only")
+    env = _env_route("paged_attn", PAGED_ATTN_ROUTES)
+    if env is not None:
+        return Route(env, "REPRO_ROUTE override")
+    sizes = {"b": batch, "s": s, "t": t, "kv": kv_heads, "g": group,
+             "hd": hd}
+    cached = _cached_route("paged_attn", sizes, sq.accum_dtype(dtype),
+                           PAGED_ATTN_ROUTES)
+    if cached is not None:
+        return cached
+    gbytes = cm.paged_attn_gather_bytes(t, kv_heads, hd, batch=batch)
+    if s > PAGED_KERNEL_MAX_S:
+        return Route("gather", f"query tile {s} > {PAGED_KERNEL_MAX_S}: "
+                               f"per-block rematerialization outweighs "
+                               f"the {gbytes}B gather")
+    if t < PAGED_KERNEL_MIN_T:
+        return Route("gather", f"pool length {t} < {PAGED_KERNEL_MIN_T}: "
+                               f"gathered window ({gbytes}B) too small to "
+                               f"amortize the block-walk grid")
+    return Route("kernel", f"long table walk (T={t}, S={s}) streams past "
+                           f"the {gbytes}B dense gather")
 
 
 # --------------------------------------------------------------------------
@@ -281,8 +347,9 @@ def reset_route_health() -> None:
 
 
 def select_route(kind: str, sizes: dict, *, dtype=jnp.float32) -> Route:
-    """Generic entry point: ``kind`` is ``"matmul"`` or ``"conv2d"``,
-    ``sizes`` the corresponding geometry dict (see the typed helpers)."""
+    """Generic entry point: ``kind`` is ``"matmul"``, ``"conv2d"`` or
+    ``"paged_attn"``, ``sizes`` the corresponding geometry dict (see the
+    typed helpers)."""
     if kind == "matmul":
         return select_matmul_route(sizes["m"], sizes["n"], sizes["k"],
                                    batch=sizes.get("b", 1), dtype=dtype)
@@ -290,5 +357,10 @@ def select_route(kind: str, sizes: dict, *, dtype=jnp.float32) -> Route:
         return select_conv2d_route(sizes["oh"], sizes["ow"], sizes["kh"],
                                    sizes["kw"], sizes["ci"], sizes["co"],
                                    batch=sizes.get("b", 1), dtype=dtype)
-    raise ValueError(f"unknown route kind {kind!r}; expected 'matmul' or "
-                     f"'conv2d'")
+    if kind == "paged_attn":
+        return select_paged_attn_route(
+            sizes["s"], sizes["t"], batch=sizes.get("b", 1),
+            kv_heads=sizes.get("kv", 1), group=sizes.get("g", 1),
+            hd=sizes.get("hd", 64), dtype=dtype)
+    raise ValueError(f"unknown route kind {kind!r}; expected one of "
+                     f"{tuple(_KIND_ROUTES)}")

@@ -43,9 +43,11 @@ import jax.numpy as jnp
 from repro.core import cost_model as cm
 from repro.core import squares as sq
 
-__all__ = ["TilePlan", "Conv2DPlan", "plan_matmul", "plan_conv",
-           "plan_conv2d", "candidate_plans", "candidate_conv2d_plans",
-           "autotune_matmul", "autotune_conv2d", "load_cache", "save_cache",
+__all__ = ["TilePlan", "Conv2DPlan", "PagedAttnPlan", "plan_matmul",
+           "plan_conv", "plan_conv2d", "plan_paged_attn",
+           "candidate_plans", "candidate_conv2d_plans",
+           "autotune_matmul", "autotune_conv2d", "autotune_paged_attn",
+           "load_cache", "save_cache",
            "cache_path", "clear_cache", "autotune_enabled"]
 
 SUBLANE = 8            # f32 sublane granule (second-minor axis)
@@ -79,6 +81,21 @@ class TilePlan:
 
     def astuple(self):
         return (self.bm, self.bn, self.bk, self.kc)
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedAttnPlan:
+    """Chunk plan for the fused paged-attention kernel.
+
+    The kernel's tile geometry is fixed by the call (the query tile is
+    the whole (S*G, hd) panel, the K/V tile one pool block), so the only
+    free knobs are the PM chunk widths of its two contractions: ``kc_qk``
+    chunks the head_dim reduction of the score block, ``kc_pv`` the
+    block-token reduction of the PV block.  Each must divide its axis.
+    """
+    kc_qk: int
+    kc_pv: int
+    pm_layout: str = "mkn"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -308,8 +325,12 @@ def _warn_cache_miss(key: str) -> None:
     if key in _WARNED_MISS:
         return
     _WARNED_MISS.add(key)
-    fn = "autotune_conv2d" if key.startswith("sq_conv2d:") else \
-        "autotune_matmul"
+    if key.startswith("sq_conv2d:"):
+        fn = "autotune_conv2d"
+    elif key.startswith("sq_paged_attn:"):
+        fn = "autotune_paged_attn"
+    else:
+        fn = "autotune_matmul"
     warnings.warn(
         f"autotune cache miss for {key}; falling back to the cost-model "
         f"plan.  Run kernels.tuning.{fn} once for this shape to "
@@ -503,6 +524,54 @@ def plan_conv2d(h: int, w: int, kh: int, kw: int, cin: int, cout: int,
     return Conv2DPlan(pbh, pbw, pbk, pkc, pbf, pm_layout)
 
 
+def plan_paged_attn(rows: int, hd: int, block_size: int,
+                    dtype=jnp.float32, *, kc_qk: Optional[int] = None,
+                    kc_pv: Optional[int] = None,
+                    pm_layout: str = "mkn") -> PagedAttnPlan:
+    """Pick the (kc_qk, kc_pv, pm_layout) plan for a fused paged-attention
+    call.  ``rows`` is the score-tile row count (``S * G``: query tile x
+    GQA group), ``hd`` the head dim, ``block_size`` the pool block length.
+
+    Same precedence as :func:`plan_matmul`: explicit knobs > autotune
+    cache (keyed ``sq_paged_attn:<rows>x<hd>x<block_size>:<dtype>``,
+    served layout-matched) > the model pick.  The model pick mirrors the
+    matmul kc rule: "mnk" caps the chunk at :data:`KC_MNK_MAX` (the
+    measured interpret-mode sweet spot); "mkn" takes the full axis (the
+    rank-2 PM broadcast is widest-is-best on the VPU).  On a cache miss
+    the planner warns once per key; ``REPRO_AUTOTUNE=0`` silences.
+
+    Fully-specified plans skip cache and model (each kc is still clamped
+    to divide its axis)::
+
+        >>> from repro.kernels import tuning
+        >>> tuning.plan_paged_attn(8, 64, 16, kc_qk=32, kc_pv=16,
+        ...                        pm_layout="mnk")
+        PagedAttnPlan(kc_qk=32, kc_pv=16, pm_layout='mnk')
+    """
+    if kc_qk is not None and kc_pv is not None:
+        return PagedAttnPlan(_align_kc(kc_qk, hd), _align_kc(kc_pv,
+                                                             block_size),
+                             pm_layout)
+    use_cache = autotune_enabled()
+    key = _key("sq_paged_attn", rows, hd, block_size, dtype)
+    cached = load_cache().get(key) if use_cache else None
+    if cached is not None and kc_qk is None and kc_pv is None \
+            and str(cached.get("pm_layout", pm_layout)) == pm_layout:
+        return PagedAttnPlan(int(cached["kc_qk"]), int(cached["kc_pv"]),
+                             pm_layout)
+    if use_cache and cached is None and kc_qk is None and kc_pv is None:
+        _warn_cache_miss(key)
+    if pm_layout == "mnk":
+        base_qk = _align_kc(min(KC_MNK_MAX, hd), hd)
+        base_pv = _align_kc(min(KC_MNK_MAX, block_size), block_size)
+    else:
+        base_qk, base_pv = hd, block_size
+    return PagedAttnPlan(
+        _align_kc(kc_qk if kc_qk is not None else base_qk, hd),
+        _align_kc(kc_pv if kc_pv is not None else base_pv, block_size),
+        pm_layout)
+
+
 # --------------------------------------------------------------------------
 # Empirical autotune
 # --------------------------------------------------------------------------
@@ -605,6 +674,72 @@ def autotune_conv2d(shapes: Iterable[tuple[int, int, int, int, int, int]],
             "bh": best.bh, "bw": best.bw, "bk": best.bk, "kc": best.kc,
             "bf": best.bf, "pm_layout": best.pm_layout,
             "us_per_call": best_us,
+        }
+    save_cache(cache, path)
+    return cache
+
+
+def autotune_paged_attn(shapes: Iterable[tuple[int, int, int]],
+                        dtype=jnp.float32, *, nb: int = 8,
+                        pm_layouts: tuple[str, ...] = ("mnk", "mkn"),
+                        reps: int = 3, path: Optional[str] = None,
+                        verbose: bool = False) -> dict:
+    """Sweep the fused paged-attention kc knobs; cache winners.
+
+    ``shapes`` holds (rows, hd, block_size) tuples -- the score-tile
+    geometry :func:`plan_paged_attn` keys on.  Timing is self-contained
+    (a synthetic single-sequence pool walked over ``nb`` table entries;
+    the contraction work per grid step is shape-exact, so the kc ranking
+    transfers to any batch/table length).  Winners land in the same JSON
+    cache the planner consults.
+    """
+    import time as _time
+
+    import jax
+    import numpy as np
+
+    from repro.kernels.sq_paged_attn import sq_paged_attn
+
+    cache = dict(load_cache(path))
+    for (rows, hd, block_size) in shapes:
+        pool = nb * block_size
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.normal(size=(1, rows, 1, 1, hd)), dtype)
+        kp = jnp.asarray(rng.normal(size=(pool, 1, hd)), dtype)
+        vp = jnp.asarray(rng.normal(size=(pool, 1, hd)), dtype)
+        tables = jnp.arange(nb, dtype=jnp.int32)[None, :]
+        pos_pool = jnp.arange(pool, dtype=jnp.int32)
+        q_pos = jnp.full((1, rows), pool - 1, jnp.int32)
+        best, best_us = None, float("inf")
+        for layout in pm_layouts:
+            qk_cands = sorted({_align_kc(c, hd) for c in KC_CANDIDATES})
+            pv_cands = sorted({_align_kc(c, block_size)
+                               for c in KC_CANDIDATES})
+            if layout == "mnk":
+                qk_cands = [c for c in qk_cands if c <= KC_MNK_MAX] or [1]
+                pv_cands = [c for c in pv_cands if c <= KC_MNK_MAX] or [1]
+            for kc_qk in qk_cands:
+                for kc_pv in pv_cands:
+                    fn = jax.jit(functools.partial(
+                        sq_paged_attn, block_size=block_size,
+                        kc_qk=kc_qk, kc_pv=kc_pv, pm_layout=layout))
+                    fn(q, kp, vp, tables, pos_pool,
+                       q_pos).block_until_ready()      # compile
+                    t0 = _time.perf_counter()
+                    for _ in range(reps):
+                        fn(q, kp, vp, tables, pos_pool,
+                           q_pos).block_until_ready()
+                    us = (_time.perf_counter() - t0) / reps * 1e6
+                    if verbose:
+                        print(f"  sq_paged_attn {rows}x{hd}x{block_size} "
+                              f"kc_qk={kc_qk} kc_pv={kc_pv} {layout} "
+                              f"-> {us:.1f}us")
+                    if us < best_us:
+                        best = PagedAttnPlan(kc_qk, kc_pv, layout)
+                        best_us = us
+        cache[_key("sq_paged_attn", rows, hd, block_size, dtype)] = {
+            "kc_qk": best.kc_qk, "kc_pv": best.kc_pv,
+            "pm_layout": best.pm_layout, "us_per_call": best_us,
         }
     save_cache(cache, path)
     return cache

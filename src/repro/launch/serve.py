@@ -12,7 +12,8 @@ fair-square datapath:
 
 ``--route`` pins the square_pallas execution route for the whole run
 (sets ``REPRO_ROUTE``; see kernels/routing.py), e.g. ``--route
-matmul=fold`` or ``--route virtual``.
+matmul=fold``, ``--route paged_attn=gather`` (force the dense
+paged-attention read), or ``--route virtual``.
 """
 from __future__ import annotations
 

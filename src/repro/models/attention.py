@@ -26,12 +26,17 @@ from repro.layers.param import ParamSpec
 
 __all__ = ["attn_spec", "attn_forward", "attn_decode", "chunked_attention",
            "init_paged_kv_cache", "paged_slots", "paged_gather_indices",
-           "EMPTY_POS"]
+           "EMPTY_POS", "ATTEND_POS_LIMIT"]
 
 # Sentinel position of an unwritten / freed / padded physical cache slot.
-# Any value >= 2**29 is treated as "never attend" by the decode masks (the
-# dense cache uses the same convention for its ``pos`` buffer).
+# Any value >= ATTEND_POS_LIMIT is treated as "never attend" by the decode
+# masks (the dense cache uses the same convention for its ``pos`` buffer).
+# The limit is a named bound so the masks and the allocator bookkeeping
+# (serve/paged.py writes EMPTY_POS into recycled blocks) cannot drift:
+# every mask tests ``pos < ATTEND_POS_LIMIT`` and every sentinel write
+# uses EMPTY_POS, which sits safely above it.
 EMPTY_POS = 2 ** 30
+ATTEND_POS_LIMIT = 2 ** 29
 
 NEG_INF = -1e30
 
@@ -147,7 +152,7 @@ def chunked_attention(q, k, v, q_pos, kv_pos, *, causal: bool,
     qpos = jnp.pad(q_pos, (0, pad_q), constant_values=-1)
     kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
     vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
-    kpos = jnp.pad(kv_pos, (0, pad_k), constant_values=2**30)
+    kpos = jnp.pad(kv_pos, (0, pad_k), constant_values=EMPTY_POS)
     nq, nk = qp.shape[1] // cq, kp.shape[1] // ck
 
     scale = hd ** -0.5
@@ -167,7 +172,7 @@ def chunked_attention(q, k, v, q_pos, kv_pos, *, causal: bool,
             s = fs_einsum("bqkgh,bckh->bkgqc", qf, kc.astype(jnp.float32),
                           mode=mode, policy=policy, site="attn_scores")
             s = _softcap(s, softcap)
-            mask = kpc[None, :] < 2**29          # padded kv slots never attend
+            mask = kpc[None, :] < ATTEND_POS_LIMIT   # padded kv never attend
             if causal:
                 mask &= kpc[None, :] <= qpc[:, None]
             if window is not None:
@@ -329,7 +334,12 @@ def attn_decode(p, x, cache, pos, *, cfg, window: Optional[int] = None,
                 cache["pos"], jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32),
                 (0, slot))
         else:
-            slot = (pos % T) if window is not None else pos   # ring for SWA
+            # ring for SWA; the no-window clamp must match the lockstep
+            # branch -- an unclamped past-capacity pos silently scatters
+            # out of bounds (dropped update) instead of pinning to the
+            # last slot like dynamic_update_slice does
+            slot = (pos % T) if window is not None \
+                else jnp.minimum(pos, T - 1)
             bidx = jnp.arange(B)
             k = cache["k"].at[bidx, slot].set(k1[:, 0])
             v = cache["v"].at[bidx, slot].set(v1[:, 0])
@@ -392,15 +402,29 @@ def _attn_paged_step(p, x, cache, pos, *, cfg, window, mode, policy, paged):
 
     One code path serves both the engine's chunked prefill (S = chunk) and
     batched decode (S = 1): new K/V are scattered to their physical slots,
-    then every query attends over the GATHERED logical window of its own
-    block table with an absolute-position causal mask -- prior chunks and
-    intra-chunk causality fall out of the same ``kv_pos <= q_pos`` rule.
+    then every query attends over its own block table's logical window
+    with an absolute-position causal mask -- prior chunks and intra-chunk
+    causality fall out of the same ``kv_pos <= q_pos`` rule.
+
+    Two read routes, resolved by :mod:`repro.kernels.routing`
+    (``paged_attn: kernel|gather``) when the ``attn_paged`` site resolves
+    to ``square_pallas``:
+
+    - ``kernel`` -- the fused block-streaming Pallas kernel
+      (:func:`repro.kernels.sq_paged_attn.sq_paged_attn`): block tables
+      are indexed inside the grid and the gathered window is never
+      materialized.  Guarded like every square-routed contraction: a
+      non-finite output (eager only) trips the ``attn_paged`` route-health
+      breaker and recomputes via the gather path.
+    - ``gather`` -- ``paged_gather_indices`` + ``jnp.take`` materializes
+      the dense (B, T, KV, hd) window, then the usual einsum pair.
+
+    Both are token-identical; sliding windows mask by position distance
+    instead of ring-indexing on either route.
 
     ``paged``: dict(tables (B, nb), pos_pool (P,) -- already holding this
     chunk's positions (the LM scatters once per step, shared across
     layers), phys (B, S) precomputed by :func:`paged_slots`, block_size).
-    Sliding windows mask by position distance instead of ring-indexing, so
-    SWA archs run correctly (at full-length pool footprint).
     """
     B, S, D = x.shape
     hd = cfg.resolved_head_dim
@@ -421,24 +445,70 @@ def _attn_paged_step(p, x, cache, pos, *, cfg, window, mode, policy, paged):
     v_pool = cache["v"].at[phys].set(v1.reshape(B * S, KV, hd)
                                      .astype(cache["v"].dtype))
 
-    idx = paged_gather_indices(paged["tables"], paged["block_size"])
-    k = jnp.take(k_pool, idx, axis=0)                  # (B, T, KV, hd)
-    v = jnp.take(v_pool, idx, axis=0)
-    kv_pos = jnp.take(paged["pos_pool"], idx, axis=0)  # (B, T)
-
-    valid = (kv_pos[:, None, :] <= pos[:, :, None]) \
-        & (kv_pos[:, None, :] < 2 ** 29)               # (B, S, T)
-    if window is not None:
-        valid &= (pos[:, :, None] - kv_pos[:, None, :]) < window
-
+    T = paged["tables"].shape[1] * paged["block_size"]
     qf = qr.reshape(B, S, KV, G, hd).astype(jnp.float32) * hd ** -0.5
-    s = fs_einsum("bqkgh,btkh->bkgqt", qf, k.astype(jnp.float32),
-                  mode=mode, policy=policy, site="attn_scores")
-    s = _softcap(s, cfg.attn_logit_softcap)
-    s = jnp.where(valid[:, None, None], s, NEG_INF)
-    w = jax.nn.softmax(s, axis=-1)
-    out = fs_einsum("bkgqt,btkh->bqkgh", w, v.astype(jnp.float32),
-                    mode=mode, policy=policy, site="attn_pv")
+
+    def gather_attend():
+        idx = paged_gather_indices(paged["tables"], paged["block_size"])
+        k = jnp.take(k_pool, idx, axis=0)                  # (B, T, KV, hd)
+        v = jnp.take(v_pool, idx, axis=0)
+        kv_pos = jnp.take(paged["pos_pool"], idx, axis=0)  # (B, T)
+        valid = (kv_pos[:, None, :] <= pos[:, :, None]) \
+            & (kv_pos[:, None, :] < ATTEND_POS_LIMIT)      # (B, S, T)
+        if window is not None:
+            valid &= (pos[:, :, None] - kv_pos[:, None, :]) < window
+        s = fs_einsum("bqkgh,btkh->bkgqt", qf, k.astype(jnp.float32),
+                      mode=mode, policy=policy, site="attn_scores")
+        s = _softcap(s, cfg.attn_logit_softcap)
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        return fs_einsum("bkgqt,btkh->bqkgh", w, v.astype(jnp.float32),
+                         mode=mode, policy=policy, site="attn_pv")
+
+    from repro.core.einsum import resolve_mode     # lazy: import cycle
+    use_kernel = False
+    if resolve_mode(mode, policy, "attn_paged") == "square_pallas" \
+            and jnp.issubdtype(dt, jnp.floating):
+        from repro.kernels import routing
+        route = routing.select_paged_attn_route(
+            S, T, batch=B, kv_heads=KV, group=G, hd=hd, dtype=dt)
+        hkey = routing.health_key("attn_paged", (B, S, KV, G, hd, T), dt)
+        use_kernel = (route.name == "kernel"
+                      and not routing.route_health().is_demoted(hkey))
+
+    if use_kernel:
+        from repro.core import guards
+        from repro.kernels import tuning
+        from repro.kernels.ops import default_interpret
+        from repro.kernels.sq_paged_attn import sq_paged_attn
+        interp = default_interpret()
+        plan = tuning.plan_paged_attn(
+            S * G, hd, paged["block_size"],
+            pm_layout="mnk" if interp else "mkn")
+        out = sq_paged_attn(
+            qf, k_pool, v_pool, paged["tables"], paged["pos_pool"], pos,
+            block_size=paged["block_size"], window=window,
+            softcap=cfg.attn_logit_softcap, attend_limit=ATTEND_POS_LIMIT,
+            kc_qk=plan.kc_qk, kc_pv=plan.kc_pv, pm_layout=plan.pm_layout,
+            interpret=interp)
+        gp = guards.guard_policy()
+        if gp.enabled and guards.check_finite(out) is False:
+            # eager-only (check_finite is None under a jit trace): trip
+            # the breaker and recompute on the gather route, whose
+            # fs_einsums do their own counting
+            from repro.kernels import routing
+            routing.route_health().record_trip(hkey, limit=gp.trip_limit)
+            out = gather_attend()
+        else:
+            # the kernel subsumes both softmax-path contractions; count
+            # them at the sites the audit already knows
+            for site in ("attn_scores", "attn_pv"):
+                counting.note_contraction(
+                    site=site, spec="paged_attn_kernel",
+                    mode="square_pallas", mults=B * KV * G * S * T * hd)
+    else:
+        out = gather_attend()
+
     out = out.reshape(B, S, H, hd).astype(dt)
     return _proj_out(p["wo"], out, mode, x.dtype,
                      tp_reduce=cfg.tp_bf16_reduce, policy=policy), \
@@ -467,5 +537,5 @@ def init_kv_cache(cfg, batch: int, max_len: int, window: Optional[int] = None):
     return {
         "k": jnp.zeros((batch, T, cfg.n_kv_heads, hd), dt),
         "v": jnp.zeros((batch, T, cfg.n_kv_heads, hd), dt),
-        "pos": jnp.full((batch, T), 2**30, jnp.int32),
+        "pos": jnp.full((batch, T), EMPTY_POS, jnp.int32),
     }

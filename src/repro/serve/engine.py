@@ -8,10 +8,15 @@ loop.  This engine is the production shape of the same loop:
 - **Paged KV cache** -- one physical pool per attention layer
   (``LM.init_paged_cache``), fixed-size blocks handed out by a
   :class:`~repro.serve.paged.BlockAllocator`, per-sequence block tables,
-  gather-based attention reads (``attention._attn_paged_step``).  Blocks
-  are allocated on admit, grown on demand during decode, and freed the
-  moment a sequence finishes -- memory scales with live tokens, not with
-  ``max_slots * max_len``.
+  attention reads either gathered or streamed block-by-block by the
+  fused square kernel (``attention._attn_paged_step`` routes per shape
+  via ``kernels.routing``).  Blocks are allocated on admit, grown on
+  demand during decode, and freed the moment a sequence finishes --
+  memory scales with live tokens, not with ``max_slots * max_len``.
+  Sliding-window archs additionally retire blocks as their positions age
+  out of the window (``EngineConfig.window_eviction``), capping each
+  sequence's footprint at ``ceil(window / block_size) + 1`` blocks
+  however long it runs.
 - **Continuous batching with per-slot ragged positions** -- every decode
   step advances all live slots at their own absolute offsets (one (B, 1)
   call); a finished slot is refilled from the queue without draining the
@@ -84,9 +89,30 @@ from repro.serve.faults import FaultInjector, FaultyAllocator
 from repro.serve.server import Request
 
 __all__ = ["EngineConfig", "EngineMetrics", "Engine", "RequestStatus",
-           "RequestResult", "SHED_POLICIES"]
+           "RequestResult", "SHED_POLICIES", "eviction_window"]
 
 SHED_POLICIES = ("reject-new", "evict-oldest")
+
+
+def eviction_window(cfg) -> Optional[int]:
+    """The model's uniform block-eviction horizon, or None.
+
+    Freed blocks are invisible to EVERY layer only when every
+    attention-bearing layer masks by a sliding window; the horizon is the
+    LARGEST such window (layers with smaller windows simply mask more of
+    the live blocks).  Any full-attention layer (window None) disables
+    eviction -- its queries may reach arbitrarily old positions.
+    """
+    from repro.models import blocks as blk
+    windows = []
+    for kind in cfg.layer_kinds:
+        if kind not in blk.PAGEABLE_KINDS:
+            continue
+        w = blk._window_for(kind, cfg)
+        if w is None:
+            return None
+        windows.append(int(w))
+    return max(windows) if windows else None
 
 
 class RequestStatus(str, enum.Enum):
@@ -145,6 +171,10 @@ class EngineConfig:
     guard: bool = False           # numerics guard: fail non-finite-logits
                                   # slots; scope the core-layer square-route
                                   # guard over every step
+    window_eviction: bool = True  # SWA archs: free blocks older than
+                                  # pos - window back to the pool (caps a
+                                  # sequence's footprint at the window;
+                                  # no-op for full-attention archs)
 
     def __post_init__(self):
         if self.shed_policy not in SHED_POLICIES:
@@ -267,6 +297,10 @@ class Engine:
         self.cache = model.init_paged_cache(cfg.num_blocks * cfg.block_size)
         self.pos_pool = jnp.asarray(
             paged_mod.empty_pos_pool(cfg.num_blocks, cfg.block_size))
+        # SWA archs: the uniform horizon past which blocks are freed back
+        # to the pool (None: full-attention arch, or eviction disabled)
+        self._evict_window = (eviction_window(model.cfg)
+                              if cfg.window_eviction else None)
 
         bs = cfg.block_size
 
@@ -508,7 +542,14 @@ class Engine:
             if self.slots[slot_id] is not None or not self.queue:
                 continue
             req = self.queue[0]
-            if not self.tables.ensure(slot_id, len(req.tokens)):
+            # Under windowed eviction a sequence never holds more than
+            # ~window tokens' worth of blocks, so admission only reserves
+            # the first prefill chunk; prefill grows (and evicts) chunk by
+            # chunk.  Without eviction the whole prompt is reserved up
+            # front, exactly as before.
+            need = (len(req.tokens) if self._evict_window is None
+                    else min(len(req.tokens), self.cfg.prefill_chunk))
+            if not self.tables.ensure(slot_id, need):
                 break                          # pool exhausted: wait
             self.queue.pop(0)
             self.slots[slot_id] = _Slot(req=req)
@@ -545,6 +586,19 @@ class Engine:
         prompt = np.asarray(slot.req.tokens, np.int32)
         lo = slot.n_prefilled
         chunk = prompt[lo:lo + cfg.prefill_chunk]
+        if self._evict_window is not None:
+            # retire blocks no query at position >= lo can reach, then
+            # grow the table to cover this chunk (admission only reserved
+            # the first chunk); preempt youngest-first when the pool is
+            # dry, exactly like the decode growth loop.
+            self._reset_pos(self.tables.evict_window(slot_id, lo,
+                                                     self._evict_window))
+            while self.slots[slot_id] is not None and \
+                    not self.tables.ensure(slot_id, lo + len(chunk)):
+                if not self._preempt_for(slot_id):
+                    return False               # retry next tick
+            if self.slots[slot_id] is None:    # preempted itself
+                return True
         C = cfg.prefill_chunk
         toks = np.zeros((1, C), np.int32)
         poss = np.full((1, C), -1, np.int32)
@@ -601,6 +655,10 @@ class Engine:
         # surfaces the condition if it never clears.
         blocked = set()
         for slot_id in list(live):
+            if self._evict_window is not None \
+                    and self.slots[slot_id] is not None:
+                self._reset_pos(self.tables.evict_window(
+                    slot_id, self.slots[slot_id].pos, self._evict_window))
             while self.slots[slot_id] is not None and \
                     not self.tables.ensure(slot_id,
                                            self.slots[slot_id].pos + 1):

@@ -12,9 +12,21 @@ owns the host-side bookkeeping:
   the :data:`~repro.models.attention.EMPTY_POS` sentinel so gathered reads
   from it never attend.
 - :class:`BlockTables` -- the (max_slots, blocks_per_seq) int32 table the
-  gather-based attention reads index through, with grow / release and a
-  freed-block ``pos_pool`` reset (a recycled block would otherwise leak
+  attention reads index through (gathered or streamed block-by-block by
+  the fused kernel), with grow / release, **windowed eviction** for
+  sliding-window archs (:meth:`BlockTables.evict_window` frees blocks
+  whose every position has aged out of the attention window, capping a
+  sequence's footprint at ``ceil(window / block_size) + 1`` blocks), and
+  a freed-block ``pos_pool`` reset (a recycled block would otherwise leak
   its previous owner's positions into the new owner's mask).
+
+Eviction keeps **absolute column addressing**: freed leading table
+columns are zeroed to :data:`NULL_BLOCK` (reads from them are masked --
+the null block's ``pos_pool`` entries stay ``EMPTY_POS``), and later
+growth appends columns after the evicted prefix.  The per-sequence
+context ceiling is unchanged (``max_len`` still caps positions), so
+eviction raises pool-level *concurrency* -- more resident sequences per
+pool -- not single-sequence length.
 
 Everything here is plain numpy / python -- the jax side only ever sees the
 current table snapshot and the scatter/gather indices derived from it.
@@ -101,6 +113,9 @@ class BlockTables:
         self.table = np.full((self.max_slots, self.blocks_per_seq),
                              NULL_BLOCK, np.int32)
         self._owned: List[List[int]] = [[] for _ in range(self.max_slots)]
+        # leading table columns freed by windowed eviction, per slot --
+        # column addressing stays absolute, so growth resumes after them
+        self._evicted: List[int] = [0] * self.max_slots
 
     @property
     def max_len(self) -> int:
@@ -109,12 +124,19 @@ class BlockTables:
     def owned(self, slot: int) -> List[int]:
         return list(self._owned[slot])
 
+    def evicted(self, slot: int) -> int:
+        """Leading table columns of ``slot`` freed by windowed eviction."""
+        return self._evicted[slot]
+
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot``'s table to cover ``n_tokens`` positions.
 
         Returns False (tables untouched) if the pool cannot supply the
         missing blocks -- the engine then preempts.  Raises if the request
         exceeds the per-sequence ceiling (no allocation could ever help).
+        Columns already freed by :meth:`evict_window` count as covered:
+        their positions have aged out of the attention window, so no read
+        or write will ever touch them again.
         """
         need = self.allocator.blocks_for(n_tokens)
         if need > self.blocks_per_seq:
@@ -122,7 +144,7 @@ class BlockTables:
                 f"sequence needs {n_tokens} cache positions "
                 f"({need} blocks) > per-sequence ceiling {self.max_len} "
                 f"({self.blocks_per_seq} blocks)")
-        have = len(self._owned[slot])
+        have = self._evicted[slot] + len(self._owned[slot])
         if need <= have:
             return True
         grant = self.allocator.alloc(need - have)
@@ -132,12 +154,45 @@ class BlockTables:
         self._owned[slot].extend(grant)
         return True
 
+    def evict_window(self, slot: int, next_pos: int,
+                     window: int) -> List[int]:
+        """Free ``slot``'s blocks that have aged out of a sliding window.
+
+        ``next_pos`` is the next position the sequence will write (every
+        later query sits at ``>= next_pos``); a block column ``c`` covers
+        positions ``[c*bs, (c+1)*bs)`` and is dead once its newest
+        position is older than the window's reach, i.e. ``(c+1)*bs <=
+        next_pos - window + 1``.  The strict per-column bound keeps the
+        column holding ``next_pos`` itself alive even at ``window == 1``.
+
+        Freed columns are zeroed to :data:`NULL_BLOCK` in place (absolute
+        addressing; see the module docstring) and the blocks are returned
+        so the caller can reset their ``pos_pool`` entries before reuse.
+        A live sequence evicted at every step holds at most
+        ``ceil(window / block_size) + 1`` blocks.
+        """
+        if window <= 0:
+            raise ValueError(f"window must be positive, got {window}")
+        bs = self.allocator.block_size
+        n_dead = max(0, (int(next_pos) - int(window) + 1) // bs)
+        n_dead = min(n_dead, self._evicted[slot] + len(self._owned[slot]))
+        k = n_dead - self._evicted[slot]
+        if k <= 0:
+            return []
+        dead, self._owned[slot] = (self._owned[slot][:k],
+                                   self._owned[slot][k:])
+        self.table[slot, self._evicted[slot]:n_dead] = NULL_BLOCK
+        self._evicted[slot] = n_dead
+        self.allocator.free(dead)
+        return dead
+
     def release(self, slot: int) -> List[int]:
         """Free all of ``slot``'s blocks; returns them so the engine can
         reset their ``pos_pool`` entries (stale positions in a recycled
         block would attend for its next owner)."""
         blocks = self._owned[slot]
         self._owned[slot] = []
+        self._evicted[slot] = 0
         self.table[slot, :] = NULL_BLOCK
         if blocks:
             self.allocator.free(blocks)

@@ -181,6 +181,41 @@ def test_engine_moe_arch():
                                                    max_new=4)
 
 
+def test_eviction_window_helper():
+    from repro.serve.engine import eviction_window
+    assert eviction_window(get_config("deepseek-7b").reduced()) is None
+    swa = get_config("starcoder2-3b").reduced()
+    assert eviction_window(swa) == swa.window
+    tiny = dataclasses.replace(swa, window=8)
+    assert eviction_window(tiny) == 8
+
+
+def test_engine_window_eviction_caps_footprint_identically():
+    """SWA decode with block eviction on must emit the same tokens as
+    with it off (aged blocks are already masked), free every block at the
+    end, and show a strictly lower peak pool footprint."""
+    window = 8
+    cfg = dataclasses.replace(get_config("starcoder2-3b").reduced(),
+                              window=window)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _ragged_requests(cfg, 4, seed=4, lo=10, hi=24)
+    kw = dict(max_slots=4, block_size=4, num_blocks=48, blocks_per_seq=10,
+              prefill_chunk=8, max_new_tokens=8)
+    eng_off = Engine(model, params,
+                     EngineConfig(window_eviction=False, **kw))
+    res_off = eng_off.run([Request(r.rid, r.tokens) for r in reqs])
+    eng_on = Engine(model, params, EngineConfig(**kw))
+    res_on = eng_on.run([Request(r.rid, r.tokens) for r in reqs])
+    assert _toks(res_on) == _toks(res_off)
+    assert all(r.ok for r in res_on.values())
+    assert eng_on.allocator.used_blocks == 0          # zero leaks
+    cap_per_seq = -(-window // 4) + 1
+    assert eng_on.metrics.peak_blocks_used <= 4 * cap_per_seq
+    assert eng_on.metrics.peak_blocks_used \
+        < eng_off.metrics.peak_blocks_used
+
+
 def test_engine_rejects_unsupported_archs_and_oversize():
     """Unsupported architectures still raise at construction (a config
     bug, not a request fault); invalid REQUESTS get a terminal REJECTED

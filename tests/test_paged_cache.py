@@ -293,6 +293,80 @@ def test_recycled_block_does_not_leak_positions():
     assert run(pB, 3) == solo                # recycled blocks are clean
 
 
+def test_swa_eviction_matches_unevicted_paged():
+    """Windowed block eviction must be invisible to the logits: blocks
+    whose every position has aged out of the sliding window are already
+    masked, so freeing them (and NULLing their table columns) changes
+    nothing -- while capping the live footprint at
+    ``ceil(window / block_size) + 1`` blocks."""
+    import dataclasses
+
+    window, bs, nb, bps = 8, 4, 16, 8
+    cfg = dataclasses.replace(get_config("starcoder2-3b").reduced(),
+                              window=window)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(5))
+    prompt = np.random.default_rng(13).integers(0, cfg.vocab, 14,
+                                                dtype=np.int32)
+    n_new = 6
+    base, base_logits = _decode_paged(model, params, prompt, n_new,
+                                      block_size=bs, num_blocks=nb,
+                                      blocks_per_seq=bps, chunk=4)
+
+    alloc = pg.BlockAllocator(nb, bs)
+    tables = pg.BlockTables(alloc, 1, bps)
+    cache = model.init_paged_cache(nb * bs)
+    pos_pool = jnp.asarray(pg.empty_pos_pool(nb, bs))
+    peak = 0
+    evicted_total = 0
+
+    def evict(next_pos):
+        nonlocal pos_pool, evicted_total
+        freed = tables.evict_window(0, next_pos, window)
+        evicted_total += len(freed)
+        if freed:
+            idx = tables.reset_slots_index(freed)
+            pos_pool = pos_pool.at[jnp.asarray(idx)].set(attn.EMPTY_POS)
+
+    toks, logits, h = [], [], None
+    chunk = 4
+    for lo in range(0, len(prompt), chunk):
+        part = prompt[lo:lo + chunk]
+        evict(lo)
+        assert tables.ensure(0, lo + len(part))
+        peak = max(peak, len(tables.owned(0)))
+        t = np.zeros((1, chunk), np.int32)
+        p = np.full((1, chunk), -1, np.int32)
+        t[0, :len(part)] = part
+        p[0, :len(part)] = np.arange(lo, lo + len(part))
+        h, cache, pos_pool = model.decode_paged(
+            params, cache, jnp.asarray(t), jnp.asarray(p),
+            jnp.asarray(tables.table), pos_pool, block_size=bs)
+        last = len(part) - 1
+    logits.append(np.asarray(model.logits(params,
+                                          h[:, last:last + 1])[0, 0]))
+    toks.append(int(np.argmax(logits[-1])))
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        evict(pos)
+        assert tables.ensure(0, pos + 1)
+        peak = max(peak, len(tables.owned(0)))
+        h, cache, pos_pool = model.decode_paged(
+            params, cache, jnp.asarray([[toks[-1]]], dtype=np.int32),
+            jnp.asarray([[pos]], dtype=np.int32),
+            jnp.asarray(tables.table), pos_pool, block_size=bs)
+        lg = np.asarray(model.logits(params, h)[0, 0])
+        logits.append(lg)
+        toks.append(int(np.argmax(lg)))
+        pos += 1
+
+    assert evicted_total > 0, "window never aged a block out"
+    assert peak <= -(-window // bs) + 1          # footprint cap
+    assert toks == base
+    for a, b in zip(logits, base_logits):
+        np.testing.assert_allclose(a, b, atol=1e-4)
+
+
 def test_init_paged_cache_rejects_non_kv_archs():
     cfg = get_config("whisper-large-v3").reduced()
     with pytest.raises(ValueError):

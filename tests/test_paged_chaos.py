@@ -12,7 +12,11 @@ that the pool can never be corrupted:
 - the null block is never granted and never freed;
 - double-free and foreign-free raise instead of corrupting the free list;
 - a released slot's table rows are all NULL and its pos_pool positions
-  are back at the EMPTY sentinel (no stale positions for the next owner).
+  are back at the EMPTY sentinel (no stale positions for the next owner);
+- windowed eviction only ever frees the oldest fully-aged prefix (never a
+  block still inside the window's reach), keeps the footprint of a
+  continuously-evicted sequence at ``ceil(window / block_size) + 1``
+  blocks, and leaves freed blocks position-clean for recycling.
 
 hypothesis is an optional dev dependency; this module skips without it.
 """
@@ -55,13 +59,16 @@ class PagedChaos(RuleBasedStateMachine):
         ok = self.tables.ensure(slot, n_tokens)
         if ok:
             self.slot_tokens[slot] = max(self.slot_tokens[slot], n_tokens)
-            # growth is monotone and exactly covers the ask
+            # growth is monotone and (with the evicted prefix) covers the ask
             owned = self.tables.owned(slot)
+            ev = self.tables.evicted(slot)
             assert owned[:len(before)] == before
-            assert len(owned) >= self.alloc.blocks_for(n_tokens)
-            # simulate the engine writing positions into the new coverage
+            assert ev + len(owned) >= self.alloc.blocks_for(n_tokens)
+            # simulate the engine writing positions into the live coverage
             idx = self.tables.reset_slots_index(owned)
-            self.pos_pool[idx[:n_tokens]] = np.arange(n_tokens)
+            base = ev * BLOCK_SIZE
+            count = max(0, n_tokens - base)
+            self.pos_pool[idx[:count]] = base + np.arange(count)
         else:
             # a refused grow leaves the slot untouched
             assert self.tables.owned(slot) == before
@@ -85,6 +92,28 @@ class PagedChaos(RuleBasedStateMachine):
         """The engine's preemption shape: release then re-ensure."""
         self.release(slot)
         self.grow(slot, n_tokens)
+
+    @rule(slot=st.integers(0, MAX_SLOTS - 1),
+          window=st.integers(1, BLOCKS_PER_SEQ * BLOCK_SIZE - 2))
+    def evict_window(self, slot, window):
+        """The engine's SWA eviction: free fully-aged leading blocks."""
+        owned_before = self.tables.owned(slot)
+        ev_before = self.tables.evicted(slot)
+        next_pos = self.slot_tokens[slot]
+        freed = self.tables.evict_window(slot, next_pos, window)
+        # only the oldest owned prefix is ever freed, in order
+        assert freed == owned_before[:len(freed)]
+        if freed:
+            # no live block freed: the newest position a freed column can
+            # hold is strictly older than the window's reach from next_pos
+            newest = (ev_before + len(freed)) * BLOCK_SIZE - 1
+            assert next_pos - newest >= window
+            # the engine's _reset_pos on the freed blocks
+            idx = self.tables.reset_slots_index(freed)
+            self.pos_pool[idx] = EMPTY_POS
+        # continuous eviction caps the live footprint at the window
+        assert len(self.tables.owned(slot)) \
+            <= -(-window // BLOCK_SIZE) + 1
 
     @rule(n=st.integers(1, 4))
     def co_tenant_alloc(self, n):
@@ -136,9 +165,11 @@ class PagedChaos(RuleBasedStateMachine):
     def tables_consistent_with_ownership(self):
         for s in range(MAX_SLOTS):
             owned = self.tables.owned(s)
+            ev = self.tables.evicted(s)
             row = self.tables.table[s]
-            assert list(row[:len(owned)]) == owned
-            assert (row[len(owned):] == paged.NULL_BLOCK).all()
+            assert (row[:ev] == paged.NULL_BLOCK).all()
+            assert list(row[ev:ev + len(owned)]) == owned
+            assert (row[ev + len(owned):] == paged.NULL_BLOCK).all()
 
     @invariant()
     def free_blocks_hold_no_stale_positions(self):
