@@ -9,7 +9,11 @@ perf trajectory (current kernel timings alongside the frozen seed-commit
 baselines, with speedup ratios) that future PRs use to track kernel
 speedups against this baseline.  The serving-engine smoke bench
 (``benchmarks/serving.py``) rides along and writes ``BENCH_serving.json``
-(tokens/s, TTFT, cache-block utilization, square-routed fraction).
+(tokens/s, TTFT, cache-block utilization, square-routed fraction), and the
+training bench (``benchmarks/training.py``) writes ``BENCH_training.json``
+(standard vs square-routed step time, square fraction of total train
+FLOPs incl. the custom-VJP backward, fixed-seed loss bit-trajectory
+hashes).
 
 ``--check`` is the CI bench regression gate: the fresh measurements are
 compared against the seed baselines (every ``speedup_vs_seed`` must stay
@@ -172,7 +176,7 @@ def main(argv=None) -> None:
     check = "--check" in argv
     committed = load_committed() if check else None
 
-    from benchmarks import gatecost, kernel_timing, ratios, serving
+    from benchmarks import gatecost, kernel_timing, ratios, serving, training
 
     # Timing rows are measured FIRST, while the process is cold: the claim
     # tables below burn ~a minute of sustained compute, and on quota-
@@ -189,6 +193,10 @@ def main(argv=None) -> None:
     # long-context rows (paged-attn kernel vs gather, SWA eviction
     # footprint) follow -- same-process interleaved ratios as well.
     serving_rows = serving.serving_rows() + serving.long_context_rows()
+    # Training rows follow the same discipline: jitted steps, modes
+    # interleaved per rep, so the gated square-vs-standard step-time
+    # ratio is a same-process quantity.
+    training_rows = training.training_rows()
 
     # --- Paper claim 1: real matmul, eq (6): ratio -> 1 ---
     rows = ratios.real_matmul_ratio()
@@ -239,8 +247,19 @@ def main(argv=None) -> None:
               + (f",peak_blocks={row['peak_blocks_used']}"
                  if row["name"].startswith("serving_engine_swa") else ""))
 
+    print("\n# training (jitted train step: standard vs square-routed "
+          "fwd+bwd)")
+    for row in training_rows:
+        print(f"{row['name']},{row['us_per_step']:.0f}us/step,"
+              f"frac_sq={row['fraction_square']:.2f},"
+              f"frac_sq_bwd={row['fraction_square_bwd']:.2f},"
+              f"loss={row['loss_last']:.4f}"
+              + (f",speedup_vs_standard={row['speedup_vs_standard']:.2f}"
+                 if "speedup_vs_standard" in row else ""))
+
     payload = build_bench_payload(timing_rows)
     serving_payload = serving.build_serving_payload(serving_rows)
+    training_payload = training.build_training_payload(training_rows)
 
     # --- roofline summary from the dry-run, if present ---
     for path in ("dryrun_single_pod.json", "dryrun_multi_pod.json"):
@@ -252,7 +271,8 @@ def main(argv=None) -> None:
     if check:
         tol = float(os.environ.get("BENCH_CHECK_TOL", "0.0"))
         failures = check_regressions(payload, committed) \
-            + serving.check_serving(serving_payload, tol)
+            + serving.check_serving(serving_payload, tol) \
+            + training.check_training(training_payload, tol)
         if failures:
             # Do NOT write the regressed payload: it would become the
             # next run's comparison baseline and silently ratchet the
@@ -267,6 +287,7 @@ def main(argv=None) -> None:
     if emit_json:
         write_bench_json(payload)
         serving.write_serving_json(serving_payload)
+        training.write_training_json(training_payload)
 
     print("\nbenchmarks: ALL CLAIMS REPRODUCED")
 

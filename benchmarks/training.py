@@ -1,0 +1,224 @@
+"""Training benchmark: the square-routed train step vs the multiplier
+baseline (ROADMAP direction 4, "training as a workload").
+
+One small-but-real LM runs N fixed-seed AdamW steps under three modes:
+
+- ``standard``       -- multiplier-baseline GEMMs (the reference row);
+- ``square_virtual`` -- every contraction square-routed through the MXU
+                        identity, forward AND backward: the fs_einsum
+                        custom VJP re-enters the dispatcher for dL/dx and
+                        dL/dW as ``<site>.bwd_x`` / ``<site>.bwd_w``
+                        (the gated pair);
+- ``square_pallas``  -- the Pallas kernel route (informational on this
+                        interpret host; exercises the training-shaped
+                        tuning-cache entries so the row runs warning-free).
+
+Reported per row: steady-state step time (jitted, trace excluded,
+interleaved across modes so the gated ratio is immune to runner-load
+drift), the fraction of TOTAL train FLOPs square-routed via
+``core/counting`` (forward + backward, from the first tracing call), the
+backward-only square fraction, and the loss-curve **bit-trajectory
+hash** over the N steps (:func:`repro.optim.adamw.tree_fingerprint` of
+the per-step loss sequence -- bit-identical across runs on one host, so
+trajectory drift across commits is visible in the JSON diff).
+
+``BENCH_training.json`` feeds ``run.py --check``: the square-routed step
+must hold ``speedup_vs_standard >= 1.0 - tol`` and the square row's
+backward fraction must stay >= 0.9 (a VJP regression that silently
+reroutes backward GEMMs to the multiplier baseline fails here).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+import jax
+
+from repro.configs.base import ContractionPolicy, ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.lm import build_model
+from repro.optim import adamw
+from repro.train import step as step_mod
+
+TRAINING_JSON = "BENCH_training.json"
+
+# Train-bench model: the serving-bench geometry (qkv/out 256x256, ffn
+# 256<->1024, vocab-logits 4096) shrunk to 2 layers so a jitted train
+# step -- forward, VJP backward, AdamW -- stays interpret-host friendly.
+# The attention softmax path rides the policy split like production
+# configs do; everything else (including the loss vocab GEMM and every
+# backward contraction) square-routes.
+BENCH_POLICY = ContractionPolicy.of(attn_scores="standard",
+                                    attn_pv="standard")
+BENCH_CFG = ModelConfig(
+    name="train-bench", family="dense", n_layers=2, d_model=256,
+    n_heads=4, n_kv_heads=4, d_ff=1024, vocab=4096, head_dim=64,
+    dtype="float32", scan_layers=False, remat="none", attn_chunk_q=32,
+    attn_chunk_kv=32, loss_chunk=32, max_seq=128,
+    matmul_mode="square_virtual", contraction_policy=BENCH_POLICY)
+
+BATCH, SEQ = 2, 64          # forward GEMM rows M = BATCH * SEQ = 128
+N_STEPS = 4                 # fixed-seed trajectory length (and timing span)
+DATA_SEED = 123
+
+# Tolerance floor for the square-vs-standard step-time gate.  On this
+# CPU host the virtual-square step pays its O(M*K + K*N) correction
+# terms without an MXU to hide them behind (~0.89x standard measured);
+# the floor keeps the gate meaningful -- it still catches a step that
+# goes catastrophically slow or a backward that stops square-routing --
+# while the parity regime stays the TPU (same stance as the serving
+# bench's LONG_ROW_TOL_FLOOR; see docs/tuning.md).
+TRAIN_ROW_TOL_FLOOR = 0.2
+
+# Modes in the bench: (row key, matmul_mode, gated?)
+MODES = (("standard", "standard"),
+         ("square_virtual", "square_virtual"),
+         ("square_pallas", "square_pallas"))
+
+
+def _setup(mode: str):
+    """(jitted step, params, opt_state, batches) for one mode."""
+    if mode == "standard":
+        cfg = dataclasses.replace(BENCH_CFG, matmul_mode="standard",
+                                  contraction_policy=None)
+    else:
+        cfg = dataclasses.replace(BENCH_CFG, matmul_mode=mode)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.adamw_init(params)
+    data = SyntheticLM(DataConfig(global_batch=BATCH, seq_len=SEQ,
+                                  vocab=cfg.vocab, seed=DATA_SEED), cfg)
+    batches = data.take(N_STEPS)
+    step = jax.jit(step_mod.make_train_step(model, step_mod.TrainConfig()))
+    return step, params, opt, batches
+
+
+def _run_steps(step, params, opt, batches):
+    """Run the fixed-seed trajectory; returns (losses, final params)."""
+    losses = []
+    for batch in batches:
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(np.asarray(metrics["loss"])))
+    jax.block_until_ready(params)
+    return losses, params
+
+
+def training_rows() -> List[Dict]:
+    """Measure the three train-step configurations; returns BENCH rows."""
+    runs: Dict[str, Dict] = {}
+    for key, mode in MODES:
+        step, params, opt, batches = _setup(mode)
+        # First call traces: audit it -- the counter sees every forward
+        # AND custom-VJP backward contraction of one full train step.
+        (p1, o1, _), ctr = step_mod.audit_step(step, params, opt, batches[0])
+        jax.block_until_ready(p1)
+        losses, final = _run_steps(step, params, opt, batches)
+        runs[key] = {
+            "step": step, "params": params, "opt": opt, "batches": batches,
+            "fraction_square": ctr.fraction_square,
+            "fraction_square_bwd": ctr.fraction_square_bwd,
+            "bwd_mults": ctr.bwd_mults,
+            "losses": losses,
+            "loss_traj_hash": adamw.tree_fingerprint(
+                np.asarray(losses, np.float32)),
+            "params_hash": adamw.tree_fingerprint(final),
+        }
+
+    # Steady-state step timing on the already-traced closures, modes
+    # interleaved per rep so the gated standard/square ratio is a
+    # same-process, load-drift-immune quantity.
+    best_s = {key: float("inf") for key, _ in MODES}
+    for _ in range(3):
+        for key, _mode in MODES:
+            r = runs[key]
+            t0 = time.monotonic()
+            _run_steps(r["step"], r["params"], r["opt"], r["batches"])
+            dt = (time.monotonic() - t0) / N_STEPS
+            best_s[key] = min(best_s[key], dt)
+
+    rows = []
+    for key, mode in MODES:
+        r = runs[key]
+        row = {
+            "name": f"train_step_{key}[jit]",
+            "mode": mode,
+            "shape": f"L{BENCH_CFG.n_layers} d{BENCH_CFG.d_model} "
+                     f"v{BENCH_CFG.padded_vocab} B{BATCH} S{SEQ}",
+            "us_per_step": best_s[key] * 1e6,
+            "steps": N_STEPS,
+            "loss_first": r["losses"][0],
+            "loss_last": r["losses"][-1],
+            "losses_finite": bool(np.isfinite(r["losses"]).all()),
+            "fraction_square": r["fraction_square"],
+            "fraction_square_bwd": r["fraction_square_bwd"],
+            "bwd_mults": r["bwd_mults"],
+            "loss_traj_hash": r["loss_traj_hash"],
+            "params_hash": r["params_hash"],
+        }
+        if key != "standard":
+            row["speedup_vs_standard"] = \
+                best_s["standard"] / best_s[key] if best_s[key] else 0.0
+        rows.append(row)
+    return rows
+
+
+def build_training_payload(rows: List[Dict]) -> Dict:
+    return {"rows": rows}
+
+
+def write_training_json(payload: Dict, path: str = TRAINING_JSON) -> Dict:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"\nwrote {path}")
+    return payload
+
+
+def check_training(payload: Dict, tol: float) -> List[str]:
+    """Regression gate over the training rows (called by run.py --check):
+
+    - the square-routed (``square_virtual``) step must hold
+      ``speedup_vs_standard >= 1.0 - tol`` (tol floored at
+      :data:`TRAIN_ROW_TOL_FLOOR` -- the interpret-host correction-term
+      slack, see the constant's comment) vs the multiplier baseline;
+    - the square row must keep >= 0.9 of its TOTAL train FLOPs
+      square-routed AND >= 0.9 of its backward volume square-routed
+      (``fraction_square_bwd``): a custom-VJP regression that silently
+      reroutes dL/dx / dL/dW to the standard path fails here, exactly the
+      pre-VJP behavior this bench exists to pin;
+    - every row's fixed-seed loss trajectory must be finite, with the
+      bit-trajectory hash present (trajectory drift shows as a hash
+      change in the committed JSON).
+
+    The ``square_pallas`` row is informational on interpret hosts (same
+    near-parity story as the fused conv/paged-attn kernels -- the kernel
+    regime is the TPU; see docs/tuning.md) and is NOT time-gated.
+    """
+    failures = []
+    rows = {r["name"]: r for r in payload.get("rows", [])}
+    sq = rows.get("train_step_square_virtual[jit]")
+    if sq is None:
+        failures.append("training: square_virtual row missing")
+    else:
+        step_tol = max(tol, TRAIN_ROW_TOL_FLOOR)
+        ratio = sq.get("speedup_vs_standard", 0.0)
+        if ratio < 1.0 - step_tol:
+            failures.append(f"training: square_virtual step ratio "
+                            f"{ratio:.2f} < {1.0 - step_tol:.2f} vs standard")
+        if sq.get("fraction_square", 0.0) < 0.9:
+            failures.append(f"training: fraction_square "
+                            f"{sq.get('fraction_square', 0.0):.2f} < 0.90")
+        if sq.get("fraction_square_bwd", 0.0) < 0.9:
+            failures.append(
+                f"training: backward square fraction "
+                f"{sq.get('fraction_square_bwd', 0.0):.2f} < 0.90 "
+                f"(custom-VJP backward not square-routed)")
+    for name, row in rows.items():
+        if not row.get("losses_finite", False):
+            failures.append(f"training: {name} loss trajectory not finite")
+        if not row.get("loss_traj_hash"):
+            failures.append(f"training: {name} missing loss_traj_hash")
+    return failures

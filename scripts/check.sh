@@ -33,6 +33,12 @@ echo "== paged-attention kernel equivalence + windowed eviction =="
 # footprint capped at the window -- pinned explicitly, not just via tier-1
 python -m pytest -q tests/test_paged_attn_kernel.py tests/test_paged_cache.py
 
+echo "== gradient correctness (custom VJP + square-routed training) =="
+# the training contract: square-routed grads match the multiplier
+# reference in every mode, backward >= 90% square-routed, guard trips in
+# backward demote without poisoning the step -- pinned explicitly
+python -m pytest -q tests/test_vjp_square.py tests/test_train_square.py
+
 echo "== doctests (public-API examples) =="
 python -m pytest -q --doctest-modules \
   src/repro/core/einsum.py src/repro/core/counting.py \

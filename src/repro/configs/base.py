@@ -17,7 +17,8 @@ import dataclasses
 from typing import Optional, Tuple
 
 __all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "pad_vocab",
-           "ContractionPolicy", "CONTRACTION_SITES", "SQUARE_GEMMS_POLICY"]
+           "ContractionPolicy", "CONTRACTION_SITES", "GRAD_SITE_SUFFIXES",
+           "SQUARE_GEMMS_POLICY"]
 
 
 def pad_vocab(v: int, mult: int = 256) -> int:
@@ -44,6 +45,22 @@ CONTRACTION_SITES = (
     "attn_paged",       # fused paged-attention read (serving decode path)
 )
 
+# The custom VJP of fs_einsum re-enters the dispatcher for both backward
+# contractions under derived site names: ``<site>.bwd_x`` (dL/dx, the
+# activation gradient) and ``<site>.bwd_w`` (dL/dW, the weight gradient).
+# A policy may pin them independently of the forward site; an unpinned
+# backward site inherits the forward site's override (see ``lookup``).
+GRAD_SITE_SUFFIXES = (".bwd_x", ".bwd_w")
+
+
+def _valid_site(site: str) -> bool:
+    if site in CONTRACTION_SITES:
+        return True
+    for suf in GRAD_SITE_SUFFIXES:
+        if site.endswith(suf) and site[:-len(suf)] in CONTRACTION_SITES:
+            return True
+    return False
+
 
 @dataclasses.dataclass(frozen=True)
 class ContractionPolicy:
@@ -54,6 +71,11 @@ class ContractionPolicy:
     this policy's ``default`` if set, else the caller's ``mode`` argument
     (models pass ``cfg.matmul_mode``), else the process default.
 
+    Backward sites (``<site>.bwd_x`` / ``<site>.bwd_w``, noted by the
+    fs_einsum custom VJP) may be pinned explicitly -- pass them via a
+    dict since dots are not identifier characters -- and otherwise
+    inherit the forward site's override before falling to the default:
+
     >>> from repro.configs.base import ContractionPolicy
     >>> p = ContractionPolicy.of(default="square_virtual",
     ...                          attn_scores="standard")
@@ -61,10 +83,15 @@ class ContractionPolicy:
     'standard'
     >>> p.lookup("ffn")                  # falls through to the default
     'square_virtual'
+    >>> p.lookup("attn_scores.bwd_x")    # backward inherits the fwd pin
+    'standard'
+    >>> q = ContractionPolicy.of(**{"ffn.bwd_w": "standard"})
+    >>> q.lookup("ffn.bwd_w"), q.lookup("ffn.bwd_x"), q.lookup("ffn")
+    ('standard', None, None)
     >>> ContractionPolicy.of(attn_scroes="standard")   # typo fails loudly
     Traceback (most recent call last):
         ...
-    ValueError: unknown contraction site(s) ['attn_scroes']; expected names from ('dense', 'attn_qkv', 'attn_out', 'attn_scores', 'attn_pv', 'ffn', 'moe_router', 'moe_expert', 'logits', 'loss', 'recurrent_gates', 'recurrent_mix', 'recurrent_proj')
+    ValueError: unknown contraction site(s) ['attn_scroes']; expected names from ('dense', 'attn_qkv', 'attn_out', 'attn_scores', 'attn_pv', 'ffn', 'moe_router', 'moe_expert', 'logits', 'loss', 'recurrent_gates', 'recurrent_mix', 'recurrent_proj', 'attn_paged'), optionally suffixed with ('.bwd_x', '.bwd_w')
     """
     overrides: Tuple[Tuple[str, str], ...] = ()
     default: Optional[str] = None
@@ -75,10 +102,11 @@ class ContractionPolicy:
         """Build a policy, validating site names and modes (a typo'd site
         would otherwise be silently ignored at lookup time)."""
         from repro.core.matmul import MODES
-        bad = sorted(set(sites) - set(CONTRACTION_SITES))
+        bad = sorted(s for s in sites if not _valid_site(s))
         if bad:
             raise ValueError(f"unknown contraction site(s) {bad}; expected "
-                             f"names from {CONTRACTION_SITES}")
+                             f"names from {CONTRACTION_SITES}, optionally "
+                             f"suffixed with {GRAD_SITE_SUFFIXES}")
         for site, m in sites.items():
             if m not in MODES:
                 raise ValueError(f"unknown mode {m!r} for site {site!r}; "
@@ -92,6 +120,11 @@ class ContractionPolicy:
         for s, m in self.overrides:
             if s == site:
                 return m
+        if site is not None and site.endswith(GRAD_SITE_SUFFIXES):
+            base = site.rsplit(".", 1)[0]
+            for s, m in self.overrides:
+                if s == base:
+                    return m
         return self.default
 
 

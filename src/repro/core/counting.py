@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import warnings
 from typing import Dict, List
 
 import numpy as np
@@ -45,7 +46,17 @@ __all__ = ["OpCounter", "pm_matmul_counted", "standard_matmul_counted",
            "cpm4_matmul_counted", "cpm3_matmul_counted",
            "real_matmul_square_count", "cpm4_square_count", "cpm3_square_count",
            "ContractionCounter", "track_contractions", "count_scale",
-           "note_contraction", "SQUARE_MODES"]
+           "note_contraction", "SQUARE_MODES", "GRAD_SITE_SUFFIXES",
+           "EmptyAuditWarning"]
+
+
+class EmptyAuditWarning(UserWarning):
+    """A track_contractions region closed with ZERO records.  Contraction
+    notes fire at trace time, so the usual cause is auditing a jit'd
+    callable whose trace is already cached -- the re-execution records
+    nothing and every fraction would silently read 0.  Audit the first
+    (tracing) call, an eager call, or pass ``allow_empty=True`` if an
+    empty region is genuinely expected."""
 
 
 @dataclasses.dataclass
@@ -166,6 +177,11 @@ def cpm3_matmul_counted(x, y, ctr: OpCounter):
 SQUARE_MODES = ("square_virtual", "square_exact", "square_scan",
                 "square_pallas")
 
+# Site-name suffixes the fs_einsum custom VJP notes its two backward
+# contractions under (dL/dx and dL/dW) -- the counter splits fractions
+# on these so a training audit can assert backward coverage separately.
+GRAD_SITE_SUFFIXES = (".bwd_x", ".bwd_w")
+
 
 @dataclasses.dataclass
 class ContractionRecord:
@@ -205,6 +221,26 @@ class ContractionCounter:
         tot = self.total_mults
         return (self.square_mults / tot) if tot else 0.0
 
+    # ---- backward split (fs_einsum custom VJP sites, <site>.bwd_*) ----
+    @property
+    def bwd_mults(self) -> int:
+        """Contraction volume noted by backward (VJP) call sites."""
+        return sum(r.mults for r in self.records
+                   if r.site.endswith(GRAD_SITE_SUFFIXES))
+
+    @property
+    def square_bwd_mults(self) -> int:
+        return sum(r.mults for r in self.records
+                   if r.site.endswith(GRAD_SITE_SUFFIXES)
+                   and r.mode in SQUARE_MODES)
+
+    @property
+    def fraction_square_bwd(self) -> float:
+        """Of the BACKWARD contraction volume, the square-routed fraction
+        (the training-audit gate: >= 0.9 under a square-mode config)."""
+        tot = self.bwd_mults
+        return (self.square_bwd_mults / tot) if tot else 0.0
+
     @property
     def demoted_mults(self) -> int:
         """Contraction volume served on the standard route because the
@@ -239,6 +275,8 @@ class ContractionCounter:
             "total_mults": self.total_mults,
             "multiplies_replaced_by_squares": self.multiplies_replaced,
             "fraction_square": self.fraction_square,
+            "bwd_mults": self.bwd_mults,
+            "fraction_square_bwd": self.fraction_square_bwd,
             "fraction_demoted": self.fraction_demoted,
             "demoted_sites": self.demoted_sites(),
             "by_site": self.by_site(),
@@ -250,14 +288,16 @@ _SCALES: List[int] = [1]
 
 
 @contextlib.contextmanager
-def track_contractions():
+def track_contractions(allow_empty: bool = False):
     """Activate a :class:`ContractionCounter` for the enclosed region.
 
     Every :func:`repro.core.einsum.fs_einsum` traced inside the region
     notes its ``B*M*K*N`` multiply volume and resolved mode (trace-time:
-    wrap scan bodies in :func:`count_scale`, and note that a *cached* jit
-    re-execution records nothing -- count under eager execution or a
-    fresh trace):
+    wrap scan bodies in :func:`count_scale`).  A region that closes with
+    ZERO records emits :class:`EmptyAuditWarning` -- the classic cause is
+    auditing a *cached* jit re-execution, which records nothing and would
+    otherwise silently report ``fraction_square == 0``.  Pass
+    ``allow_empty=True`` when an empty region is expected.
 
     >>> import jax.numpy as jnp
     >>> from repro.core import counting
@@ -278,6 +318,15 @@ def track_contractions():
         yield ctr
     finally:
         _COUNTERS.remove(ctr)
+        if not ctr.records and not allow_empty:
+            warnings.warn(
+                "track_contractions region closed with no contraction "
+                "records.  Notes fire at TRACE time: a cached jit "
+                "re-execution records nothing, so this audit would "
+                "silently report fraction_square == 0.  Audit the first "
+                "(tracing) call or an eager call, or pass "
+                "allow_empty=True if this is expected.",
+                EmptyAuditWarning, stacklevel=3)
 
 
 @contextlib.contextmanager

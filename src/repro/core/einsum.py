@@ -38,6 +38,8 @@ dispatch (einsum semantics).
 from __future__ import annotations
 
 import dataclasses
+import functools
+import os
 import string
 from typing import Optional, Tuple
 
@@ -52,7 +54,16 @@ from repro.core import matmul as fsmm
 from repro.core.prepared import PreparedOperand, unwrap
 
 __all__ = ["fs_einsum", "ContractionPlan", "plan_contraction",
-           "resolve_mode"]
+           "resolve_mode", "vjp_enabled"]
+
+# Escape hatch: REPRO_EINSUM_VJP=0 disables the custom VJP and reverts to
+# mechanical differentiation of the dispatched primitives (backward GEMMs
+# then take whatever path jax.grad derives -- the pre-VJP behavior).
+_VJP_ENV = "REPRO_EINSUM_VJP"
+
+
+def vjp_enabled() -> bool:
+    return os.environ.get(_VJP_ENV, "1") != "0"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,39 +210,12 @@ def _batched_matmul(a, b, mode: str, preferred):
                      f"{fsmm.MODES}")
 
 
-def fs_einsum(spec: str, x, y, *, mode: Optional[str] = None,
-              policy=None, site: Optional[str] = None, preferred=None):
-    """Two-operand einsum through the fair-square contraction dispatch.
-
-    spec: einsum spec with explicit output (ellipsis supported);
-    mode: fair-square mode (default: policy / cfg / process default);
-    policy: a ContractionPolicy consulted with ``site``;
-    site: call-site label for the policy and the contraction counter;
-    preferred: accumulation dtype for the multiplier paths
-    (``preferred_element_type``; square paths widen via ``accum_dtype``).
-
-    Any two-operand spec dispatches -- batched, transposed, ellipsis --
-    and ``square_virtual`` results match the multiplier baseline to
-    accumulator rounding:
-
-    >>> import numpy as np, jax.numpy as jnp
-    >>> from repro.core.einsum import fs_einsum
-    >>> x = jnp.asarray(np.arange(24.0, dtype=np.float32).reshape(2, 3, 4))
-    >>> y = jnp.asarray(np.ones((2, 4, 5), np.float32))
-    >>> out = fs_einsum("bmk,bkn->bnm", x, y, mode="square_virtual")
-    >>> out.shape
-    (2, 5, 3)
-    >>> bool(np.allclose(out, jnp.einsum("bmk,bkn->bnm", x, y), atol=1e-4))
-    True
-    """
-    x = jnp.asarray(x)
+def _dispatch(spec: str, x, y, mode: str, site: Optional[str], preferred):
+    """Execute one contraction under a RESOLVED mode: prep-usability
+    checks, canonicalization, route-health demotion, the finite guard and
+    the counting note all live here.  ``fs_einsum`` (and the custom VJP's
+    primal/forward/backward) funnel into this."""
     prep = y if isinstance(y, PreparedOperand) else None
-    if prep is None:
-        y = jnp.asarray(y)
-    mode = resolve_mode(mode, policy, site)
-    if mode not in fsmm.MODES:
-        raise ValueError(f"unknown matmul mode {mode!r}; expected one of "
-                         f"{fsmm.MODES}")
     plan = plan_contraction(spec, x.shape, y.shape)
     sizes = _sizes(plan, x.shape, y.shape)
     B = _prod(plan.batch, sizes)
@@ -321,3 +305,159 @@ def fs_einsum(spec: str, x, y, *, mode: Optional[str] = None,
     counting.note_contraction(site=site or "einsum", spec=spec, mode=mode,
                               mults=B * M * K * N, demoted=demoted)
     return out
+
+
+# --------------------------------------------------------------------------
+# Custom VJP: square-routed backward contractions (paper §2-§3 applied to
+# the full training dataflow, ROADMAP direction 4).
+#
+# Both gradients of ``out = einsum(spec, x, y)`` are transposed einsums of
+# the same operands:
+#
+#     dL/dx = einsum("out,y->x", g, y)        site  <site>.bwd_x
+#     dL/dW = einsum("out,x->y", g, x)        site  <site>.bwd_w
+#
+# so instead of letting jax.grad mechanically differentiate the PM
+# identity (which would route both backward GEMMs through the standard
+# multiplier path and re-trace the prep work), the backward re-enters
+# ``fs_einsum`` as two first-class call sites: they get their own
+# ContractionPolicy overrides (falling back to the forward site's pin),
+# their own tuning-planner consultations and counting audit entries, and
+# their own RouteHealth keys -- a non-finite square result in backward
+# demotes THAT site to the standard route and completes the step.
+# --------------------------------------------------------------------------
+
+def _unreduce(t, dims: str, full_dims: str, full_shape):
+    """Broadcast a gradient back over axes that were summed out before the
+    contraction (einsum semantics: d(sum_s x)/dx broadcasts over s)."""
+    if dims == full_dims:
+        return t
+    for ax, d in enumerate(full_dims):
+        if d not in dims:
+            t = jnp.expand_dims(t, ax)
+    return jnp.broadcast_to(t, full_shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _fs_einsum_vjp(spec, mode, policy, site, preferred, x, y):
+    return _dispatch(spec, x, y, mode, site, preferred)
+
+
+def _fs_einsum_fwd(spec, mode, policy, site, preferred, x, y):
+    return _dispatch(spec, x, y, mode, site, preferred), (x, y)
+
+
+def _fs_einsum_bwd(spec, mode, policy, site, preferred, res, g):
+    x, y = res
+    ysrc = unwrap(y)
+    plan = plan_contraction(spec, x.shape, ysrc.shape)
+    base = site or "einsum"
+    x_red = "".join(d for d in plan.x_dims if d not in plan.x_sum)
+    y_red = "".join(d for d in plan.y_dims if d not in plan.y_sum)
+
+    # ---- dL/dx: cotangent contracted with y over the n indices ----
+    # A prepared y contributes its opposite-layout ``grad`` prep when it
+    # carries one (prepare_operand(..., prepare_grads=True)); otherwise
+    # the prepared operand itself rides along and fs_einsum's usability
+    # checks fall back to its raw source.
+    y_dx = y
+    if isinstance(y, PreparedOperand) and y.grad is not None:
+        y_dx = y.grad
+    if plan.y_sum:
+        y_dx, _ = _sum_out(unwrap(y_dx), plan.y_dims, plan.y_sum)
+    dx = fs_einsum(f"{plan.out_dims},{y_red}->{x_red}", g, y_dx,
+                   mode=mode, policy=policy, site=f"{base}.bwd_x",
+                   preferred=preferred)
+    dx = _unreduce(dx, x_red, plan.x_dims, x.shape).astype(x.dtype)
+
+    # ---- dL/dW: cotangent contracted with x over the m indices ----
+    xr = x
+    if plan.x_sum:
+        xr, _ = _sum_out(x, plan.x_dims, plan.x_sum)
+    dw = fs_einsum(f"{plan.out_dims},{x_red}->{y_red}", g, xr,
+                   mode=mode, policy=policy, site=f"{base}.bwd_w",
+                   preferred=preferred)
+    dw = _unreduce(dw, y_red, plan.y_dims, ysrc.shape).astype(ysrc.dtype)
+    if isinstance(y, PreparedOperand):
+        dy = jax.tree.map(jnp.zeros_like, y)
+        dy = dataclasses.replace(dy, source=dw)
+    else:
+        dy = dw
+    return dx, dy
+
+
+_fs_einsum_vjp.defvjp(_fs_einsum_fwd, _fs_einsum_bwd)
+
+
+def _wants_vjp(x, y) -> bool:
+    """Route through the custom VJP only when it can matter: float
+    operands under a trace (jax.grad/vjp always trace, so every
+    differentiated call qualifies; concrete eager calls -- the guarded
+    serving regime -- skip the wrapper entirely)."""
+    if not vjp_enabled():
+        return False
+    ysrc = unwrap(y)
+    if not (jnp.issubdtype(x.dtype, jnp.inexact)
+            and jnp.issubdtype(ysrc.dtype, jnp.inexact)):
+        return False
+    if isinstance(x, jax.core.Tracer):
+        return True
+    leaves = jax.tree_util.tree_leaves(y) if isinstance(y, PreparedOperand) \
+        else [y]
+    return any(isinstance(leaf, jax.core.Tracer) for leaf in leaves)
+
+
+def fs_einsum(spec: str, x, y, *, mode: Optional[str] = None,
+              policy=None, site: Optional[str] = None, preferred=None):
+    """Two-operand einsum through the fair-square contraction dispatch.
+
+    spec: einsum spec with explicit output (ellipsis supported);
+    mode: fair-square mode (default: policy / cfg / process default);
+    policy: a ContractionPolicy consulted with ``site``;
+    site: call-site label for the policy and the contraction counter;
+    preferred: accumulation dtype for the multiplier paths
+    (``preferred_element_type``; square paths widen via ``accum_dtype``).
+
+    Any two-operand spec dispatches -- batched, transposed, ellipsis --
+    and ``square_virtual`` results match the multiplier baseline to
+    accumulator rounding:
+
+    >>> import numpy as np, jax.numpy as jnp
+    >>> from repro.core.einsum import fs_einsum
+    >>> x = jnp.asarray(np.arange(24.0, dtype=np.float32).reshape(2, 3, 4))
+    >>> y = jnp.asarray(np.ones((2, 4, 5), np.float32))
+    >>> out = fs_einsum("bmk,bkn->bnm", x, y, mode="square_virtual")
+    >>> out.shape
+    (2, 5, 3)
+    >>> bool(np.allclose(out, jnp.einsum("bmk,bkn->bnm", x, y), atol=1e-4))
+    True
+
+    Under differentiation the custom VJP square-routes BOTH backward
+    contractions as first-class sites ``<site>.bwd_x`` / ``<site>.bwd_w``
+    -- they show up in the contraction audit like any forward site:
+
+    >>> import jax
+    >>> from repro.core import counting
+    >>> x = jnp.asarray(np.ones((3, 4), np.float32))
+    >>> w = jnp.asarray(np.full((4, 2), 0.5, np.float32))
+    >>> f = lambda x, w: fs_einsum("mk,kn->mn", x, w, mode="square_virtual",
+    ...                            site="ffn").sum()
+    >>> with counting.track_contractions() as ctr:
+    ...     dx, dw = jax.grad(f, argnums=(0, 1))(x, w)
+    >>> sorted(ctr.by_site())
+    ['ffn', 'ffn.bwd_w', 'ffn.bwd_x']
+    >>> ctr.fraction_square
+    1.0
+    >>> bool(np.allclose(dx, np.full((3, 4), 1.0)))
+    True
+    """
+    x = jnp.asarray(x)
+    if not isinstance(y, PreparedOperand):
+        y = jnp.asarray(y)
+    mode = resolve_mode(mode, policy, site)
+    if mode not in fsmm.MODES:
+        raise ValueError(f"unknown matmul mode {mode!r}; expected one of "
+                         f"{fsmm.MODES}")
+    if _wants_vjp(x, y):
+        return _fs_einsum_vjp(spec, mode, policy, site, preferred, x, y)
+    return _dispatch(spec, x, y, mode, site, preferred)

@@ -76,6 +76,7 @@ class PreparedOperand:
     canon: Any                        # widened canonical-layout weight
     corr: Any                         # column-side correction (Sb / Sw)
     im2col: Any                       # conv only: widened (K, cout) matrix
+    grad: Any                         # opposite-layout prep for dL/dx (or None)
     kind: str                         # "matmul" | "matmul_batched" | "conv2d"
     plan: Any                         # prepare-time TilePlan (matmul kinds)
     transposed: bool                  # canon built from source.T
@@ -96,7 +97,7 @@ class PreparedOperand:
         return self.source.ndim
 
     def tree_flatten(self):
-        leaves = (self.source, self.canon, self.corr, self.im2col)
+        leaves = (self.source, self.canon, self.corr, self.im2col, self.grad)
         aux = (self.kind, self.plan, self.transposed, self.site, self.key)
         return leaves, aux
 
@@ -120,7 +121,8 @@ def _matmul_key(kind: str, shape, dtype, layout: str,
 
 
 def _prepare_matmul(w, *, transpose: bool, m_hint: Optional[int],
-                    site: Optional[str], pm_layout: str) -> PreparedOperand:
+                    site: Optional[str], pm_layout: str,
+                    prepare_grads: bool = False) -> PreparedOperand:
     from repro.kernels import ops as kops    # lazy: avoid import cycle
     from repro.kernels import tuning
 
@@ -137,7 +139,16 @@ def _prepare_matmul(w, *, transpose: bool, m_hint: Optional[int],
                                   pm_layout=pm_layout, batch=batch)
         _PLAN_CACHE[(key, m_hint)] = plan
     canon, corr = kops.prepare_matmul_rhs(mat, plan, acc)
-    return PreparedOperand(w, canon, corr, None, kind, plan, transpose,
+    # dL/dx consumes the weight with the contraction/output axes swapped,
+    # so the gradient prep is the SAME source prepared the other way
+    # around (batched preps fall back to their raw source in backward --
+    # the batched kernel route only takes (B, K, N)-layout preps).
+    gradp = None
+    if prepare_grads and not batched:
+        gsite = f"{site}.bwd_x" if site else None
+        gradp = _prepare_matmul(w, transpose=not transpose, m_hint=m_hint,
+                                site=gsite, pm_layout=pm_layout)
+    return PreparedOperand(w, canon, corr, None, gradp, kind, plan, transpose,
                            site, key)
 
 
@@ -156,13 +167,14 @@ def _prepare_conv2d(w, *, site: Optional[str]) -> PreparedOperand:
     acc = sq.accum_dtype(w.dtype)
     wt, sw, wmat, cmat = kops.prepare_conv2d_weights(w4, acc)
     key = _matmul_key("conv2d", w.shape, w.dtype, "-", site)
-    return PreparedOperand(w, wt, sw, (wmat, cmat), "conv2d", None, False,
-                           site, key)
+    return PreparedOperand(w, wt, sw, (wmat, cmat), None, "conv2d", None,
+                           False, site, key)
 
 
 def prepare_operand(w, *, for_: str = "matmul", transpose: bool = False,
                     m_hint: Optional[int] = None, site: Optional[str] = None,
-                    interpret: Optional[bool] = None) -> "PreparedOperand":
+                    interpret: Optional[bool] = None,
+                    prepare_grads: bool = False) -> "PreparedOperand":
     """Precompute the constant-operand half of the kernel prep pipeline.
 
     ``for_``: ``"matmul"`` (2D ``(K, N)`` weights, or 3D ``(B, K, N)``
@@ -183,6 +195,13 @@ def prepare_operand(w, *, for_: str = "matmul", transpose: bool = False,
     zero-copy.  ``interpret`` picks the PM-block layout the plan is
     resolved for (default: the current backend, like kernels.ops).
 
+    ``prepare_grads`` (2D matmul only): also prepare the *opposite-layout*
+    form of the same source under ``<site>.bwd_x`` and carry it on the
+    ``grad`` field -- the fs_einsum custom VJP consumes it for the
+    activation gradient dL/dx, so forward and backward share one prepare
+    instead of re-preparing per trace.  Batched/conv preps keep
+    ``grad=None`` (their backward falls back to the raw source).
+
     Idempotent: passing an already-prepared operand returns it unchanged.
 
     >>> import numpy as np, jax.numpy as jnp
@@ -193,6 +212,9 @@ def prepare_operand(w, *, for_: str = "matmul", transpose: bool = False,
     >>> a = jnp.asarray(np.arange(10.0, dtype=np.float32).reshape(2, 5))
     >>> bool(np.array_equal(ops.sq_matmul(a, prep), ops.sq_matmul(a, w)))
     True
+    >>> gp = prepare_operand(w, site="dense", prepare_grads=True)
+    >>> gp.grad.transposed, gp.grad.site        # dL/dx form rides along
+    (True, 'dense.bwd_x')
     """
     if isinstance(w, PreparedOperand):
         return w
@@ -209,4 +231,4 @@ def prepare_operand(w, *, for_: str = "matmul", transpose: bool = False,
     interp = kops.default_interpret() if interpret is None else interpret
     layout = "mnk" if interp else "mkn"
     return _prepare_matmul(w, transpose=transpose, m_hint=m_hint, site=site,
-                           pm_layout=layout)
+                           pm_layout=layout, prepare_grads=prepare_grads)

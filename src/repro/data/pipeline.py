@@ -79,6 +79,16 @@ class SyntheticLM:
         self.step += 1
         return batch
 
+    def take(self, n: int):
+        """Materialize the next ``n`` batches (advances the stream state).
+
+        Fixed-seed convenience for the training bench and the train-loop
+        equivalence tests: two pipelines built from the same
+        ``DataConfig`` return bit-identical lists, so standard- and
+        square-routed runs consume the exact same token stream.
+        """
+        return [self.next_batch() for _ in range(n)]
+
 
 def make_batch_specs(model_cfg, shape_cfg, *, for_train: bool = True):
     """ShapeDtypeStruct stand-ins for every model input (dry-run contract:

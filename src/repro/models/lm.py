@@ -198,7 +198,8 @@ class LM:
                          policy=cfg.contraction_policy, site="logits")
 
     # --------------------------------------------- prepared weights (infer)
-    def prepare_params(self, params, *, interpret=None):
+    def prepare_params(self, params, *, interpret=None,
+                       prepare_grads: bool = False):
         """Weight-stationary inference params (paper §4-§5).
 
         Returns a params tree where every dense/projection/expert weight
@@ -215,19 +216,26 @@ class LM:
         layout does not support) -- use ``scan_layers=False`` configs to
         prepare the whole stack.  Recurrent-mix weights also stay raw
         (their specs transpose per step).
+
+        ``prepare_grads``: also carry each 2D prep's opposite-layout form
+        (``PreparedOperand.grad``), which the fs_einsum custom VJP
+        consumes for dL/dx -- for fine-tune-style loops that differentiate
+        through prepared (frozen) weights without re-preparing per trace.
         """
         from repro.core.prepared import prepare_operand
         cfg = self.cfg
         hd = cfg.resolved_head_dim
         H, KV = cfg.n_heads, cfg.n_kv_heads
         interp = interpret
+        pg = prepare_grads
 
         def prep_dense(p, site):
             w = p["w"]
             if w.ndim != 2:
                 return p                      # stacked (scan) leaf: keep raw
             q = dict(p)
-            q["w"] = prepare_operand(w, site=site, interpret=interp)
+            q["w"] = prepare_operand(w, site=site, interpret=interp,
+                                     prepare_grads=pg)
             return q
 
         def prep_attn(p):
@@ -238,12 +246,14 @@ class LM:
                     return p                  # stacked: keep the block raw
                 sub = dict(q[nm])
                 sub["w"] = prepare_operand(w.reshape(w.shape[0], nh * hd),
-                                           site="attn_qkv", interpret=interp)
+                                           site="attn_qkv", interpret=interp,
+                                           prepare_grads=pg)
                 q[nm] = sub
             wo = q["wo"]["w"]
             sub = dict(q["wo"])
             sub["w"] = prepare_operand(wo.reshape(H * hd, wo.shape[-1]),
-                                       site="attn_out", interpret=interp)
+                                       site="attn_out", interpret=interp,
+                                       prepare_grads=pg)
             q["wo"] = sub
             return q
 
@@ -279,7 +289,8 @@ class LM:
         table = params["embed"]["table"]
         new["logits_prep"] = prepare_operand(table.astype(jnp.float32),
                                              transpose=True, site="logits",
-                                             interpret=interp)
+                                             interpret=interp,
+                                             prepare_grads=pg)
         return new
 
     # ------------------------------------------------------------- cache

@@ -9,11 +9,15 @@ m/v inherit each param's NamedSharding under pjit, i.e. a fully sharded
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
-           "global_norm", "compress_int8", "decompress_int8"]
+           "global_norm", "compress_int8", "decompress_int8",
+           "tree_fingerprint"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,6 +84,26 @@ def adamw_update(cfg: AdamWConfig, params, grads, state):
                          is_leaf=lambda t: isinstance(t, tuple))
     new_state = {"step": step, "m": new_m, "v": new_v}
     return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def tree_fingerprint(tree) -> str:
+    """Bit-exact SHA-256 fingerprint of a pytree of arrays/scalars.
+
+    Hashes the tree structure plus every leaf's dtype, shape and raw
+    bytes, so two training runs produce the same digest iff their
+    trajectories are BIT-identical -- the loss-curve "bit-trajectory
+    hash" tracked in ``BENCH_training.json`` and the determinism probe
+    for fixed-seed train-loop tests.  Blocks on device values.
+    """
+    h = hashlib.sha256()
+    leaves, treedef = jax.tree.flatten(tree)
+    h.update(repr(treedef).encode())
+    for leaf in leaves:
+        a = np.asarray(leaf)
+        h.update(str(a.dtype).encode())
+        h.update(repr(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
 
 
 # ---------------------------------------------------------- grad compression

@@ -11,11 +11,12 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import counting
 from repro.optim import adamw
 from repro.train import loss as loss_mod
 
 __all__ = ["TrainConfig", "make_train_step", "make_prefill_step",
-           "make_decode_step", "make_loss_fn"]
+           "make_decode_step", "make_loss_fn", "audit_step"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,6 +113,23 @@ def make_train_step(model, tcfg: TrainConfig):
         return new_params, new_opt, metrics
 
     return train_step
+
+
+def audit_step(step_fn, params, opt_state, batch):
+    """Run ONE train step under a contraction audit and return
+    ``(step_outputs, ContractionCounter)``.
+
+    With the fs_einsum custom VJP in place the counter covers forward AND
+    backward contraction volume (sites ``<site>.bwd_x`` / ``<site>.bwd_w``),
+    so ``ctr.fraction_square`` is the square-routed fraction of *total*
+    train FLOPs and ``ctr.fraction_square_bwd`` gates backward coverage.
+    Notes fire at trace time: pass the first (tracing) call of a jitted
+    step or an eager step -- a cached re-execution warns and records
+    nothing (:class:`repro.core.counting.EmptyAuditWarning`).
+    """
+    with counting.track_contractions() as ctr:
+        out = step_fn(params, opt_state, batch)
+    return out, ctr
 
 
 def make_prefill_step(model, cache_len: int):

@@ -34,6 +34,10 @@ class TrainerConfig:
     keep: int = 3
     log_every: int = 10
     watchdog_factor: float = 3.0
+    # audit the first (tracing) step's contraction mix -- forward AND the
+    # custom-VJP backward sites -- into the run result (trace-time notes:
+    # a pre-traced step records nothing and the audit stays None)
+    audit_contractions: bool = True
 
 
 class Trainer:
@@ -50,6 +54,7 @@ class Trainer:
         self.step = 0
         self.metrics_log = []
         self.straggler_events = []
+        self.contraction_audit = None
         self._preempted = False
 
     # ------------------------------------------------------------- resume
@@ -81,8 +86,20 @@ class Trainer:
             while self.step < self.cfg.total_steps and not self._preempted:
                 batch = self.data.next_batch()
                 t0 = time.monotonic()
-                self.params, self.opt_state, metrics = self.train_step(
-                    self.params, self.opt_state, batch)
+                if steps_run == 0 and self.cfg.audit_contractions:
+                    # first call traces: the audit sees every fs_einsum of
+                    # the step, including the VJP's .bwd_x/.bwd_w sites
+                    # (allow_empty: a pre-traced step legitimately records
+                    # nothing -- the audit then just stays None)
+                    from repro.core import counting
+                    with counting.track_contractions(allow_empty=True) as ctr:
+                        self.params, self.opt_state, metrics = self.train_step(
+                            self.params, self.opt_state, batch)
+                    if ctr.records:
+                        self.contraction_audit = ctr.summary()
+                else:
+                    self.params, self.opt_state, metrics = self.train_step(
+                        self.params, self.opt_state, batch)
                 jax.block_until_ready(metrics["loss"])
                 dt = time.monotonic() - t0
                 steps_run += 1
@@ -110,4 +127,5 @@ class Trainer:
         return {"final_step": self.step,
                 "metrics": self.metrics_log,
                 "stragglers": self.straggler_events,
+                "contraction_audit": self.contraction_audit,
                 "preempted": self._preempted}

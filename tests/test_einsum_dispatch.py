@@ -178,6 +178,47 @@ def test_standard_forward_counts_zero_square():
     assert ctr.fraction_square == 0.0
 
 
+def test_cached_jit_audit_warns_instead_of_silent_zero():
+    """Contraction notes fire at TRACE time: auditing a pre-traced jitted
+    function records nothing.  That used to read as a silent
+    fraction_square of 0.0; now an empty track region warns loudly
+    (EmptyAuditWarning) unless the caller opted in with allow_empty."""
+    import warnings
+
+    import jax
+
+    f = jax.jit(lambda x, y: fs_einsum("tk,kn->tn", x, y,
+                                       mode="square_virtual", site="ffn"))
+    x = jnp.asarray(RNG.normal(size=(4, 5)).astype(np.float32))
+    y = jnp.asarray(RNG.normal(size=(5, 6)).astype(np.float32))
+    with counting.track_contractions() as ctr:
+        f(x, y)                              # first call traces: records
+    assert ctr.records and ctr.fraction_square == 1.0
+    with pytest.warns(counting.EmptyAuditWarning):
+        with counting.track_contractions() as ctr2:
+            f(x, y)                          # cached: nothing to record
+    assert not ctr2.records
+    # the trainer's first-step audit legitimately tolerates a pre-traced
+    # step: allow_empty opts out of the warning
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        with counting.track_contractions(allow_empty=True):
+            f(x, y)
+
+
+def test_bwd_site_policy_validation():
+    """Gradient sites validate like forward sites: a suffixed key must
+    hang off a real site, and lookup falls back bwd-site -> base site."""
+    with pytest.raises(ValueError):
+        ContractionPolicy.of(**{"ffnn.bwd_x": "standard"})   # typo'd base
+    with pytest.raises(ValueError):
+        ContractionPolicy.of(**{"ffn.bwd_z": "standard"})    # bad suffix
+    pol = ContractionPolicy.of(ffn="square_scan",
+                               **{"ffn.bwd_w": "standard"})
+    assert pol.lookup("ffn.bwd_x") == "square_scan"          # inherits
+    assert pol.lookup("ffn.bwd_w") == "standard"             # overridden
+
+
 def test_policy_of_validates_sites_and_modes():
     """A typo'd site or mode must fail loudly at construction, not be
     silently ignored at lookup time."""

@@ -244,6 +244,46 @@ def test_autotune_escape_hatch(tmp_path, monkeypatch):
     tuning.clear_cache()
 
 
+# The training bench's GEMM population (benchmarks/training.py model at
+# B=2, S=64): forward ffn pair at M = B*S*2 rows after attn concat, the
+# TRANSPOSED backward pair the custom VJP emits for dL/dx / dL/dW, and
+# the chunked vocab-grad trio (loss_chunk rows t=64 against v=4096).
+TRAINING_GEMMS = [           # (m, n, k), matching plan_matmul's order
+    (256, 256, 128),      # qkv/out fwd + bwd_x (square d_model block)
+    (256, 1024, 128),     # ffn up bwd pair
+    (1024, 256, 128),     # ffn down bwd pair (transposed partner)
+    (64, 4096, 256),      # chunked logits fwd (t x d @ d x v)
+    (64, 256, 4096),      # logits bwd_x (t x v @ v x d)
+    (4096, 256, 64),      # logits bwd_w (v x t @ t x d, transposed)
+]
+
+
+def test_training_shapes_served_from_committed_cache(monkeypatch):
+    """Every training-bench GEMM (forward, transposed-backward pair, and
+    vocab-grad trio) must hit the COMMITTED package cache: plan_matmul
+    serves the tuned plan with zero miss warnings, so a square_pallas
+    train step traces warning-free out of the box."""
+    import warnings
+
+    monkeypatch.delenv("REPRO_TUNING_CACHE", raising=False)
+    tuning.clear_cache()
+    cache = tuning.load_cache()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        for (m, n, k) in TRAINING_GEMMS:
+            key = f"sq_matmul:{m}x{n}x{k}:float32"
+            assert key in cache, f"committed cache missing {key}"
+            entry = cache[key]
+            plan = tuning.plan_matmul(m, n, k, jnp.float32,
+                                      pm_layout=entry["pm_layout"])
+            assert plan == tuning.TilePlan(
+                entry["bm"], entry["bn"], entry["bk"], entry["kc"],
+                entry["pm_layout"]), key
+    misses = [str(x.message) for x in w if "cache miss" in str(x.message)]
+    assert not misses, misses
+    tuning.clear_cache()
+
+
 @pytest.mark.parametrize("dtype", ["float32", "int8"])
 def test_batched_kernel_matches_unbatched(dtype):
     """The leading batch grid axis computes exactly the per-element 2D

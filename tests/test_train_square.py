@@ -1,0 +1,165 @@
+"""End-to-end square-routed training (the custom VJP under a real
+optimizer loop): fixed-seed loss equivalence vs the multiplier baseline,
+backward square-coverage acceptance, and guarded degradation in backward.
+
+Companion to tests/test_vjp_square.py (per-contraction gradcheck) -- here
+the unit is a full jitted train step: forward, custom-VJP backward, and
+AdamW, over the deterministic synthetic pipeline (both modes consume
+bit-identical batch streams, see SyntheticLM.take).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import counting, guards
+from repro.core.einsum import fs_einsum
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.kernels import routing
+from repro.models.lm import build_model
+from repro.optim import adamw
+from repro.train import step as step_mod
+from repro.train.trainer import Trainer, TrainerConfig
+
+RNG = np.random.default_rng(17)
+N_STEPS = 3
+
+
+def _cfg(mode):
+    return ModelConfig(
+        name="tiny-train", family="dense", n_layers=2, d_model=32,
+        n_heads=2, n_kv_heads=2, d_ff=64, vocab=128, head_dim=16,
+        dtype="float32", scan_layers=False, remat="none", attn_chunk_q=16,
+        attn_chunk_kv=16, loss_chunk=16, max_seq=64, matmul_mode=mode)
+
+
+def _setup(mode):
+    cfg = _cfg(mode)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.adamw_init(params)
+    data = SyntheticLM(DataConfig(global_batch=2, seq_len=32,
+                                  vocab=cfg.vocab, seed=5), cfg)
+    step = jax.jit(step_mod.make_train_step(model, step_mod.TrainConfig()))
+    return step, params, opt, data.take(N_STEPS)
+
+
+def _run(mode):
+    step, params, opt, batches = _setup(mode)
+    losses = []
+    for batch in batches:
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(np.asarray(metrics["loss"])))
+    jax.block_until_ready(params)
+    return losses, params
+
+
+def test_loss_trajectory_square_matches_standard():
+    """N fixed-seed AdamW steps: the square-routed trajectory tracks the
+    multiplier baseline to reassociation tolerance (the square route
+    changes the add order of every contraction, forward and backward --
+    nothing else)."""
+    std, _ = _run("standard")
+    sq, _ = _run("square_virtual")
+    assert np.isfinite(std).all() and np.isfinite(sq).all()
+    np.testing.assert_allclose(sq, std, rtol=2e-3, atol=2e-3)
+
+
+def test_fixed_seed_square_run_is_deterministic():
+    """Two identical square-routed runs are BIT-identical (the trajectory
+    fingerprint BENCH_training.json tracks is stable on one host)."""
+    l1, p1 = _run("square_virtual")
+    l2, p2 = _run("square_virtual")
+    assert adamw.tree_fingerprint(np.asarray(l1, np.float32)) == \
+        adamw.tree_fingerprint(np.asarray(l2, np.float32))
+    assert adamw.tree_fingerprint(p1) == adamw.tree_fingerprint(p2)
+
+
+def test_train_step_backward_fraction_90pct():
+    """Acceptance: a square_virtual train step square-routes >= 90% of
+    its TOTAL contraction FLOPs AND >= 90% of backward volume -- the
+    custom VJP's ``.bwd_x`` / ``.bwd_w`` sites are first-class audit
+    entries, captured from the first (tracing) jitted call."""
+    step, params, opt, batches = _setup("square_virtual")
+    (p1, _, metrics), ctr = step_mod.audit_step(step, params, opt,
+                                                batches[0])
+    assert bool(np.isfinite(np.asarray(metrics["loss"])))
+    assert ctr.total_mults > 0 and ctr.bwd_mults > 0
+    assert ctr.fraction_square >= 0.9
+    assert ctr.fraction_square_bwd >= 0.9
+    sites = set(ctr.by_site())
+    assert any(s.endswith(".bwd_x") for s in sites)
+    assert any(s.endswith(".bwd_w") for s in sites)
+
+
+def test_trainer_surfaces_backward_audit(tmp_path):
+    """The Trainer's first-step audit lands in the run result with
+    backward coverage visible (the production observability hook)."""
+    cfg = _cfg("square_virtual")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.adamw_init(params)
+    data = SyntheticLM(DataConfig(global_batch=2, seq_len=32,
+                                  vocab=cfg.vocab, seed=5), cfg)
+    step = jax.jit(step_mod.make_train_step(model, step_mod.TrainConfig()))
+    trainer = Trainer(TrainerConfig(total_steps=2, ckpt_every=100,
+                                    ckpt_dir=str(tmp_path), log_every=1),
+                      step, params, opt, data)
+    result = trainer.run()
+    audit = result["contraction_audit"]
+    assert audit is not None
+    assert audit["fraction_square"] >= 0.9
+    assert audit["fraction_square_bwd"] >= 0.9
+    assert audit["bwd_mults"] > 0
+
+
+def test_guard_trip_in_backward_demotes_and_completes():
+    """Chaos case: a backward contraction whose square route saturates
+    (cotangent ~1e22, so the materialized ``(g+w)^2`` is inf in f32)
+    under an enabled guard must complete the step on the standard route
+    -- gradients finite and correct, the demotion audit-visible on the
+    ``.bwd_*`` site -- without poisoning the forward site.  Uses
+    ``square_exact``: the PM-datapath emulation actually squares, so it
+    has the saturation regime (``square_virtual`` cancels the
+    corrections algebraically and cannot trip here)."""
+    routing.reset_route_health()
+    x = jnp.asarray(RNG.normal(size=(8, 16)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(16, 4)).astype(np.float32))
+
+    def loss(x):
+        out = fs_einsum("mk,kn->mn", x, w, mode="square_exact",
+                        site="chaos")
+        return jnp.sum(out) * 1e22          # backward cotangent ~1e22
+
+    try:
+        with guards.guarded(trip_limit=1):
+            with counting.track_contractions() as ctr:
+                dx = jax.grad(loss)(x)      # eager: the guard can fire
+        assert bool(jnp.isfinite(dx).all())
+        # the demoted backward result IS the standard-route gradient
+        ref = jax.grad(lambda x: jnp.sum(jnp.einsum("mk,kn->mn", x, w))
+                       * 1e22)(x)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(ref),
+                                   rtol=1e-5)
+        demoted = ctr.demoted_sites()
+        assert any(s.startswith("chaos.bwd_") for s in demoted)
+        assert "chaos" not in demoted       # forward site untouched
+        modes = {r.site: (r.mode, r.demoted) for r in ctr.records}
+        assert modes["chaos"] == ("square_exact", False)
+    finally:
+        routing.reset_route_health()
+
+
+def test_guard_trip_does_not_leak_into_next_run():
+    """After reset_route_health a fresh square-routed backward at sane
+    magnitudes serves square again (no sticky demotion across tests)."""
+    routing.reset_route_health()
+    x = jnp.asarray(RNG.normal(size=(4, 8)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(8, 4)).astype(np.float32))
+    loss = lambda x: jnp.sum(fs_einsum("mk,kn->mn", x, w,
+                                       mode="square_virtual", site="chaos"))
+    with guards.guarded(trip_limit=1):
+        with counting.track_contractions() as ctr:
+            jax.grad(loss)(x)
+    assert ctr.demoted_sites() == []
+    assert ctr.fraction_square == 1.0

@@ -1,0 +1,365 @@
+"""Gradient-correctness harness for the fs_einsum custom VJP.
+
+``jax.grad`` of any fs_einsum call must match ``jax.grad`` of the
+``jnp.einsum`` reference in EVERY fair-square mode, across the full
+call-site spec population (batched, ellipsis, transposed, reduced) --
+the square route may reassociate, nothing else.  The suite covers:
+
+- analytic gradcheck vs the multiplier reference, all 5 modes x
+  f32/bf16 x every spec in test_einsum_dispatch.CALL_SITE_SPECS;
+- the prepared-operand path (transposed tied-embedding logits with
+  ``prepare_grads=True``), where dL/dx consumes the opposite-layout
+  gradient prep and dL/dW rides the cotangent's ``source`` leaf;
+- ``jax.jit(jax.grad(...))`` cached-trace re-execution;
+- backward sites as first-class planner citizens: ``<site>.bwd_x`` /
+  ``<site>.bwd_w`` audit entries, per-direction policy overrides, and
+  the ``REPRO_EINSUM_VJP=0`` escape hatch;
+- finite-difference spot checks in the extreme-magnitude regime pinned
+  by test_squares_extremes.py: gradients are trustworthy right up to
+  the ``(a+b)^2`` saturation boundary, and fail EXACTLY where the
+  forward fails (the regime core/guards demotes).
+
+Property-based shape fuzzing rides hypothesis when the host has it and
+falls back to a seeded deterministic sweep when it does not (the image
+may not ship hypothesis; the sweep keeps the coverage either way).
+
+Tolerances: f32 gradients match within 1e-5 relative (tiny contraction
+depths here; reassociation error is O(K) ulps).  bf16 grads compare at
+5e-2 against a reference computed from the same bf16-rounded operands
+-- the operands quantize to 8-bit mantissas BEFORE either route runs,
+so the comparison isolates route error from input quantization, same
+stance as the forward suite.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ContractionPolicy
+from repro.core import counting
+from repro.core.einsum import fs_einsum, vjp_enabled
+from repro.core.matmul import MODES
+from repro.core.prepared import prepare_operand
+
+from test_einsum_dispatch import CALL_SITE_SPECS
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # image may lack it
+    HAVE_HYPOTHESIS = False
+
+RNG = np.random.default_rng(29)
+
+
+def _operands(spec, xs, ys, np_dtype=np.float32):
+    x = RNG.normal(size=xs).astype(np_dtype)
+    y = RNG.normal(size=ys).astype(np_dtype)
+    cot = RNG.normal(size=np.einsum(spec, x, y).shape).astype(np.float32)
+    return x, y, cot
+
+
+def _grad_pair(spec, mode, x, y, cot):
+    """(fs_einsum grads, jnp.einsum reference grads) for one call."""
+    c = jnp.asarray(cot)
+
+    def loss_fs(x, y):
+        return jnp.sum(fs_einsum(spec, x, y, mode=mode)
+                       .astype(jnp.float32) * c)
+
+    def loss_ref(x, y):
+        return jnp.sum(jnp.einsum(spec, x, y).astype(jnp.float32) * c)
+
+    got = jax.grad(loss_fs, argnums=(0, 1))(jnp.asarray(x), jnp.asarray(y))
+    ref = jax.grad(loss_ref, argnums=(0, 1))(jnp.asarray(x), jnp.asarray(y))
+    return got, ref
+
+
+# --------------------------------------------------------------- gradcheck
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("spec,xs,ys", CALL_SITE_SPECS,
+                         ids=[s for s, _, _ in CALL_SITE_SPECS])
+def test_call_site_grads_f32(spec, xs, ys, mode):
+    x, y, cot = _operands(spec, xs, ys)
+    (dx, dy), (rx, ry) = _grad_pair(spec, mode, x, y, cot)
+    assert dx.dtype == jnp.float32 and dy.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(rx),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dy), np.asarray(ry),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("spec,xs,ys", CALL_SITE_SPECS[:10],
+                         ids=[s for s, _, _ in CALL_SITE_SPECS[:10]])
+def test_call_site_grads_bf16(spec, xs, ys, mode):
+    """bf16 grads stay in bf16 (cast at the VJP boundary) and match the
+    reference from the same bf16-rounded operands at 5e-2 (see module
+    docstring for the tolerance rationale)."""
+    x, y, cot = _operands(spec, xs, ys)
+    xb, yb = jnp.asarray(x, jnp.bfloat16), jnp.asarray(y, jnp.bfloat16)
+    (dx, dy), (rx, ry) = _grad_pair(spec, mode, xb, yb, cot)
+    assert dx.dtype == jnp.bfloat16 and dy.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(dx, np.float32),
+                               np.asarray(rx, np.float32),
+                               rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(dy, np.float32),
+                               np.asarray(ry, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_jit_grad_cached_trace():
+    """jax.jit(jax.grad(...)) executes the custom VJP through a cached
+    trace: fresh operands through the SAME compiled executable must give
+    fresh correct gradients."""
+    spec, xs, ys = "bsd,vd->bsv", (2, 4, 5), (9, 5)
+
+    @jax.jit
+    def grads(x, y):
+        loss = lambda x, y: jnp.sum(
+            fs_einsum(spec, x, y, mode="square_virtual", site="logits") ** 2)
+        return jax.grad(loss, argnums=(0, 1))(x, y)
+
+    for _ in range(3):                                # 1 trace + 2 cached
+        x = jnp.asarray(RNG.normal(size=xs).astype(np.float32))
+        y = jnp.asarray(RNG.normal(size=ys).astype(np.float32))
+        dx, dy = grads(x, y)
+        loss_ref = lambda x, y: jnp.sum(jnp.einsum(spec, x, y) ** 2)
+        rx, ry = jax.grad(loss_ref, argnums=(0, 1))(x, y)
+        np.testing.assert_allclose(np.asarray(dx), np.asarray(rx),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(dy), np.asarray(ry),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------- prepared operands
+def test_prepared_transposed_logits_grads():
+    """The tied-embedding vocab GEMM with a gradient-prepared weight:
+    dL/dx consumes the opposite-layout ``grad`` prep, dL/dW arrives on
+    the cotangent's ``source`` leaf, and both backward contractions audit
+    as first-class square-routed sites."""
+    x = jnp.asarray(RNG.normal(size=(6, 5)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(9, 5)).astype(np.float32))   # (V, D)
+    prep = prepare_operand(w, transpose=True, m_hint=6, site="logits",
+                           prepare_grads=True)
+    assert prep.grad is not None and prep.grad.transposed is False
+    assert prep.grad.site == "logits.bwd_x"
+
+    def loss(x, p):
+        return jnp.sum(fs_einsum("td,vd->tv", x, p, mode="square_virtual",
+                                 site="logits") ** 2)
+
+    with counting.track_contractions() as ctr:
+        dx, dprep = jax.grad(loss, argnums=(0, 1))(x, prep)
+    loss_ref = lambda x, w: jnp.sum(jnp.einsum("td,vd->tv", x, w) ** 2)
+    rx, rw = jax.grad(loss_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(rx),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(dprep.source), np.asarray(rw),
+                               rtol=1e-5, atol=1e-5)
+    sites = ctr.by_site()
+    assert {"logits", "logits.bwd_x", "logits.bwd_w"} <= set(sites)
+    assert ctr.fraction_square_bwd == 1.0
+
+
+# ------------------------------------------- backward sites as call sites
+def test_bwd_sites_audited_and_policy_overridable():
+    """Each gradient is a first-class planner site: ``<site>.bwd_x`` /
+    ``<site>.bwd_w`` inherit the forward site's policy pin unless
+    overridden per direction."""
+    x = jnp.asarray(RNG.normal(size=(4, 5)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(5, 6)).astype(np.float32))
+    pol = ContractionPolicy.of(ffn="square_virtual",
+                               **{"ffn.bwd_w": "standard"})
+
+    def loss(x, w):
+        return jnp.sum(fs_einsum("tk,kn->tn", x, w, policy=pol, site="ffn"))
+
+    with counting.track_contractions() as ctr:
+        jax.grad(loss, argnums=(0, 1))(x, w)
+    modes = {r.site: r.mode for r in ctr.records}
+    assert modes["ffn"] == "square_virtual"
+    assert modes["ffn.bwd_x"] == "square_virtual"     # inherits ffn's pin
+    assert modes["ffn.bwd_w"] == "standard"           # per-direction override
+    assert ctr.bwd_mults > 0
+    assert 0.0 < ctr.fraction_square_bwd < 1.0
+
+
+def test_vjp_escape_hatch(monkeypatch):
+    """REPRO_EINSUM_VJP=0 reverts to mechanical differentiation: grads
+    still correct, but no ``.bwd_*`` audit entries exist (the pre-VJP
+    behavior, kept reachable for bisection)."""
+    monkeypatch.setenv("REPRO_EINSUM_VJP", "0")
+    assert not vjp_enabled()
+    x = jnp.asarray(RNG.normal(size=(4, 5)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(5, 6)).astype(np.float32))
+    loss = lambda x, w: jnp.sum(
+        fs_einsum("tk,kn->tn", x, w, mode="square_virtual", site="ffn"))
+    with counting.track_contractions() as ctr:
+        dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(lambda x, w: jnp.sum(jnp.einsum("tk,kn->tn", x, w)),
+                      argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(rx), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(rw), rtol=1e-5)
+    assert not any(".bwd_" in s for s in ctr.by_site())
+    assert ctr.bwd_mults == 0
+
+
+def test_second_order_grads_match():
+    """grad-of-grad re-enters the custom VJP under trace: second-order
+    derivatives of a square-routed quadratic match the reference."""
+    x = jnp.asarray(RNG.normal(size=(3, 4)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(4, 2)).astype(np.float32))
+    f = lambda x: jnp.sum(fs_einsum("mk,kn->mn", x, w,
+                                    mode="square_virtual") ** 2)
+    g = lambda x: jnp.sum(jnp.einsum("mk,kn->mn", x, w) ** 2)
+    hvp_f = jax.grad(lambda x: jnp.sum(jax.grad(f)(x) * x))(x)
+    hvp_g = jax.grad(lambda x: jnp.sum(jax.grad(g)(x) * x))(x)
+    np.testing.assert_allclose(np.asarray(hvp_f), np.asarray(hvp_g),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------- extreme-magnitude regime
+PM_BOUNDARY = float(np.sqrt(np.finfo(np.float32).max))   # ~1.8447e19
+
+
+def _fd_grad(f, x, h):
+    """Central finite differences, element by element (tiny operands)."""
+    x = np.asarray(x, np.float32)
+    g = np.zeros_like(x)
+    it = np.nditer(x, flags=["multi_index"])
+    for _ in it:
+        i = it.multi_index
+        xp, xm = x.copy(), x.copy()
+        xp[i] += h
+        xm[i] -= h
+        g[i] = (float(f(jnp.asarray(xp))) - float(f(jnp.asarray(xm)))) / (2 * h)
+    return g
+
+
+def test_fd_spot_check_moderate_scale():
+    """Finite-difference gradcheck at O(1) magnitudes: the analytic VJP
+    is the derivative of the function actually computed."""
+    x = RNG.normal(size=(3, 4)).astype(np.float32)
+    w = jnp.asarray(RNG.normal(size=(4, 2)).astype(np.float32))
+    f = lambda x: jnp.sum(fs_einsum("mk,kn->mn", x, w, mode="square_exact"))
+    fd = _fd_grad(f, x, h=1e-2)
+    an = np.asarray(jax.grad(f)(jnp.asarray(x)))
+    np.testing.assert_allclose(an, fd, rtol=5e-3, atol=5e-3)
+
+
+def test_fd_spot_check_below_saturation_boundary():
+    """Just below the ``(a+b)^2`` boundary (operands ~1e18, squares
+    ~4e36 < f32_max) the square route's gradients are still trustworthy
+    -- PROVIDED the cotangent magnitude is matched to the operands.  The
+    PM identity recovers ``2ab`` by cancellation against ``a^2 + b^2``,
+    so a backward pairing ~1e18 weights with an O(1) cotangent loses the
+    product below the ulp of ``w^2`` (relative error ~ eps * max^2 / ab;
+    the square route's dynamic-range caveat, documented in
+    docs/training.md).  With matched magnitudes the analytic VJP matches
+    both finite differences (computed in f64 on host -- the loose tol is
+    FD cancellation at a ~1e54 loss, not route error) and the tight
+    multiplier-reference VJP."""
+    scale = 1e18
+    x = (RNG.uniform(0.5, 1.5, size=(2, 3)).astype(np.float32)) * scale
+    w = jnp.asarray(RNG.uniform(0.5, 1.5, (3, 2)).astype(np.float32) * scale)
+    c = RNG.uniform(0.5, 1.5, size=(2, 2)).astype(np.float32) * scale
+
+    f = lambda x: fs_einsum("mk,kn->mn", x, w, mode="square_exact")
+    _, vjp = jax.vjp(f, jnp.asarray(x))
+    an = np.asarray(vjp(jnp.asarray(c))[0])
+    assert np.isfinite(an).all()
+
+    # FD of the scalar <f(x), c>, inner product taken in f64 on host (the
+    # ~1e54 loss overflows f32 but not the derivative check)
+    def s(xa):
+        return float(np.vdot(np.asarray(f(jnp.asarray(xa)), np.float64),
+                             np.asarray(c, np.float64)))
+
+    h = 1e14                                          # ~1e-4 relative step
+    fd = np.zeros_like(x)
+    for i in np.ndindex(x.shape):
+        xp, xm = x.copy(), x.copy()
+        xp[i] += h
+        xm[i] -= h
+        fd[i] = (s(xp) - s(xm)) / (2 * h)
+    np.testing.assert_allclose(an, fd, rtol=5e-2)
+
+    # tight analytic cross-check at the same magnitudes
+    _, rvjp = jax.vjp(lambda x: jnp.einsum("mk,kn->mn", x, w),
+                      jnp.asarray(x))
+    np.testing.assert_allclose(an, np.asarray(rvjp(jnp.asarray(c))[0]),
+                               rtol=1e-5)
+
+
+def test_grads_saturate_exactly_where_forward_does():
+    """Above the boundary the square route's FORWARD is already inf
+    (test_squares_extremes pins this), so its gradients are non-finite
+    too, while the standard route's grads survive -- the square route
+    fails first, backward included: the regime the backward route-health
+    guard demotes."""
+    k = 2
+    xv = np.full((2, k), 1.1e19, np.float32)
+    xv[:, 1::2] *= -1.0                               # products cancel
+    x = jnp.asarray(xv)
+    w = jnp.asarray(np.full((k, 2), 1.1e19, np.float32))
+    c = jnp.asarray(np.full((2, 2), 1.1e19, np.float32))   # matched cotangent
+
+    f_sq = lambda x: fs_einsum("mk,kn->mn", x, w, mode="square_exact")
+    f_std = lambda x: fs_einsum("mk,kn->mn", x, w, mode="standard")
+    out_sq, vjp_sq = jax.vjp(f_sq, x)
+    out_std, vjp_std = jax.vjp(f_std, x)
+    assert not bool(jnp.isfinite(out_sq).all())       # forward saturates...
+    assert not bool(jnp.isfinite(vjp_sq(c)[0]).all())  # (c+w)^2 > f32_max
+    assert bool(jnp.isfinite(out_std).all())          # ...standard survives
+    assert bool(jnp.isfinite(vjp_std(c)[0]).all())    # c*w ~ 1.2e38 finite
+
+
+# ------------------------------------------------- property-based fuzzing
+SQUARE_MODES = [m for m in MODES if m != "standard"]
+
+
+def _random_matmul_case(rng):
+    """A random (possibly batched / transposed-y / summed-out) contraction."""
+    b = int(rng.integers(0, 3))                       # batch rank 0..2
+    m, k, n = (int(rng.integers(1, 7)) for _ in range(3))
+    bdims = "ZY"[:b]
+    bshape = tuple(int(rng.integers(1, 4)) for _ in bdims)
+    transpose_y = bool(rng.integers(0, 2)) and b == 0
+    x_extra = bool(rng.integers(0, 2))                # an x-only summed index
+    xs = bdims + "mk" + ("s" if x_extra else "")
+    ys = ("nk" if transpose_y else bdims + "kn")
+    out = bdims + "mn"
+    spec = f"{xs},{ys}->{out}"
+    x_shape = bshape + (m, k) + ((2,) if x_extra else ())
+    y_shape = (n, k) if transpose_y else bshape + (k, n)
+    return spec, x_shape, y_shape
+
+
+def _check_random_case(spec, x_shape, y_shape, mode):
+    x, y, cot = _operands(spec, x_shape, y_shape)
+    (dx, dy), (rx, ry) = _grad_pair(spec, mode, x, y, cot)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(rx),
+                               rtol=1e-5, atol=1e-5, err_msg=spec)
+    np.testing.assert_allclose(np.asarray(dy), np.asarray(ry),
+                               rtol=1e-5, atol=1e-5, err_msg=spec)
+
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2**31 - 1), mode=st.sampled_from(SQUARE_MODES))
+    @settings(max_examples=30, deadline=None)
+    def test_property_random_contractions(seed, mode):
+        """Hypothesis sweep: any sampled contraction spec/shape family has
+        square-routed grads matching the multiplier reference."""
+        spec, x_shape, y_shape = _random_matmul_case(
+            np.random.default_rng(seed))
+        _check_random_case(spec, x_shape, y_shape, mode)
+else:
+    @pytest.mark.parametrize("seed", range(12))
+    @pytest.mark.parametrize("mode", ["square_virtual", "square_exact"])
+    def test_property_random_contractions_fallback(seed, mode):
+        """Deterministic stand-in for the hypothesis sweep on hosts
+        without hypothesis installed (same generator, fixed seeds)."""
+        spec, x_shape, y_shape = _random_matmul_case(
+            np.random.default_rng(1000 + seed))
+        _check_random_case(spec, x_shape, y_shape, mode)
