@@ -13,25 +13,45 @@ One small-but-real LM runs N fixed-seed AdamW steps under three modes:
                         interpret host; exercises the training-shaped
                         tuning-cache entries so the row runs warning-free).
 
+A fourth row, ``train_step_square_guarded[jit]``, runs the same
+square-virtual step through :class:`repro.train.step.GuardedStep` -- the
+compiled numerics guard (host-callback finite probes + drain/demote/
+re-jit, docs/robustness.md) -- and is gated near unguarded parity with
+``guard_trips == 0`` on this clean run: the guard must cost ~nothing
+until it fires, and must not perturb the bit trajectory.
+
 Reported per row: steady-state step time (jitted, trace excluded,
 interleaved across modes so the gated ratio is immune to runner-load
-drift), the fraction of TOTAL train FLOPs square-routed via
-``core/counting`` (forward + backward, from the first tracing call), the
-backward-only square fraction, and the loss-curve **bit-trajectory
-hash** over the N steps (:func:`repro.optim.adamw.tree_fingerprint` of
-the per-step loss sequence -- bit-identical across runs on one host, so
-trajectory drift across commits is visible in the JSON diff).
+drift), the fraction of TOTAL train FLOPs square-routed (forward + the
+custom-VJP backward), the backward-only square fraction, and the
+loss-curve **bit-trajectory hash** over the N steps
+(:func:`repro.optim.adamw.tree_fingerprint` of the per-step loss
+sequence -- bit-identical across runs on one host, so trajectory drift
+across commits is visible in the JSON diff).
+
+The square fractions come from the COMPILED audit
+(:func:`repro.core.counting.track_compiled_contractions` over a trace
+made under :func:`~repro.core.counting.compiled_audit`): they cover
+every executed step of the trajectory, cached-jit executions included.
+The bench previously audited only the first (tracing) call -- steps
+2..N ran entirely unobserved -- and the old trace-time path on a cached
+step still warns-and-zeros (:class:`~repro.core.counting
+.EmptyAuditWarning`), which this bench asserts on every run so the
+pre-fix blind spot stays pinned.
 
 ``BENCH_training.json`` feeds ``run.py --check``: the square-routed step
-must hold ``speedup_vs_standard >= 1.0 - tol`` and the square row's
+must hold ``speedup_vs_standard >= 1.0 - tol``, the square row's
 backward fraction must stay >= 0.9 (a VJP regression that silently
-reroutes backward GEMMs to the multiplier baseline fails here).
+reroutes backward GEMMs to the multiplier baseline fails here), and the
+guarded row must hold near-parity vs the unguarded square row with zero
+trips and an identical bit trajectory.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import time
+import warnings
 from typing import Dict, List
 
 import numpy as np
@@ -39,6 +59,7 @@ import numpy as np
 import jax
 
 from repro.configs.base import ContractionPolicy, ModelConfig
+from repro.core import counting
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models.lm import build_model
 from repro.optim import adamw
@@ -74,14 +95,25 @@ DATA_SEED = 123
 # bench's LONG_ROW_TOL_FLOOR; see docs/tuning.md).
 TRAIN_ROW_TOL_FLOOR = 0.2
 
-# Modes in the bench: (row key, matmul_mode, gated?)
+# Floor for the guarded-vs-unguarded parity gate: the clean-path guard
+# overhead is the in-graph probe reduces plus one effects_barrier drain
+# per step -- host-callback latency the interpret host cannot hide
+# (~0.77x unguarded measured here; the floor leaves noise headroom
+# while still catching a guard whose happy path goes catastrophic).
+GUARDED_ROW_TOL_FLOOR = 0.4
+
+# Modes in the bench: (row key, matmul_mode); the square_guarded row is
+# derived from square_virtual via GuardedStep in training_rows().
 MODES = (("standard", "standard"),
          ("square_virtual", "square_virtual"),
          ("square_pallas", "square_pallas"))
 
 
 def _setup(mode: str):
-    """(jitted step, params, opt_state, batches) for one mode."""
+    """(raw step fn, params, opt_state, batches) for one mode.  The raw
+    (unjitted) builder output is returned so callers control the jit:
+    the timing closure, the compiled-audit closure and the GuardedStep
+    wrapper each need their own trace."""
     if mode == "standard":
         cfg = dataclasses.replace(BENCH_CFG, matmul_mode="standard",
                                   contraction_policy=None)
@@ -93,8 +125,37 @@ def _setup(mode: str):
     data = SyntheticLM(DataConfig(global_batch=BATCH, seq_len=SEQ,
                                   vocab=cfg.vocab, seed=DATA_SEED), cfg)
     batches = data.take(N_STEPS)
-    step = jax.jit(step_mod.make_train_step(model, step_mod.TrainConfig()))
-    return step, params, opt, batches
+    raw = step_mod.make_train_step(model, step_mod.TrainConfig())
+    return raw, params, opt, batches
+
+
+def _compiled_fractions(raw, params, opt, batches):
+    """Square fractions covering EVERY step of the trajectory (the
+    compiled audit: runtime notes fire per execution, cached or not),
+    plus a pinned demonstration that the old trace-time audit of a
+    cached step warns-and-zeros -- the pre-fix bench reported fractions
+    for the tracing call only."""
+    with counting.compiled_audit():
+        audited = jax.jit(lambda *a: raw(*a))
+        p1, o1, _ = audited(params, opt, batches[0])      # trace + run
+        jax.block_until_ready(p1)
+    with counting.track_compiled_contractions() as ctr:
+        p, o = params, opt
+        for batch in batches:
+            p, o, metrics = audited(p, o, batch)
+        jax.block_until_ready(p)
+
+    # the OLD audit path on the (now cached) step: zero notes + warning
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        _, old_ctr = step_mod.audit_step(audited, params, opt, batches[0])
+    assert old_ctr.total_mults == 0, \
+        "trace-time audit unexpectedly saw a cached-jit execution"
+    assert any(issubclass(c.category, counting.EmptyAuditWarning)
+               for c in caught), \
+        "EmptyAuditWarning pin lost: the trace-time audit of a cached " \
+        "step no longer warns"
+    return ctr
 
 
 def _run_steps(step, params, opt, batches):
@@ -108,13 +169,16 @@ def _run_steps(step, params, opt, batches):
 
 
 def training_rows() -> List[Dict]:
-    """Measure the three train-step configurations; returns BENCH rows."""
+    """Measure the train-step configurations; returns BENCH rows."""
     runs: Dict[str, Dict] = {}
     for key, mode in MODES:
-        step, params, opt, batches = _setup(mode)
-        # First call traces: audit it -- the counter sees every forward
-        # AND custom-VJP backward contraction of one full train step.
-        (p1, o1, _), ctr = step_mod.audit_step(step, params, opt, batches[0])
+        raw, params, opt, batches = _setup(mode)
+        # Compiled audit (separate trace): fractions over the WHOLE
+        # trajectory -- every step observed, not just the tracing call.
+        ctr = _compiled_fractions(raw, params, opt, batches)
+        # Clean timing closure: no baked runtime notes, no probes.
+        step = jax.jit(raw)
+        p1, o1, _ = step(params, opt, batches[0])       # trace
         jax.block_until_ready(p1)
         losses, final = _run_steps(step, params, opt, batches)
         runs[key] = {
@@ -128,12 +192,34 @@ def training_rows() -> List[Dict]:
             "params_hash": adamw.tree_fingerprint(final),
         }
 
+    # The guarded row: the SAME square-virtual step under the compiled
+    # numerics guard (probes baked into the trace, pending-trip drain
+    # after every call).  A clean run must be trip-free and bit-identical
+    # to the unguarded square row -- the guard's cost is the probe
+    # reduces + one effects_barrier per step, gated near parity below.
+    raw_sq, params, opt, batches = _setup("square_virtual")
+    guarded = step_mod.GuardedStep(raw_sq, jit=True)
+    p1, o1, _ = guarded(params, opt, batches[0])        # trace
+    jax.block_until_ready(p1)
+    losses_g, final_g = _run_steps(guarded, params, opt, batches)
+    runs["square_guarded"] = {
+        "step": guarded, "params": params, "opt": opt, "batches": batches,
+        "fraction_square": runs["square_virtual"]["fraction_square"],
+        "fraction_square_bwd": runs["square_virtual"]["fraction_square_bwd"],
+        "bwd_mults": runs["square_virtual"]["bwd_mults"],
+        "losses": losses_g,
+        "loss_traj_hash": adamw.tree_fingerprint(
+            np.asarray(losses_g, np.float32)),
+        "params_hash": adamw.tree_fingerprint(final_g),
+    }
+
     # Steady-state step timing on the already-traced closures, modes
     # interleaved per rep so the gated standard/square ratio is a
     # same-process, load-drift-immune quantity.
-    best_s = {key: float("inf") for key, _ in MODES}
+    keys = [key for key, _ in MODES] + ["square_guarded"]
+    best_s = {key: float("inf") for key in keys}
     for _ in range(3):
-        for key, _mode in MODES:
+        for key in keys:
             r = runs[key]
             t0 = time.monotonic()
             _run_steps(r["step"], r["params"], r["opt"], r["batches"])
@@ -141,7 +227,7 @@ def training_rows() -> List[Dict]:
             best_s[key] = min(best_s[key], dt)
 
     rows = []
-    for key, mode in MODES:
+    for key, mode in MODES + (("square_guarded", "square_virtual"),):
         r = runs[key]
         row = {
             "name": f"train_step_{key}[jit]",
@@ -162,6 +248,12 @@ def training_rows() -> List[Dict]:
         if key != "standard":
             row["speedup_vs_standard"] = \
                 best_s["standard"] / best_s[key] if best_s[key] else 0.0
+        if key == "square_guarded":
+            stats = runs["square_guarded"]["step"].stats()
+            row["guard_trips"] = stats["guard_trips"]
+            row["guard_rejits"] = stats["rejits"]
+            row["speedup_vs_unguarded"] = \
+                best_s["square_virtual"] / best_s[key] if best_s[key] else 0.0
         rows.append(row)
     return rows
 
@@ -193,6 +285,15 @@ def check_training(payload: Dict, tol: float) -> List[str]:
       bit-trajectory hash present (trajectory drift shows as a hash
       change in the committed JSON).
 
+    The guarded row (``train_step_square_guarded[jit]``) is gated on
+    three axes: **near-parity** vs the unguarded square row
+    (``speedup_vs_unguarded >= 1.0 - max(tol, GUARDED_ROW_TOL_FLOOR)``
+    -- the clean-path cost of the baked probes + per-step drain),
+    **zero guard trips** on this clean run (a tripping bench means the
+    probes are firing on healthy numerics), and a **bit trajectory
+    identical** to the unguarded square row (the guard must observe,
+    never perturb).
+
     The ``square_pallas`` row is informational on interpret hosts (same
     near-parity story as the fused conv/paged-attn kernels -- the kernel
     regime is the TPU; see docs/tuning.md) and is NOT time-gated.
@@ -216,6 +317,23 @@ def check_training(payload: Dict, tol: float) -> List[str]:
                 f"training: backward square fraction "
                 f"{sq.get('fraction_square_bwd', 0.0):.2f} < 0.90 "
                 f"(custom-VJP backward not square-routed)")
+    g = rows.get("train_step_square_guarded[jit]")
+    if g is None:
+        failures.append("training: square_guarded row missing")
+    else:
+        gtol = max(tol, GUARDED_ROW_TOL_FLOOR)
+        ratio = g.get("speedup_vs_unguarded", 0.0)
+        if ratio < 1.0 - gtol:
+            failures.append(f"training: guarded step ratio {ratio:.2f} < "
+                            f"{1.0 - gtol:.2f} vs unguarded square")
+        if g.get("guard_trips", -1) != 0:
+            failures.append(f"training: guarded clean run tripped "
+                            f"{g.get('guard_trips')} time(s) (expected 0)")
+        if sq is not None and \
+                g.get("loss_traj_hash") != sq.get("loss_traj_hash"):
+            failures.append("training: guarded loss trajectory diverged "
+                            "from the unguarded square row (the guard "
+                            "must observe, never perturb)")
     for name, row in rows.items():
         if not row.get("losses_finite", False):
             failures.append(f"training: {name} loss trajectory not finite")

@@ -27,6 +27,16 @@ echo "== chaos suite (fixed-seed fault injection + guard rails) =="
 REPRO_CHAOS_SEEDS="${REPRO_CHAOS_SEEDS:-0,1,2}" python -m pytest -q \
   tests/test_faults.py tests/test_guards.py tests/test_paged_chaos.py
 
+echo "== trainer chaos (kill/resume, rollback, compiled guard) =="
+# the training twin of the serving chaos gate: every seeded schedule of
+# step failures, NaN updates, checkpoint-write crashes and kills must
+# end bit-identical to the unfaulted run, and the compiled (jit-visible)
+# numerics guard must demote + retry deterministically -- see
+# docs/robustness.md
+REPRO_CHAOS_SEEDS="${REPRO_CHAOS_SEEDS:-0,1,2}" python -m pytest -q \
+  tests/test_train_chaos.py tests/test_checkpoint_robust.py \
+  tests/test_compiled_guard.py
+
 echo "== paged-attention kernel equivalence + windowed eviction =="
 # the serving-read contract: kernel route greedy-token-identical to the
 # gather route (MHA/GQA/SWA/MoE), SWA eviction logit-invisible with the

@@ -1,11 +1,31 @@
-"""Mesh-agnostic checkpointing with atomic commits, keep-K GC, async save,
-and auto-resume.
+"""Mesh-agnostic checkpointing: atomic, checksummed, crash-consistent.
 
 Layout (one directory per step):
-    <dir>/step_000042.tmp/...   -> written, fsynced, then atomically renamed
-    <dir>/step_000042/
-        meta.json               (step, data-iterator state, param tree spec)
+    <dir>/step_000000042.<pid>.<tid>.tmp/...  -> written, fsynced, then
+    <dir>/step_000000042/                        atomically renamed
+        meta.json               (step, data-iterator state, loss trajectory)
         arrays.npz              (flat {path: np.ndarray}, full logical arrays)
+        manifest.json           (per-array sha256/dtype/shape + whole-tree
+                                 fingerprint; validated on restore)
+
+Crash-consistency contract (chaos-proofed by tests/test_train_chaos.py +
+tests/test_checkpoint_robust.py):
+
+- **Torn writes are impossible to observe**: every file is flushed and
+  fsynced before the tmp directory is atomically renamed into place, and
+  the parent directory is fsynced after the rename -- a crash at ANY
+  point leaves either the complete previous state or the complete new
+  state, never a half-written ``step_*`` dir.  Leftover ``*.tmp`` litter
+  from a killed writer is swept on manager construction.
+- **Corruption is detected, not served**: :meth:`restore` re-hashes every
+  array against ``manifest.json`` (and the whole tree against
+  :func:`repro.optim.adamw.tree_fingerprint`); a corrupt or torn step
+  raises :class:`CheckpointCorruptError` when requested explicitly, and
+  is skipped -- falling back to the newest older VALID step -- when
+  restoring "latest".
+- **GC never strands a run**: keep-K prunes oldest first and never
+  removes the newest *valid* step, even when newer (corrupt) step dirs
+  exist above it.
 
 Arrays are saved as *full logical values* (gathered via np.asarray), so a
 checkpoint written on a (16, 16) mesh restores onto 1 device, a different
@@ -14,15 +34,21 @@ contract.  On multi-host deployments the same format becomes one npz per
 host plus a shard manifest; the manager's commit/GC/resume logic is
 host-count-agnostic (documented in DESIGN.md; exercised single-host here).
 
-A background thread performs the serialization so the train loop only blocks
-on the previous save (double-buffering), mitigating checkpoint stalls
-(straggler-style pauses) at scale.
+A background thread performs the serialization so the train loop only
+blocks on the previous save (double-buffering).  One lock serializes
+``_write``/``_gc`` against each other -- an async save in flight and a
+blocking save (e.g. the SIGTERM drain) can never interleave a GC scan
+with a half-committed rename.  A worker exception is surfaced (and then
+cleared) by the next :meth:`wait`/:meth:`save`, so one failed write
+degrades that snapshot, not the whole manager.
 """
 from __future__ import annotations
 
+import copy
+import hashlib
 import json
+import logging
 import os
-import queue
 import re
 import shutil
 import threading
@@ -31,9 +57,17 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CheckpointCorruptError"]
+
+logger = logging.getLogger("repro.checkpoint")
 
 _STEP_RE = re.compile(r"^step_(\d{9})$")
+_TMP_RE = re.compile(r"^step_\d{9}\..*\.tmp$")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint step failed validation (missing file, bad JSON,
+    checksum/fingerprint mismatch, array set drift)."""
 
 
 def _flatten(tree, prefix="") -> Dict[str, Any]:
@@ -69,15 +103,56 @@ def _unflatten(flat: Dict[str, Any]):
     return fix(root)
 
 
+def _fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _array_digest(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+
+
+def _build_manifest(step: int, flat: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    from repro.optim import adamw        # lazy: avoid import cycle
+    return {
+        "step": int(step),
+        "arrays": {k: {"sha256": _array_digest(v),
+                       "dtype": str(v.dtype),
+                       "shape": list(v.shape)}
+                   for k, v in flat.items()},
+        "tree_fingerprint": adamw.tree_fingerprint(flat),
+    }
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True,
+                 faults=None):
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
+        # optional train-fault injector (repro.train.faults): its
+        # before_ckpt_write hook fires mid-write, AFTER files exist in
+        # the tmp dir and BEFORE the atomic rename -- the torn-writer
+        # crash point the commit protocol must make unobservable
+        self._faults = faults
         os.makedirs(directory, exist_ok=True)
-        self._pending: "queue.Queue" = queue.Queue(maxsize=1)
         self._worker: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
+        # serializes _write/_gc across the async worker and any blocking
+        # save (SIGTERM drain): a GC scan never interleaves a rename
+        self._io_lock = threading.Lock()
+        self._sweep_tmp()
 
     # ------------------------------------------------------------- listing
     def steps(self):
@@ -92,9 +167,27 @@ class CheckpointManager:
         s = self.steps()
         return s[-1] if s else None
 
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:09d}")
+
+    def _sweep_tmp(self) -> None:
+        """Remove ``*.tmp`` litter a killed writer left behind (never a
+        committed ``step_*`` dir -- the rename is the commit point)."""
+        for name in os.listdir(self.dir):
+            if _TMP_RE.match(name):
+                logger.warning("checkpoint: sweeping stale tmp dir %s "
+                               "(previous writer died mid-write)", name)
+                shutil.rmtree(os.path.join(self.dir, name),
+                              ignore_errors=True)
+
     # --------------------------------------------------------------- save
     def _write(self, step: int, trees: Dict[str, Any], meta: Dict[str, Any]):
-        final = os.path.join(self.dir, f"step_{step:09d}")
+        with self._io_lock:
+            self._write_locked(step, trees, meta)
+            self._gc_locked()
+
+    def _write_locked(self, step, trees, meta):
+        final = self._step_dir(step)
         # unique tmp dir: concurrent writers for the same step never collide
         tmp = f"{final}.{os.getpid()}.{threading.get_ident()}.tmp"
         if os.path.exists(tmp):
@@ -104,9 +197,22 @@ class CheckpointManager:
         for name, tree in trees.items():
             for k, v in _flatten(tree, f"{name}/").items():
                 flat[k] = np.asarray(v)       # gathers the logical array
-        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(dict(meta, step=step), f)
+            f.flush()
+            os.fsync(f.fileno())
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(_build_manifest(step, flat), f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
+        if self._faults is not None:
+            # simulated crash point: files written, commit rename pending
+            self._faults.before_ckpt_write(step)
         try:
             os.replace(tmp, final)            # atomic commit
         except OSError:
@@ -114,22 +220,46 @@ class CheckpointManager:
                 shutil.rmtree(tmp, ignore_errors=True)
             else:
                 raise
-        self._gc()
+        _fsync_dir(self.dir)                  # commit the rename itself
 
-    def _gc(self):
+    def _quick_valid(self, step: int) -> bool:
+        """Cheap structural check (all three files present) -- GC's
+        "never prune the newest valid step" probe.  Full content
+        validation happens on restore."""
+        d = self._step_dir(step)
+        return all(os.path.isfile(os.path.join(d, n))
+                   for n in ("arrays.npz", "meta.json", "manifest.json"))
+
+    def _gc_locked(self):
         steps = self.steps()
-        for s in steps[: max(0, len(steps) - self.keep)]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
-                          ignore_errors=True)
+        keep = set(steps[max(0, len(steps) - self.keep):])
+        # never prune the newest structurally-valid step: with corrupt
+        # dirs stacked above it, the keep-K window alone could retain
+        # only garbage and strand every restore path
+        for s in reversed(steps):
+            if self._quick_valid(s):
+                keep.add(s)
+                break
+        for s in steps:
+            if s not in keep:
+                shutil.rmtree(self._step_dir(s), ignore_errors=True)
 
     def save(self, step: int, trees: Dict[str, Any],
              meta: Optional[Dict[str, Any]] = None, block: bool = False):
-        """Snapshot to host memory now; serialize in the background."""
-        if self._error is not None:
-            raise RuntimeError("previous async checkpoint failed") from self._error
+        """Snapshot to host memory now; serialize in the background.
+
+        BOTH arguments are snapshotted at call time: arrays to host
+        memory, ``meta`` by deep copy -- the caller keeps mutating its
+        live objects (e.g. the trainer appends to the loss-trajectory
+        list it passed in) while the worker serializes, and a
+        by-reference capture would tear the snapshot.
+
+        Joins (and re-raises the failure of) any in-flight async save
+        first, so at most one write is pending and a worker exception
+        surfaces at the NEXT save instead of vanishing."""
         host = {name: jax.tree.map(np.asarray, tree)
                 for name, tree in trees.items()}
-        meta = meta or {}
+        meta = copy.deepcopy(meta) if meta else {}
         self.wait()                            # at most one in flight
         if not self.async_save or block:
             self._write(step, host, meta)
@@ -138,32 +268,107 @@ class CheckpointManager:
         def work():
             try:
                 self._write(step, host, meta)
-            except BaseException as e:         # surfaced on next save()
+            except BaseException as e:         # surfaced on next wait/save
                 self._error = e
 
         self._worker = threading.Thread(target=work, daemon=True)
         self._worker.start()
 
     def wait(self):
+        """Drain the async writer; re-raise (once) a worker failure.
+
+        The error is CLEARED after raising: one failed snapshot costs
+        that snapshot, it does not poison every later save on a manager
+        the caller chose to keep using."""
         if self._worker is not None:
             self._worker.join()
             self._worker = None
         if self._error is not None:
-            raise RuntimeError("async checkpoint failed") from self._error
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint failed") from err
 
     # ------------------------------------------------------------- restore
-    def restore(self, step: Optional[int] = None
+    def _validate(self, step: int) -> Tuple[Dict[str, np.ndarray], Dict]:
+        """Load + fully validate one step; raises CheckpointCorruptError."""
+        from repro.optim import adamw
+        d = self._step_dir(step)
+        if not os.path.isdir(d):
+            raise FileNotFoundError(f"no checkpoint for step {step} in "
+                                    f"{self.dir}")
+        try:
+            with open(os.path.join(d, "meta.json")) as f:
+                meta = json.load(f)
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+            data = np.load(os.path.join(d, "arrays.npz"))
+            flat = {k: data[k] for k in data.files}
+        except FileNotFoundError as e:
+            raise CheckpointCorruptError(
+                f"step {step}: missing checkpoint file ({e})") from e
+        except Exception as e:
+            raise CheckpointCorruptError(
+                f"step {step}: unreadable checkpoint ({e!r})") from e
+        want = manifest.get("arrays", {})
+        if set(want) != set(flat):
+            raise CheckpointCorruptError(
+                f"step {step}: array set drifted from manifest "
+                f"(missing {sorted(set(want) - set(flat))[:3]}, "
+                f"extra {sorted(set(flat) - set(want))[:3]})")
+        for k, spec in want.items():
+            a = flat[k]
+            if str(a.dtype) != spec["dtype"] or list(a.shape) != spec["shape"]:
+                raise CheckpointCorruptError(
+                    f"step {step}: {k} is {a.dtype}{a.shape}, manifest "
+                    f"says {spec['dtype']}{tuple(spec['shape'])}")
+            if _array_digest(a) != spec["sha256"]:
+                raise CheckpointCorruptError(
+                    f"step {step}: {k} failed its sha256 check "
+                    f"(bit rot / torn write)")
+        fp = adamw.tree_fingerprint(flat)
+        if fp != manifest.get("tree_fingerprint"):
+            raise CheckpointCorruptError(
+                f"step {step}: tree fingerprint mismatch "
+                f"({fp[:12]}... != "
+                f"{str(manifest.get('tree_fingerprint'))[:12]}...)")
+        return flat, meta
+
+    def restore(self, step: Optional[int] = None, *,
+                before: Optional[int] = None
                 ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
-        """Returns ({tree_name: numpy tree}, meta).  Trees come back as
-        host numpy; the caller re-shards with jax.device_put(...,sharding)."""
-        step = self.latest_step() if step is None else step
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        d = os.path.join(self.dir, f"step_{step:09d}")
-        with open(os.path.join(d, "meta.json")) as f:
-            meta = json.load(f)
-        data = np.load(os.path.join(d, "arrays.npz"))
-        flat = {k: data[k] for k in data.files}
+        """Returns ``({tree_name: numpy tree}, meta)``, fully validated.
+
+        ``step=None`` restores the newest VALID step: a corrupt/torn
+        newest (killed writer, bit rot) is logged and skipped, falling
+        back to the next older step.  An explicit ``step`` must validate
+        -- a corrupt requested step raises :class:`CheckpointCorruptError`
+        rather than silently serving something else.  ``before`` bounds
+        the fallback walk to steps strictly below it (the trainer's
+        escalating-rollback path: "the newest checkpoint itself is
+        poisoned, go older").  Trees come back as host numpy; the caller
+        re-shards with ``jax.device_put(..., sharding)``."""
+        if step is not None:
+            flat, meta = self._validate(step)
+        else:
+            candidates = [s for s in reversed(self.steps())
+                          if before is None or s < before]
+            if not candidates:
+                raise FileNotFoundError(
+                    f"no checkpoints in {self.dir}" +
+                    (f" below step {before}" if before is not None else ""))
+            flat = meta = None
+            last_err: Optional[Exception] = None
+            for s in candidates:
+                try:
+                    flat, meta = self._validate(s)
+                    break
+                except CheckpointCorruptError as e:
+                    logger.warning("checkpoint: step %d invalid (%s) -- "
+                                   "falling back to the previous step", s, e)
+                    last_err = e
+            if flat is None:
+                raise CheckpointCorruptError(
+                    f"every checkpoint in {self.dir} failed validation"
+                ) from last_err
         roots: Dict[str, Dict[str, Any]] = {}
         for k, v in flat.items():
             name, rest = k.split("/", 1)

@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 import warnings
 from typing import Dict, List
 
@@ -47,7 +48,8 @@ __all__ = ["OpCounter", "pm_matmul_counted", "standard_matmul_counted",
            "real_matmul_square_count", "cpm4_square_count", "cpm3_square_count",
            "ContractionCounter", "track_contractions", "count_scale",
            "note_contraction", "SQUARE_MODES", "GRAD_SITE_SUFFIXES",
-           "EmptyAuditWarning"]
+           "EmptyAuditWarning", "compiled_audit", "compiled_audit_enabled",
+           "emit_runtime_note", "track_compiled_contractions"]
 
 
 class EmptyAuditWarning(UserWarning):
@@ -356,3 +358,94 @@ def note_contraction(*, site: str, spec: str, mode: str, mults: int,
     scaled = int(mults) * _SCALES[-1]
     for ctr in _COUNTERS:
         ctr.record(site or "einsum", spec, mode, scaled, demoted)
+
+
+# --------------------------------------------------------------------------
+# Compiled (host-callback) contraction accounting
+#
+# Trace-time notes above cannot see a CACHED jit re-execution -- the trace
+# already happened, nothing runs Python.  The compiled audit fixes the
+# blind spot the other way around: while `compiled_audit` is enabled AT
+# TRACE TIME, the dispatcher bakes a `jax.debug.callback` next to every
+# contraction, and that callback fires on EVERY execution of the compiled
+# program (cached runs, grad, once per scan iteration -- so no
+# `count_scale` is needed or applied).  Executions land in the runtime
+# counter stack opened by `track_compiled_contractions`.
+# --------------------------------------------------------------------------
+
+_RUNTIME_COUNTERS: List[ContractionCounter] = []
+_COMPILED_AUDIT_STACK: List[bool] = []
+
+
+def compiled_audit_enabled() -> bool:
+    """Whether the dispatcher should bake runtime-note callbacks into
+    traces (innermost :func:`compiled_audit` region, else
+    ``$REPRO_COMPILED_AUDIT=1``).  Consulted at TRACE time only."""
+    if _COMPILED_AUDIT_STACK:
+        return _COMPILED_AUDIT_STACK[-1]
+    return os.environ.get("REPRO_COMPILED_AUDIT", "") == "1"
+
+
+@contextlib.contextmanager
+def compiled_audit(enabled: bool = True):
+    """Scope compiled-audit note emission.  Must cover the call that
+    TRACES: callbacks are part of the compiled program, so enabling the
+    audit after the trace is cached changes nothing (and disabling it
+    later does not remove already-baked callbacks)."""
+    _COMPILED_AUDIT_STACK.append(bool(enabled))
+    try:
+        yield
+    finally:
+        _COMPILED_AUDIT_STACK.pop()
+
+
+def emit_runtime_note(*, site: str, spec: str, mode: str, mults: int,
+                      demoted: bool = False) -> None:
+    """Bake one contraction note into the current trace as a host
+    callback.  Dropped silently at run time unless a
+    :func:`track_compiled_contractions` region is open -- the baked
+    callback outlives any one audit region."""
+    import jax
+
+    def _landed():
+        for ctr in _RUNTIME_COUNTERS:
+            ctr.record(site or "einsum", spec, mode, int(mults), demoted)
+
+    jax.debug.callback(_landed)
+
+
+@contextlib.contextmanager
+def track_compiled_contractions():
+    """Counter over contraction notes EXECUTED inside the region.
+
+    The runtime complement of :func:`track_contractions`: it counts
+    callbacks baked by :func:`compiled_audit` as they fire, so a cached
+    jit re-execution reports its real contraction mix instead of the
+    trace-time counter's empty region (``EmptyAuditWarning``).  Flushes
+    in-flight callbacks (``jax.effects_barrier``) on entry -- stragglers
+    from earlier executions must not leak in -- and on exit, so the
+    yielded counter is complete once the region closes.
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.core import counting
+    >>> from repro.core.einsum import fs_einsum
+    >>> with counting.compiled_audit():             # covers the TRACE
+    ...     f = jax.jit(lambda x, w: fs_einsum("mk,kn->mn", x, w,
+    ...                 mode="square_virtual", site="ffn"))
+    ...     _ = f(jnp.ones((4, 8)), jnp.ones((8, 2)))   # traces + runs
+    >>> with counting.track_compiled_contractions() as ctr:
+    ...     _ = f(jnp.ones((4, 8)), jnp.ones((8, 2)))   # CACHED run
+    >>> ctr.multiplies_replaced
+    64
+    >>> ctr.fraction_square
+    1.0
+    """
+    import jax
+    jax.effects_barrier()
+    ctr = ContractionCounter()
+    _RUNTIME_COUNTERS.append(ctr)
+    try:
+        yield ctr
+    finally:
+        jax.effects_barrier()
+        _RUNTIME_COUNTERS.remove(ctr)

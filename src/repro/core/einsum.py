@@ -293,17 +293,28 @@ def _dispatch(spec: str, x, y, mode: str, site: Optional[str], preferred):
     out = _execute(mode)
 
     if hkey is not None and not demoted:
-        # check_finite is None under a jit trace (abstract values): the
-        # guard cannot fire there -- eager serving is the guarded regime.
+        # check_finite is None under a jit trace (abstract values): no
+        # in-line fallback is possible there.  Under a compiled guard
+        # policy the trace instead gets a host-callback finite probe --
+        # every EXECUTION of the cached program reports this key into
+        # the pending-trip ledger, and the step owner (GuardedStep, the
+        # jitted engine) drains/demotes/retries after the step.
         ok = guards.check_finite(out)
         if ok is False:
             from repro.kernels import routing
             routing.route_health().record_trip(hkey, limit=gp.trip_limit)
             out = _execute("standard")
             mode, demoted = "standard", True
+        elif ok is None and gp.compiled:
+            guards.emit_trace_probe(hkey, out)
 
     counting.note_contraction(site=site or "einsum", spec=spec, mode=mode,
                               mults=B * M * K * N, demoted=demoted)
+    if counting.compiled_audit_enabled() and isinstance(out, jax.core.Tracer):
+        # runtime twin of the trace-time note: fires per execution
+        counting.emit_runtime_note(site=site or "einsum", spec=spec,
+                                   mode=mode, mults=B * M * K * N,
+                                   demoted=demoted)
     return out
 
 

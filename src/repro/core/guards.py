@@ -26,11 +26,35 @@ of serving ``inf``/``nan``.  Degradation is observable, never silent:
 every trip/demotion is logged once and surfaces in
 :mod:`repro.core.counting`'s square-fraction audit.
 
-The value check is only possible on **concrete** arrays: under a ``jit``
-trace the output is an abstract tracer and :func:`check_finite` returns
-``None`` (skip).  Guarded serving therefore runs the engine in eager mode
-(``EngineConfig(jit=False)``); a jitted engine still gets the
-engine-level logit guard (concrete post-jit values).
+Eager vs compiled guard dataflow (see docs/robustness.md)
+---------------------------------------------------------
+The value check is only possible on **concrete** arrays.  In eager
+execution :func:`check_finite` probes the output directly and the
+dispatcher re-executes the contraction on the standard route in-line --
+the trip is synchronous and invisible to the caller.
+
+Under a ``jit`` trace the output is an abstract tracer and
+:func:`check_finite` returns ``None`` (unknowable at trace time).  With
+``GuardPolicy.compiled`` (the default when the guard is enabled) the
+dispatcher instead **bakes a finite probe into the compiled program**
+via :func:`emit_trace_probe`: an in-graph single-sum ``isfinite`` reduce
+feeding a ``jax.debug.callback`` that records the health key into a
+host-side pending-trip ledger on EVERY execution of the cached program
+(callbacks fire per execution, not per trace).  The compiled step itself
+still returns the poisoned value -- there is no in-graph fallback -- so
+a step owner (``repro.train.step.GuardedStep``, the serving engine)
+must, after each call:
+
+1. :func:`drain_pending_trips` -- flush in-flight callbacks
+   (``jax.effects_barrier``), pop the ledger, and record each trip into
+   ``RouteHealth`` (demotion at ``trip_limit``);
+2. on any trip, **discard the poisoned result and retry the step**.
+   Demotion is a trace-time Python branch, so a demoted route only takes
+   effect in a FRESH trace: the owner re-jits on demotion (counted as a
+   ``rejit``) and the retry serves the standard route deterministically.
+
+The legacy eager-only stance (a jitted step silently unguarded) remains
+reachable as ``guarded(compiled=False)`` -- tests pin both behaviors.
 
 Enable globally with ``REPRO_GUARD=1``, programmatically with
 :func:`set_guard_policy`, or scoped with the :func:`guarded` context
@@ -42,13 +66,16 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import os
-from typing import List, Optional
+import threading
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 __all__ = ["GuardPolicy", "guard_policy", "set_guard_policy", "guarded",
-           "check_finite", "DEFAULT_TRIP_LIMIT"]
+           "check_finite", "emit_trace_probe", "pending_trip_counts",
+           "clear_pending_trips", "drain_pending_trips",
+           "DEFAULT_TRIP_LIMIT"]
 
 # Guard trips of one (site, shape, dtype) key before the route-health
 # registry demotes it to the standard route (the circuit breaker's K).
@@ -60,17 +87,24 @@ class GuardPolicy:
     """Runtime numerics-guard policy.
 
     ``enabled``     -- check square-routed contraction outputs for
-                       non-finite values (eager execution only);
+                       non-finite values;
     ``trip_limit``  -- trips of one (site, shape, dtype) key before the
                        route-health circuit breaker demotes it to the
-                       standard route for the rest of the process.
+                       standard route for the rest of the process;
+    ``compiled``    -- under a jit trace, bake host-callback finite
+                       probes into the program (see module docstring)
+                       instead of silently skipping the check.  The
+                       pre-compiled-guard behavior is ``compiled=False``.
     """
     enabled: bool = False
     trip_limit: int = DEFAULT_TRIP_LIMIT
+    compiled: bool = True
 
 
 def _env_default() -> GuardPolicy:
-    return GuardPolicy(enabled=os.environ.get("REPRO_GUARD", "") == "1")
+    return GuardPolicy(
+        enabled=os.environ.get("REPRO_GUARD", "") == "1",
+        compiled=os.environ.get("REPRO_GUARD_COMPILED", "1") != "0")
 
 
 _POLICY_STACK: List[GuardPolicy] = []
@@ -78,25 +112,31 @@ _POLICY_STACK: List[GuardPolicy] = []
 
 def guard_policy() -> GuardPolicy:
     """The active guard policy (innermost :func:`guarded` region >
-    :func:`set_guard_policy` > ``$REPRO_GUARD``)."""
+    :func:`set_guard_policy` > ``$REPRO_GUARD``/``$REPRO_GUARD_COMPILED``)."""
     if _POLICY_STACK:
         return _POLICY_STACK[-1]
     return _env_default()
 
 
 def set_guard_policy(enabled: bool,
-                     trip_limit: int = DEFAULT_TRIP_LIMIT) -> None:
+                     trip_limit: int = DEFAULT_TRIP_LIMIT,
+                     compiled: bool = True) -> None:
     """Set the process-level guard policy (clears any scoped regions)."""
     del _POLICY_STACK[:]
-    _POLICY_STACK.append(GuardPolicy(enabled=enabled, trip_limit=trip_limit))
+    _POLICY_STACK.append(GuardPolicy(enabled=enabled, trip_limit=trip_limit,
+                                     compiled=compiled))
 
 
 @contextlib.contextmanager
-def guarded(enabled: bool = True, trip_limit: int = DEFAULT_TRIP_LIMIT):
+def guarded(enabled: bool = True, trip_limit: int = DEFAULT_TRIP_LIMIT,
+            compiled: bool = True):
     """Scope a guard policy to a region (restores the previous one on
     exit -- interleaved guarded/unguarded engine runs must not leak
-    state into each other)."""
-    _POLICY_STACK.append(GuardPolicy(enabled=enabled, trip_limit=trip_limit))
+    state into each other).  Probe emission is a TRACE-time decision:
+    the scope must cover the call that traces, not just re-executions of
+    an already-cached program."""
+    _POLICY_STACK.append(GuardPolicy(enabled=enabled, trip_limit=trip_limit,
+                                     compiled=compiled))
     try:
         yield
     finally:
@@ -108,7 +148,8 @@ def check_finite(x) -> Optional[bool]:
 
     ``None`` means the value is an abstract tracer (inside a ``jit``
     trace there is no number to check) -- callers must treat that as
-    "cannot guard here", not as a pass or a trip.  Integer arrays are
+    "cannot check in-line here" and, under a compiled guard policy, bake
+    a probe instead (:func:`emit_trace_probe`).  Integer arrays are
     finite by construction and short-circuit without a device reduce.
 
     The float probe is a single sum-reduce, not an elementwise
@@ -126,3 +167,81 @@ def check_finite(x) -> Optional[bool]:
     if jnp.issubdtype(jnp.asarray(x).dtype, jnp.integer):
         return True
     return bool(jnp.isfinite(jnp.sum(x)))
+
+
+# --------------------------------------------------------------------------
+# Compiled-regime guard: trace-time probe emission + host pending ledger
+# --------------------------------------------------------------------------
+
+# Pending compiled-guard trips, health_key -> count.  Written by the
+# debug callbacks (which the runtime may invoke from its own threads),
+# drained by the step owner after each compiled call.  Bounded by the
+# number of distinct (site, shape, dtype) keys in the program.
+_PENDING: Dict[str, int] = {}
+_PENDING_LOCK = threading.Lock()
+
+
+def _probe_landed(key: str, ok) -> None:
+    if bool(ok):
+        return
+    with _PENDING_LOCK:
+        _PENDING[key] = _PENDING.get(key, 0) + 1
+
+
+def emit_trace_probe(key: str, x) -> None:
+    """Bake a finite probe for ``x`` into the current trace.
+
+    The probe is the same single-sum reduce as :func:`check_finite`, but
+    its boolean lands on the host through ``jax.debug.callback`` -- which
+    fires on EVERY execution of the compiled program (cached re-runs,
+    inside ``grad``, once per ``scan`` iteration), not just the tracing
+    call.  A non-finite probe increments ``key`` in the pending-trip
+    ledger; :func:`drain_pending_trips` turns the ledger into
+    ``RouteHealth`` trips after the step.  Integer outputs are finite by
+    construction and emit nothing.
+    """
+    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.integer):
+        return
+    ok = jnp.isfinite(jnp.sum(x))
+    jax.debug.callback(_probe_landed, key, ok)
+
+
+def pending_trip_counts() -> Dict[str, int]:
+    """Snapshot of the pending ledger (does NOT flush in-flight
+    callbacks -- call ``jax.effects_barrier()`` first for an exact view)."""
+    with _PENDING_LOCK:
+        return dict(_PENDING)
+
+
+def clear_pending_trips() -> None:
+    """Drop all pending trips without recording them (tests)."""
+    with _PENDING_LOCK:
+        _PENDING.clear()
+
+
+def drain_pending_trips(trip_limit: Optional[int] = None) -> Dict[str, int]:
+    """Flush in-flight probe callbacks, pop every pending compiled-guard
+    trip, and record each into the route-health breaker (demotion after
+    ``trip_limit`` cumulative trips of one key; defaults to the active
+    policy's limit).  Returns ``{health_key: trips}`` -- empty means the
+    step was clean.  The CALLER owns the recovery: on any trip the
+    step's output is suspect and must be recomputed, re-jitting first if
+    a demotion occurred (``repro.kernels.routing.route_epoch`` bumps on
+    demotion so owners can re-jit only when the routing state changed).
+    """
+    jax.effects_barrier()                 # wait out in-flight callbacks
+    with _PENDING_LOCK:
+        drained = dict(_PENDING)
+        _PENDING.clear()
+    if not drained:
+        return drained
+    if trip_limit is None:
+        trip_limit = guard_policy().trip_limit
+    from repro.kernels import routing     # lazy: avoid import cycle
+    health = routing.route_health()
+    for key, n in drained.items():
+        for _ in range(n):
+            health.record_trip(key, limit=trip_limit,
+                               reason="non-finite compiled square-route "
+                                      "output (host-callback probe)")
+    return drained

@@ -70,7 +70,7 @@ __all__ = ["Route", "select_route", "select_matmul_route",
            "IM2COL_PATCH_BYTES_MAX", "IM2COL_K_MAX",
            "PAGED_KERNEL_MAX_S", "PAGED_KERNEL_MIN_T",
            "RouteHealth", "route_health", "reset_route_health",
-           "health_key"]
+           "route_epoch", "health_key"]
 
 logger = logging.getLogger("repro.routing")
 
@@ -308,9 +308,18 @@ def health_key(site: str, sizes, dtype) -> str:
 
 @dataclasses.dataclass
 class RouteHealth:
-    """Trip counts and demotions, keyed by :func:`health_key`."""
+    """Trip counts and demotions, keyed by :func:`health_key`.
+
+    ``epoch`` increments on every routing-state change a cached trace
+    could be stale against (a demotion, or a registry reset re-arming
+    demoted keys).  Demotion is a trace-time Python branch, so compiled
+    callers (``repro.train.step.GuardedStep``, the jitted serving
+    engine) compare epochs to decide when a re-jit is needed -- and only
+    then (see :func:`route_epoch`).
+    """
     trips: Dict[str, int] = dataclasses.field(default_factory=dict)
     demotions: Dict[str, str] = dataclasses.field(default_factory=dict)
+    epoch: int = 0
 
     def record_trip(self, key: str, limit: int,
                     reason: str = "non-finite square-route output") -> bool:
@@ -318,6 +327,7 @@ class RouteHealth:
         self.trips[key] = self.trips.get(key, 0) + 1
         if key not in self.demotions and self.trips[key] >= max(1, limit):
             self.demotions[key] = (f"{reason} ({self.trips[key]} trips)")
+            self.epoch += 1
             logger.warning(
                 "route-health: demoting %s to the standard route after "
                 "%d guard trips (%s)", key, self.trips[key], reason)
@@ -341,9 +351,19 @@ def route_health() -> RouteHealth:
 
 
 def reset_route_health() -> None:
-    """Re-arm every breaker (tests / model reload)."""
+    """Re-arm every breaker (tests / model reload).  Bumps the route
+    epoch: traces compiled while keys were demoted are stale now."""
+    if _HEALTH.demotions:
+        _HEALTH.epoch += 1
     _HEALTH.trips.clear()
     _HEALTH.demotions.clear()
+
+
+def route_epoch() -> int:
+    """Monotonic counter of routing-state changes (demotions/resets).
+    Compiled callers snapshot it at trace time and re-jit only when it
+    moved -- the cheap "is my cached trace stale?" probe."""
+    return _HEALTH.epoch
 
 
 def select_route(kind: str, sizes: dict, *, dtype=jnp.float32) -> Route:

@@ -62,7 +62,11 @@ converts a stuck scheduler into surfaced errors; and an engine-level
 non-finite instead of serving garbage argmax tokens (the core-layer
 guard -- square-route demotion -- lives in :mod:`repro.core.guards` /
 :mod:`repro.kernels.routing` and is scoped over every step when
-``guard=True``).  Terminal paths all release their slot's blocks, so
+``guard=True``; with ``jit=True`` the traces additionally carry
+host-callback finite probes, drained after every model call with
+demote + re-jit + token-exact retry -- see :meth:`Engine._guarded_call`
+and docs/robustness.md).  Terminal paths all release their slot's
+blocks, so
 the allocator's free count returns to its initial value however a run
 ends (chaos-tested under seeded fault injection, ``serve/faults.py``).
 
@@ -158,7 +162,9 @@ class EngineConfig:
                                   # prepared amortization is visible only
                                   # when the per-call prep really executes;
                                   # also the regime where the core-layer
-                                  # numerics guard can check values)
+                                  # guard falls back IN-LINE; jitted guarded
+                                  # engines use the compiled probe + drain +
+                                  # re-jit path instead, _guarded_call)
     # ---- resilience (see module docstring) ----
     deadline_s: Optional[float] = None   # per-request wall budget from
                                          # submit (Request.deadline_s wins)
@@ -208,7 +214,9 @@ class EngineMetrics:
     cancelled: int = 0
     step_failures: int = 0        # caught model-call exceptions (retried)
     watchdog_trips: int = 0
-    guard_trips: int = 0          # non-finite logits rows caught
+    guard_trips: int = 0          # non-finite logits rows + compiled-guard
+                                  # probe trips (core contraction probes)
+    guard_rejits: int = 0         # fresh traces forced by route demotions
     peak_queue_depth: int = 0
     # running sum/count (not a per-step list: a long-lived engine steps
     # forever and the bookkeeping must stay O(1))
@@ -260,6 +268,7 @@ class EngineMetrics:
             "step_failures": self.step_failures,
             "watchdog_trips": self.watchdog_trips,
             "guard_trips": self.guard_trips,
+            "guard_rejits": self.guard_rejits,
             "peak_queue_depth": self.peak_queue_depth,
         }
 
@@ -321,10 +330,14 @@ class Engine:
             h = jax.lax.dynamic_slice_in_dim(hidden, idx, 1, axis=1)
             return model.logits(params, h)[:, 0]           # (1, V)
 
-        wrap = jax.jit if cfg.jit else (lambda f: f)
-        self._chunk = wrap(_chunk)
-        self._decode = wrap(_decode)
-        self._logits_at = wrap(_logits_at)
+        # raw model fns are kept so the compiled guard can re-jit after a
+        # RouteHealth demotion (demotion is a trace-time branch: a cached
+        # trace keeps serving the square route until a fresh trace)
+        self._model_fns = {"_chunk": _chunk, "_decode": _decode,
+                           "_logits_at": _logits_at}
+        self._jit_model_fns()
+        from repro.kernels import routing as _routing
+        self._route_epoch = _routing.route_epoch()
 
         self.slots: List[Optional[_Slot]] = [None] * cfg.max_slots
         self.queue: List[Request] = []
@@ -556,6 +569,47 @@ class Engine:
             admitted = True
         return admitted
 
+    def _jit_model_fns(self) -> None:
+        # each call wraps the raw fns in FRESH closures before jitting:
+        # jax's trace cache is keyed on the underlying callable, so
+        # re-jitting the same object after a RouteHealth demotion would
+        # silently reuse the pre-demotion program
+        for name, fn in self._model_fns.items():
+            wrapped = (jax.jit(lambda *a, _f=fn: _f(*a)) if self.cfg.jit
+                       else fn)
+            setattr(self, name, wrapped)
+
+    def _guarded_call(self, name: str, *args):
+        """Run one jitted model fn under the compiled numerics guard.
+
+        With ``guard=True, jit=True`` the traces carry host-callback
+        finite probes (see ``core/guards``): after each call the
+        pending-trip ledger is drained into ``RouteHealth``; on a trip
+        the returned value is suspect, so it is DISCARDED, the model fns
+        are re-jitted if a demotion moved the route epoch (fresh traces
+        see the demoted -- standard -- route), and the call retries on
+        identical inputs.  The calls are functional (engine state is
+        assigned only on success by the callers), so the retry is
+        token-exact.  Eager guarded engines (``jit=False``) keep the
+        in-line dispatcher fallback and skip the drain entirely."""
+        if not (self.cfg.guard and self.cfg.jit):
+            return getattr(self, name)(*args)
+        from repro.kernels import routing
+        for _ in range(self.cfg.max_step_retries + 1):
+            out = getattr(self, name)(*args)
+            jax.block_until_ready(out)
+            trips = guards.drain_pending_trips()
+            if not trips:
+                return out
+            self.metrics.guard_trips += sum(trips.values())
+            if routing.route_epoch() != self._route_epoch:
+                self._route_epoch = routing.route_epoch()
+                self._jit_model_fns()
+                self.metrics.guard_rejits += 1
+        # retries exhausted with a key the breaker could not demote; the
+        # per-slot logits guard downstream isolates the damage
+        return out
+
     def _step_failed(self, kind: str, exc: Exception,
                      involved: List[int]) -> None:
         """A model call raised.  The calls are functional (state is
@@ -608,9 +662,9 @@ class Engine:
         try:
             if self._faults is not None:
                 self._faults.before_step("prefill")
-            hidden, cache, pos_pool = self._chunk(
-                self.params, self.cache, self.pos_pool, tables_row,
-                jnp.asarray(toks), jnp.asarray(poss))
+            hidden, cache, pos_pool = self._guarded_call(
+                "_chunk", self.params, self.cache, self.pos_pool,
+                tables_row, jnp.asarray(toks), jnp.asarray(poss))
         except Exception as e:                        # noqa: BLE001
             self._step_failed("prefill", e, [slot_id])
             return False
@@ -620,8 +674,8 @@ class Engine:
         self.metrics.prefill_chunks += 1
         self.metrics.prefill_tokens += len(chunk)
         if slot.n_prefilled == len(prompt):      # final chunk: first token
-            logits = self._logits_at(self.params, hidden,
-                                     jnp.int32(len(chunk) - 1))
+            logits = self._guarded_call("_logits_at", self.params, hidden,
+                                        jnp.int32(len(chunk) - 1))
             # one reduce + scalar transfer (nan/+inf propagate through
             # max), not an elementwise isfinite over the vocab row
             if cfg.guard and not np.isfinite(float(jnp.max(logits))):
@@ -679,8 +733,8 @@ class Engine:
         try:
             if self._faults is not None:
                 self._faults.before_step("decode")
-            logits, cache, pos_pool = self._decode(
-                self.params, self.cache, self.pos_pool,
+            logits, cache, pos_pool = self._guarded_call(
+                "_decode", self.params, self.cache, self.pos_pool,
                 jnp.asarray(self.tables.table), jnp.asarray(toks),
                 jnp.asarray(poss))
         except Exception as e:                        # noqa: BLE001

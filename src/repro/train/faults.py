@@ -1,0 +1,193 @@
+"""Deterministic fault injection for the training loop (chaos harness).
+
+The serving twin (:mod:`repro.serve.faults`) proved the engine's
+contract under seeded chaos; this module does the same for training.
+The injector is handed to :class:`repro.train.trainer.Trainer` via its
+``faults=`` argument, which threads it through the step wrapper
+(:class:`FaultyTrainStep`), the checkpoint writer
+(``CheckpointManager(faults=...)``) and the end-of-step hook.  The chaos
+suite (``tests/test_train_chaos.py``) asserts the recovery contract:
+
+- every fault schedule ends with a **loss trajectory bit-identical** to
+  the unfaulted run (retries re-execute, rollbacks replay the exact
+  batch stream -- the synthetic pipeline regenerates batch ``t`` from
+  ``(seed, t)``);
+- a kill/SIGTERM mid-run resumes from the newest valid checkpoint and
+  finishes bit-identically;
+- checkpoint-write faults degrade that snapshot only (counted in
+  ``ckpt_failures``), never the run.
+
+Injection points
+----------------
+``step_fail``     the ``n``-th train-step call raises
+                  :class:`~repro.serve.faults.InjectedFault` -- exercises
+                  the trainer's bounded step-retry path (the step is
+                  functional, so a retry is bit-exact);
+``nan_grad``      the ``n``-th train-step call's returned PARAMS are
+                  poisoned with NaN while its loss stays finite -- the
+                  realistic NaN-gradient shape: the damage commits and
+                  only the NEXT step's loss probe exposes it, forcing a
+                  rollback-to-checkpoint + replay (not a mere retry);
+``ckpt_fail``     the ``n``-th checkpoint write raises at the
+                  mid-write crash point (files staged, rename pending) --
+                  exercises torn-write unobservability and the trainer's
+                  absorb-and-continue accounting;
+``kill_after``    once ``n`` steps have committed, raise
+                  :class:`SimulatedKill` (a ``BaseException``: no
+                  ``except Exception`` can absorb it, mimicking process
+                  death) -- exercises kill+resume;
+``sigterm_after`` once ``n`` steps have committed, deliver a real
+                  ``SIGTERM`` to this process (then die via
+                  :class:`SimulatedKill`) -- exercises the preemption
+                  handler's blocking checkpoint drain.
+
+All ordinals are 0-based and count CALLS (a retried step advances the
+ordinal, so the retry is not re-poisoned -- same discipline as the
+serving injector's per-kind call counters).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+from typing import Dict, FrozenSet, Optional
+
+import jax
+import numpy as np
+
+from repro.serve.faults import InjectedFault
+
+__all__ = ["SimulatedKill", "TrainFaultPlan", "TrainFaultInjector",
+           "FaultyTrainStep", "InjectedFault"]
+
+
+class SimulatedKill(BaseException):
+    """Simulated process death.  Deliberately NOT a ``RuntimeError``:
+    the trainer's retry/rollback machinery must never absorb it -- it
+    escapes ``Trainer.run`` like a real kill ends the process, and the
+    test harness "restarts" by building a fresh Trainer that resumes."""
+
+
+def _fset(v) -> FrozenSet[int]:
+    return frozenset(int(x) for x in (() if v is None else v))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainFaultPlan:
+    """One deterministic training-fault schedule (0-based ordinals)."""
+    step_fail: FrozenSet[int] = frozenset()
+    nan_grad: FrozenSet[int] = frozenset()
+    ckpt_fail: FrozenSet[int] = frozenset()
+    kill_after: Optional[int] = None
+    sigterm_after: Optional[int] = None
+
+    @classmethod
+    def of(cls, *, step_fail=(), nan_grad=(), ckpt_fail=(),
+           kill_after: Optional[int] = None,
+           sigterm_after: Optional[int] = None) -> "TrainFaultPlan":
+        return cls(step_fail=_fset(step_fail), nan_grad=_fset(nan_grad),
+                   ckpt_fail=_fset(ckpt_fail), kill_after=kill_after,
+                   sigterm_after=sigterm_after)
+
+    @classmethod
+    def random(cls, seed: int, *, steps: int = 12, p_step: float = 0.15,
+               p_nan: float = 0.10, p_ckpt: float = 0.25,
+               p_kill: float = 0.5) -> "TrainFaultPlan":
+        """A seeded random schedule (same seed -> same plan, always).
+        ``p_*`` are per-ordinal rates over the first ``steps`` ordinals;
+        ``p_kill`` is the chance of one mid-run kill at a random commit
+        count."""
+        rng = np.random.default_rng(seed)
+        kill = (int(rng.integers(1, max(2, steps - 1)))
+                if rng.random() < p_kill else None)
+        return cls.of(
+            step_fail=np.nonzero(rng.random(steps) < p_step)[0],
+            nan_grad=np.nonzero(rng.random(steps) < p_nan)[0],
+            ckpt_fail=np.nonzero(rng.random(steps) < p_ckpt)[0],
+            kill_after=kill)
+
+
+class TrainFaultInjector:
+    """Stateful executor of one :class:`TrainFaultPlan` (per-run call
+    counters; use a fresh injector per trainer "process" -- a resumed
+    run gets a fresh one, exactly like a restarted process would)."""
+
+    def __init__(self, plan: TrainFaultPlan):
+        self.plan = plan
+        self.calls: Dict[str, int] = {"step": 0, "ckpt": 0}
+        self.injected: Dict[str, int] = {"step": 0, "nan": 0, "ckpt": 0,
+                                         "kill": 0, "sigterm": 0}
+
+    # -- train-step faults (driven by FaultyTrainStep) ------------------
+    def next_step_ordinal(self) -> int:
+        n = self.calls["step"]
+        self.calls["step"] += 1
+        return n
+
+    def step_raises(self, n: int) -> bool:
+        if n in self.plan.step_fail:
+            self.injected["step"] += 1
+            return True
+        return False
+
+    def poisons_update(self, n: int) -> bool:
+        if n in self.plan.nan_grad:
+            self.injected["nan"] += 1
+            return True
+        return False
+
+    # -- checkpoint write faults (driven by CheckpointManager) ----------
+    def before_ckpt_write(self, step: int) -> None:
+        n = self.calls["ckpt"]
+        self.calls["ckpt"] += 1
+        if n in self.plan.ckpt_fail:
+            self.injected["ckpt"] += 1
+            raise InjectedFault(
+                f"injected checkpoint write failure (write {n}, step {step})")
+
+    # -- process death (driven by Trainer after a step commits) ---------
+    def after_commit(self, committed_steps: int) -> None:
+        if self.plan.sigterm_after is not None and \
+                committed_steps == self.plan.sigterm_after:
+            self.injected["sigterm"] += 1
+            # a real signal: the trainer's handler must drain the async
+            # writer and leave a complete newest checkpoint...
+            os.kill(os.getpid(), signal.SIGTERM)
+            # ...because right after the handler returns, the process
+            # "dies" -- the loop's own final save never runs
+            raise SimulatedKill(
+                f"SIGTERM then kill after step {committed_steps}")
+        if self.plan.kill_after is not None and \
+                committed_steps == self.plan.kill_after:
+            self.injected["kill"] += 1
+            raise SimulatedKill(f"killed after step {committed_steps}")
+
+
+class FaultyTrainStep:
+    """Transparent train-step wrapper executing one injector's step
+    schedule.  ``step_fail`` ordinals raise before the model runs;
+    ``nan_grad`` ordinals let the step complete and then poison every
+    returned float param with NaN (loss untouched): the corrupt update
+    COMMITS, the next step's loss goes non-finite, and recovery must be
+    a checkpoint rollback -- the failure shape real NaN gradients have.
+    """
+
+    def __init__(self, step_fn, injector: TrainFaultInjector):
+        self._fn = step_fn
+        self.injector = injector
+
+    def __call__(self, params, opt_state, batch):
+        n = self.injector.next_step_ordinal()
+        if self.injector.step_raises(n):
+            raise InjectedFault(f"injected train-step failure (call {n})")
+        new_params, new_opt, metrics = self._fn(params, opt_state, batch)
+        if self.injector.poisons_update(n):
+            new_params = jax.tree.map(
+                lambda p: (np.full(p.shape, np.nan, p.dtype)
+                           if np.issubdtype(np.asarray(p).dtype, np.floating)
+                           else p),
+                jax.tree.map(np.asarray, new_params))
+        return new_params, new_opt, metrics
+
+    def __getattr__(self, name):
+        return getattr(self._fn, name)

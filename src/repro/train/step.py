@@ -7,16 +7,17 @@ serves smoke tests (1 CPU device) and the 512-chip production mesh.
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import counting
+from repro.core import counting, guards
 from repro.optim import adamw
 from repro.train import loss as loss_mod
 
 __all__ = ["TrainConfig", "make_train_step", "make_prefill_step",
-           "make_decode_step", "make_loss_fn", "audit_step"]
+           "make_decode_step", "make_loss_fn", "audit_step", "GuardedStep"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -130,6 +131,90 @@ def audit_step(step_fn, params, opt_state, batch):
     with counting.track_contractions() as ctr:
         out = step_fn(params, opt_state, batch)
     return out, ctr
+
+
+class GuardedStep:
+    """A jitted train step with the compiled numerics guard in the loop.
+
+    Wraps a raw ``train_step(params, opt_state, batch)`` builder output
+    so that every call runs under a :func:`repro.core.guards.guarded`
+    scope -- the TRACE bakes a host-callback finite probe next to each
+    square-routed contraction (see ``core/guards``) -- and, after the
+    step, drains the pending-trip ledger:
+
+    - **clean step** (no trips): the result is returned as-is; on the
+      happy path the only overhead is the in-graph probe reduces plus
+      one ``effects_barrier``.
+    - **tripped step**: the output is *suspect* (the compiled program
+      has no in-graph fallback -- a saturated ``(a+b)^2`` flowed through
+      the optimizer update), so the result is DISCARDED and the step
+      re-executed on the same inputs.  Each drain records trips into
+      ``RouteHealth``; once a key demotes, the routing state is
+      trace-time-visible only, so the wrapper re-jits (counted in
+      ``rejits``) and the fresh trace serves that site on the standard
+      route.  Retries are bounded by ``max_retries`` -- with a
+      ``trip_limit``-trip breaker per key and a finite number of keys,
+      a persistent saturation converges to full demotion well inside
+      the bound; a step still tripping at the bound raises.
+
+    The retry is DETERMINISTIC: the step function is pure and the inputs
+    are unchanged, so a demoted retry computes exactly what an
+    eagerly-guarded run would have (pinned bit-identical by
+    ``tests/test_compiled_guard.py``).
+
+    NOTE: do not pass a step jitted with donated arguments -- a retry
+    re-uses the inputs.  ``GuardedStep`` owns the ``jax.jit`` call
+    (``jit=False`` for an eager step, where the in-line dispatcher
+    fallback makes the drain a no-op).
+    """
+
+    def __init__(self, step_fn, *, jit: bool = True,
+                 trip_limit: int = guards.DEFAULT_TRIP_LIMIT,
+                 max_retries: int = 8):
+        self._raw = step_fn
+        self._jit = jit
+        self._fn = self._fresh_jit() if jit else step_fn
+        self.trip_limit = trip_limit
+        self.max_retries = max_retries
+        self.guard_trips = 0          # probe trips drained (all keys)
+        self.rejits = 0               # fresh traces forced by demotions
+        self.retries = 0              # discarded-and-recomputed steps
+        from repro.kernels import routing
+        self._epoch = routing.route_epoch()
+
+    def _fresh_jit(self):
+        # jax.jit(self._raw) would HIT the shared trace cache (keyed on
+        # the underlying callable) and silently keep the pre-demotion
+        # program; a fresh closure forces a genuine retrace
+        raw = self._raw
+        return jax.jit(lambda *args: raw(*args))
+
+    def stats(self) -> Dict[str, int]:
+        return {"guard_trips": self.guard_trips, "rejits": self.rejits,
+                "retries": self.retries}
+
+    def __call__(self, params, opt_state, batch):
+        from repro.kernels import routing
+        for attempt in range(self.max_retries + 1):
+            with guards.guarded(trip_limit=self.trip_limit):
+                out = self._fn(params, opt_state, batch)
+                jax.block_until_ready(out)
+                trips = guards.drain_pending_trips(self.trip_limit)
+            if not trips:
+                return out
+            self.guard_trips += sum(trips.values())
+            if routing.route_epoch() != self._epoch:
+                # a key demoted: cached traces still serve the square
+                # route there -- only a fresh trace sees the demotion
+                self._epoch = routing.route_epoch()
+                if self._jit:
+                    self._fn = self._fresh_jit()
+                    self.rejits += 1
+            self.retries += 1
+        raise RuntimeError(
+            f"guarded train step still tripping after {self.max_retries} "
+            f"retries (keys: {sorted(trips)}) -- the non-finite source is "
+            f"not a square-routed contraction this guard can demote")
 
 
 def make_prefill_step(model, cache_len: int):

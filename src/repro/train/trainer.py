@@ -1,27 +1,48 @@
 """Fault-tolerant training loop.
 
-- auto-resume: scans the checkpoint dir, restores params/opt/data state;
-- periodic async checkpoints (atomic, keep-K);
-- preemption hook: SIGTERM triggers a final blocking checkpoint;
+- auto-resume: scans the checkpoint dir, restores params/opt/data state
+  AND the committed loss trajectory (validated restore: a torn newest
+  checkpoint falls back to the previous step);
+- periodic async checkpoints (atomic, fsynced, checksummed, keep-K);
+- preemption hook: SIGTERM drains the async writer and takes a final
+  BLOCKING checkpoint from inside the handler -- a delivered SIGTERM
+  never leaves a torn or stale newest checkpoint;
+- bounded step retries: a raising train step (injected or organic) is
+  re-executed on the same batch up to ``max_step_retries`` times -- the
+  step is functional, so a retry is bit-exact;
+- rollback-to-checkpoint: when recovery is armed (``faults`` given or
+  ``rollback_on_nonfinite=True``), every committed step's loss is
+  probed; a non-finite loss (e.g. NaN gradients poisoned the params one
+  step earlier) restores the newest valid checkpoint -- params, opt
+  state, data-stream position, loss trajectory -- and replays.  The
+  synthetic pipeline regenerates batch ``t`` from ``(seed, t)``, so a
+  replayed stretch is bit-identical to an unfaulted run (chaos-proofed
+  in tests/test_train_chaos.py).  Consecutive rollbacks with no commit
+  progress escalate to strictly-older checkpoints (the newest snapshot
+  itself may hold poisoned params), bounded by ``max_rollbacks``;
 - straggler watchdog: per-step wall-clock EWMA; steps slower than
-  ``watchdog_factor`` x EWMA are logged as straggler events (on real fleets
-  this feeds the scheduler's replace-node signal; here it is surfaced in
-  metrics so the logic is testable);
-- works on 1 CPU device or under a production mesh (the caller passes jitted
-  train_step + shardings).
+  ``watchdog_factor`` x EWMA are logged as straggler events (on real
+  fleets this feeds the scheduler's replace-node signal; here it is
+  surfaced in metrics so the logic is testable);
+- works on 1 CPU device or under a production mesh (the caller passes
+  jitted train_step + shardings).  NOTE: retries/rollbacks re-use step
+  inputs, so the recovery paths require a step without donated
+  argument buffers (donation is a no-op on CPU; see docs/robustness.md).
 """
 from __future__ import annotations
 
 import dataclasses
 import signal
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import SyntheticLM
+from repro.train.faults import (FaultyTrainStep, SimulatedKill,
+                                TrainFaultInjector)
 
 __all__ = ["TrainerConfig", "Trainer"]
 
@@ -38,44 +59,145 @@ class TrainerConfig:
     # custom-VJP backward sites -- into the run result (trace-time notes:
     # a pre-traced step records nothing and the audit stays None)
     audit_contractions: bool = True
+    # consecutive raising step calls tolerated before the run fails
+    max_step_retries: int = 3
+    # non-finite-loss checkpoint rollbacks tolerated per run
+    max_rollbacks: int = 8
+    # probe every committed loss and roll back on non-finite even
+    # without a fault injector (injectors arm recovery automatically)
+    rollback_on_nonfinite: bool = False
 
 
 class Trainer:
     def __init__(self, cfg: TrainerConfig, train_step: Callable,
                  params, opt_state, data: SyntheticLM,
-                 shard_params: Optional[Callable] = None):
+                 shard_params: Optional[Callable] = None,
+                 faults: Optional[TrainFaultInjector] = None):
         self.cfg = cfg
-        self.train_step = train_step
+        self._faults = faults
+        self.train_step = (FaultyTrainStep(train_step, faults)
+                           if faults is not None else train_step)
         self.params = params
         self.opt_state = opt_state
         self.data = data
         self.shard_params = shard_params or (lambda t: t)
-        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
+        self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep,
+                                      faults=faults)
         self.step = 0
         self.metrics_log = []
         self.straggler_events = []
         self.contraction_audit = None
+        self.loss_trajectory: List[float] = []
+        self.step_failures = 0        # raising step calls (retried)
+        self.rollbacks = 0            # non-finite-loss checkpoint restores
+        self.ckpt_failures = 0        # absorbed checkpoint write failures
+        self._recovery = faults is not None or cfg.rollback_on_nonfinite
         self._preempted = False
+        self._in_ckpt = False         # SIGTERM-handler reentrancy latch
+        self._last_restored_step: Optional[int] = None
+        # step-0 fallback for rollback when NO checkpoint restores (the
+        # anchor write itself may have failed): JAX arrays are immutable,
+        # holding references costs nothing
+        self._init_snapshot = ({"params": params, "opt_state": opt_state},
+                               {"step": 0, "data": data.state_dict(),
+                                "losses": []})
 
     # ------------------------------------------------------------- resume
     def maybe_resume(self) -> bool:
-        latest = self.ckpt.latest_step()
-        if latest is None:
+        if self.ckpt.latest_step() is None:
             return False
-        trees, meta = self.ckpt.restore(latest)
+        trees, meta = self.ckpt.restore()     # newest VALID step
         self.params = self.shard_params(trees["params"])
         self.opt_state = self.shard_params(trees["opt_state"])
         self.data.load_state_dict(meta["data"])
         self.step = int(meta["step"])
+        self.loss_trajectory = [float(x) for x in meta.get("losses", [])]
         return True
 
     def _save(self, block: bool = False):
-        self.ckpt.save(self.step,
-                       {"params": self.params, "opt_state": self.opt_state},
-                       meta={"data": self.data.state_dict()}, block=block)
+        """Checkpoint the committed state; a write failure degrades this
+        snapshot (counted), never the run -- the next periodic save
+        retries with fresh state."""
+        self._in_ckpt = True
+        try:
+            self.ckpt.save(
+                self.step,
+                {"params": self.params, "opt_state": self.opt_state},
+                meta={"data": self.data.state_dict(),
+                      "losses": self.loss_trajectory},
+                block=block)
+        except Exception:
+            self.ckpt_failures += 1
+        finally:
+            self._in_ckpt = False
 
     def _on_sigterm(self, *_):
         self._preempted = True
+        # Python runs signal handlers between bytecodes on the main
+        # thread: if the interrupted frame is already inside _save, the
+        # manager's state is mid-mutation -- skip; the interrupted save
+        # finishes and the loop exits via _preempted.  Otherwise drain
+        # the async writer and commit a final BLOCKING checkpoint NOW:
+        # after this handler returns the process may never run another
+        # line, and the newest checkpoint must be complete, not torn.
+        if not self._in_ckpt:
+            self._save(block=True)
+
+    # ----------------------------------------------------------- recovery
+    def _attempt_step(self, batch, audit: bool):
+        """One logical step with bounded retries on raising calls."""
+        for attempt in range(self.cfg.max_step_retries + 1):
+            try:
+                if audit and attempt == 0:
+                    from repro.core import counting
+                    with counting.track_contractions(allow_empty=True) as ctr:
+                        out = self.train_step(self.params, self.opt_state,
+                                              batch)
+                    if ctr.records:
+                        self.contraction_audit = ctr.summary()
+                    return out
+                return self.train_step(self.params, self.opt_state, batch)
+            except SimulatedKill:
+                raise                         # process death: no absorbing
+            except Exception as e:
+                self.step_failures += 1
+                if attempt >= self.cfg.max_step_retries:
+                    raise RuntimeError(
+                        f"train step failed {attempt + 1} consecutive "
+                        f"times at step {self.step}") from e
+
+    def _rollback(self):
+        """Restore the newest valid checkpoint (escalating to strictly
+        older ones when the previous restore made no progress -- the
+        snapshot itself may hold the poisoned params)."""
+        self.rollbacks += 1
+        if self.rollbacks > self.cfg.max_rollbacks:
+            raise RuntimeError(
+                f"non-finite loss persisted through "
+                f"{self.cfg.max_rollbacks} checkpoint rollbacks")
+        before = None
+        if self._last_restored_step is not None and \
+                self.step <= self._last_restored_step:
+            before = self._last_restored_step
+        from repro.checkpoint.manager import CheckpointCorruptError
+        try:
+            trees, meta = self.ckpt.restore(before=before)
+        except (FileNotFoundError, CheckpointCorruptError):
+            # nothing restorable on disk (failed anchor write, all
+            # snapshots corrupt, or escalation walked past the oldest):
+            # replay the whole run from the constructor-time state
+            trees, meta = self._init_snapshot
+            meta = dict(meta, step=0)
+        self.params = self.shard_params(trees["params"])
+        self.opt_state = self.shard_params(trees["opt_state"])
+        self.data.load_state_dict(meta["data"])
+        self.step = int(meta["step"])
+        self._last_restored_step = self.step
+        self.loss_trajectory = [float(x) for x in
+                                meta.get("losses", [])][: self.step]
+        # committed-then-rolled-back steps will replay and re-log
+        self.metrics_log = [m for m in self.metrics_log
+                            if m["step"] <= self.step]
 
     # --------------------------------------------------------------- loop
     def run(self) -> Dict[str, Any]:
@@ -83,24 +205,23 @@ class Trainer:
         ewma = None
         steps_run = 0
         try:
+            if self._recovery and self.step == 0 and \
+                    self.ckpt.latest_step() is None:
+                self._save(block=True)        # the rollback anchor
             while self.step < self.cfg.total_steps and not self._preempted:
                 batch = self.data.next_batch()
                 t0 = time.monotonic()
-                if steps_run == 0 and self.cfg.audit_contractions:
-                    # first call traces: the audit sees every fs_einsum of
-                    # the step, including the VJP's .bwd_x/.bwd_w sites
-                    # (allow_empty: a pre-traced step legitimately records
-                    # nothing -- the audit then just stays None)
-                    from repro.core import counting
-                    with counting.track_contractions(allow_empty=True) as ctr:
-                        self.params, self.opt_state, metrics = self.train_step(
-                            self.params, self.opt_state, batch)
-                    if ctr.records:
-                        self.contraction_audit = ctr.summary()
-                else:
-                    self.params, self.opt_state, metrics = self.train_step(
-                        self.params, self.opt_state, batch)
-                jax.block_until_ready(metrics["loss"])
+                new_params, new_opt, metrics = self._attempt_step(
+                    batch, audit=(steps_run == 0
+                                  and self.cfg.audit_contractions))
+                loss = float(np.asarray(metrics["loss"]))
+                if self._recovery and not np.isfinite(loss):
+                    # poisoned update (e.g. NaN grads one step earlier
+                    # already committed): replay from the last snapshot
+                    self._rollback()
+                    continue
+                self.params, self.opt_state = new_params, new_opt
+                self.loss_trajectory.append(loss)
                 dt = time.monotonic() - t0
                 steps_run += 1
                 if steps_run <= 1:
@@ -117,15 +238,28 @@ class Trainer:
                         self.step == self.cfg.total_steps:
                     self.metrics_log.append(
                         {"step": self.step,
-                         **{k: float(np.asarray(v)) for k, v in metrics.items()}})
+                         **{k: float(np.asarray(v))
+                            for k, v in metrics.items()}})
                 if self.step % self.cfg.ckpt_every == 0:
                     self._save()
+                if self._faults is not None:
+                    self._faults.after_commit(self.step)   # may "die" here
             self._save(block=True)
         finally:
-            self.ckpt.wait()
+            try:
+                self.ckpt.wait()
+            except Exception:
+                self.ckpt_failures += 1
             signal.signal(signal.SIGTERM, old)
-        return {"final_step": self.step,
-                "metrics": self.metrics_log,
-                "stragglers": self.straggler_events,
-                "contraction_audit": self.contraction_audit,
-                "preempted": self._preempted}
+        result = {"final_step": self.step,
+                  "metrics": self.metrics_log,
+                  "stragglers": self.straggler_events,
+                  "contraction_audit": self.contraction_audit,
+                  "preempted": self._preempted,
+                  "loss_trajectory": list(self.loss_trajectory),
+                  "step_failures": self.step_failures,
+                  "rollbacks": self.rollbacks,
+                  "ckpt_failures": self.ckpt_failures}
+        if hasattr(self.train_step, "stats"):
+            result["guard"] = self.train_step.stats()   # GuardedStep
+        return result

@@ -1,0 +1,254 @@
+"""CheckpointManager robustness: atomic commit, validation, GC, async.
+
+Covers the crash-consistency contract in isolation (the trainer-level
+integration lives in tests/test_train_chaos.py): tmp+fsync+rename commit
+with torn-write sweep, per-array checksums + tree fingerprint validated
+on restore, corrupt-step fallback, keep-K GC that never strands the
+newest valid step, and the async writer's snapshot/exception semantics.
+"""
+import json
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointCorruptError, CheckpointManager
+from repro.train.faults import TrainFaultInjector, TrainFaultPlan
+
+
+def _trees(step):
+    rng = np.random.default_rng(step)
+    return {"params": {"w": rng.normal(size=(4, 3)).astype(np.float32),
+                       "blocks": ({"b": np.full((2,), step, np.float32)},
+                                  {"b": np.full((2,), -step, np.float32)})},
+            "opt_state": {"step": np.asarray(step, np.int32),
+                          "m": {"w": np.zeros((4, 3), np.float32)}}}
+
+
+def _save_steps(mgr, steps, **kw):
+    for s in steps:
+        mgr.save(s, _trees(s), meta={"tag": f"s{s}"}, block=True, **kw)
+
+
+def _assert_roundtrip(trees, restored):
+    flat_a, flat_b = [], []
+    import jax
+    jax.tree.map(lambda a, b: (flat_a.append(np.asarray(a)),
+                               flat_b.append(np.asarray(b))), trees, restored)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(a, b)
+        assert a.dtype == b.dtype
+
+
+# ----------------------------------------------------------- commit + layout
+def test_roundtrip_with_manifest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    _save_steps(mgr, [7])
+    restored, meta = mgr.restore()
+    _assert_roundtrip(_trees(7), restored)
+    assert meta["tag"] == "s7" and meta["step"] == 7
+    # the commit left exactly the final dir: no tmp litter
+    assert sorted(os.listdir(tmp_path)) == ["step_000000007"]
+    with open(tmp_path / "step_000000007" / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["step"] == 7
+    assert "params/w" in manifest["arrays"]
+    assert "params/blocks/__0/b" in manifest["arrays"]   # tuples flatten
+    assert len(manifest["tree_fingerprint"]) == 64
+
+
+def test_restore_explicit_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    _save_steps(mgr, [1, 2, 3])
+    restored, meta = mgr.restore(step=2)
+    _assert_roundtrip(_trees(2), restored)
+    assert meta["step"] == 2
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(step=99)
+
+
+def test_stale_tmp_litter_swept_on_init(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    _save_steps(mgr, [1])
+    # a writer "died mid-write": staged files exist, rename never happened
+    litter = tmp_path / "step_000000002.12345.67890.tmp"
+    litter.mkdir()
+    (litter / "arrays.npz").write_bytes(b"partial")
+    mgr2 = CheckpointManager(str(tmp_path), keep=3)
+    assert not litter.exists()                 # swept
+    assert mgr2.steps() == [1]                 # committed dirs untouched
+    _assert_roundtrip(_trees(1), mgr2.restore()[0])
+
+
+# ------------------------------------------------------ validation / fallback
+def test_corrupt_newest_falls_back_explicit_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    _save_steps(mgr, [1, 2, 3])
+    # bit-rot the newest step's array payload: same shapes/dtypes, the
+    # values silently off by one bit-pattern -- only the checksums tell
+    npz = tmp_path / "step_000000003" / "arrays.npz"
+    data = np.load(npz)
+    flat = {k: data[k] for k in data.files}
+    flat["params/w"] = flat["params/w"] + 1.0
+    with open(npz, "wb") as f:
+        np.savez(f, **flat)
+
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(step=3)                    # explicit: never substitute
+    restored, meta = mgr.restore()             # latest: fall back
+    assert meta["step"] == 2
+    _assert_roundtrip(_trees(2), restored)
+
+
+def test_torn_step_missing_file_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    _save_steps(mgr, [1, 2])
+    os.remove(tmp_path / "step_000000002" / "manifest.json")
+    restored, meta = mgr.restore()
+    assert meta["step"] == 1
+    with pytest.raises(CheckpointCorruptError):
+        mgr.restore(step=2)
+
+
+def test_garbage_meta_json_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    _save_steps(mgr, [1, 2])
+    (tmp_path / "step_000000002" / "meta.json").write_text("{not json")
+    assert mgr.restore()[1]["step"] == 1
+
+
+def test_shape_dtype_drift_detected(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    _save_steps(mgr, [1])
+    d = tmp_path / "step_000000001"
+    with open(d / "manifest.json") as f:
+        manifest = json.load(f)
+    manifest["arrays"]["params/w"]["shape"] = [3, 4]
+    (d / "manifest.json").write_text(json.dumps(manifest))
+    with pytest.raises(CheckpointCorruptError, match="manifest"):
+        mgr.restore(step=1)
+
+
+def test_all_corrupt_raises_corrupt_not_missing(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    _save_steps(mgr, [1])
+    os.remove(tmp_path / "step_000000001" / "arrays.npz")
+    with pytest.raises(CheckpointCorruptError, match="failed validation"):
+        mgr.restore()
+    with pytest.raises(FileNotFoundError):
+        CheckpointManager(str(tmp_path / "empty"), keep=5).restore()
+
+
+# ------------------------------------------------------------------------ GC
+def test_gc_prunes_oldest_keeps_window(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    _save_steps(mgr, [1, 2, 3, 4, 5])
+    assert mgr.steps() == [4, 5]
+    _assert_roundtrip(_trees(5), mgr.restore()[0])
+
+
+def test_gc_never_prunes_newest_valid_under_corrupt_dirs(tmp_path):
+    """Corrupt step dirs stacked ABOVE every valid step can fill the
+    keep-K window; GC must still retain the newest structurally-valid
+    step or every restore path is stranded."""
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    _save_steps(mgr, [0, 1])
+    (tmp_path / "step_000000008").mkdir()      # pre-existing garbage dirs
+    (tmp_path / "step_000000009").mkdir()      # (e.g. a foreign writer)
+    _save_steps(mgr, [2])                      # triggers GC
+    assert mgr.steps() == [2, 8, 9]            # window {8,9} + newest valid 2
+    restored, meta = mgr.restore()             # skips 9, 8 -> lands on 2
+    assert meta["step"] == 2
+    _assert_roundtrip(_trees(2), restored)
+
+
+def test_restore_before_walks_past_newest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    _save_steps(mgr, [1, 2, 3])
+    restored, meta = mgr.restore(before=3)     # escalating rollback
+    assert meta["step"] == 2
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(before=1)
+
+
+# ------------------------------------------------------------- async writer
+def test_async_save_snapshots_meta_at_call_time(tmp_path):
+    """Regression (the trainer's live loss list): meta passed to save()
+    must be deep-copied BEFORE the worker serializes -- mutations after
+    save() returns must not leak into the snapshot."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    losses = [1.0, 2.0]
+    mgr.save(2, _trees(2), meta={"losses": losses})
+    losses.append(3.0)                         # the race window
+    mgr.wait()
+    assert mgr.restore(step=2)[1]["losses"] == [1.0, 2.0]
+
+
+def test_async_save_then_blocking_save_no_interleave(tmp_path):
+    """A blocking save issued while an async save is in flight (the
+    SIGTERM drain shape) must serialize: both steps commit whole, no
+    tmp litter survives, and GC saw consistent listings."""
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    for i in range(5):
+        mgr.save(2 * i, _trees(2 * i), meta={"tag": f"a{i}"})       # async
+        mgr.save(2 * i + 1, _trees(2 * i + 1), block=True)          # drain
+    mgr.wait()
+    assert mgr.steps() == list(range(10))
+    for s in (0, 5, 9):
+        _assert_roundtrip(_trees(s), mgr.restore(step=s)[0])
+    assert not [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+
+
+def test_concurrent_writers_same_step_commit_whole(tmp_path):
+    """Unique tmp names + the ENOTEMPTY fallback: racing writers for the
+    SAME step leave one complete committed dir, never a mixed one."""
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    errs = []
+
+    def write():
+        try:
+            mgr._write(4, {"params": {"w": np.ones((8, 8), np.float32)}},
+                       {"tag": "race"})
+        except Exception as e:                 # noqa: BLE001
+            errs.append(e)
+
+    threads = [threading.Thread(target=write) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    restored, meta = mgr.restore(step=4)       # fully validated
+    np.testing.assert_array_equal(restored["params"]["w"],
+                                  np.ones((8, 8), np.float32))
+    assert not [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+
+
+def test_wait_surfaces_worker_failure_once_then_recovers(tmp_path):
+    faults = TrainFaultInjector(TrainFaultPlan.of(ckpt_fail=(0,)))
+    mgr = CheckpointManager(str(tmp_path), keep=3, faults=faults)
+    mgr.save(1, _trees(1), meta={})            # async; worker will raise
+    with pytest.raises(RuntimeError, match="async checkpoint failed"):
+        mgr.wait()
+    mgr.wait()                                 # error cleared: no re-raise
+    assert mgr.steps() == []                   # failed snapshot never commits
+    mgr.save(2, _trees(2), meta={}, block=True)    # manager still usable
+    assert mgr.restore()[1]["step"] == 2
+
+
+def test_injected_ckpt_failure_leaves_previous_state_observable(tmp_path):
+    """The injected crash fires AFTER staging and BEFORE the rename: the
+    commit point guarantees the failed write is invisible and the
+    previous step restores untouched (a fresh manager also sweeps the
+    staged tmp dir)."""
+    _save_steps(CheckpointManager(str(tmp_path), keep=3), [1])
+    faults = TrainFaultInjector(TrainFaultPlan.of(ckpt_fail=(0,)))
+    mgr = CheckpointManager(str(tmp_path), keep=3, faults=faults)
+    with pytest.raises(Exception):
+        mgr.save(2, _trees(2), meta={}, block=True)
+    assert mgr.steps() == [1]
+    _assert_roundtrip(_trees(1), mgr.restore()[0])
+    swept = CheckpointManager(str(tmp_path), keep=3)
+    assert not [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+    assert swept.steps() == [1]

@@ -1,0 +1,327 @@
+"""Compiled-regime guard + audit tests (the two ROADMAP blind spots).
+
+Before this layer, a jitted step could NOT trip the finite guard
+(``check_finite`` -> None under trace, nothing recorded) and a cached
+jit re-execution recorded ZERO contraction audit (trace-time notes).
+Both are first-class now:
+
+- the dispatcher bakes ``jax.debug.callback`` finite probes into guarded
+  traces; the pending-trip ledger is drained after the step, RouteHealth
+  demotes, and the step owner re-jits + retries deterministically on the
+  standard route (``repro.train.step.GuardedStep``, the jitted engine's
+  ``_guarded_call``);
+- ``counting.compiled_audit`` bakes per-execution contraction notes, so
+  ``track_compiled_contractions`` reports the REAL square fraction of a
+  cached run instead of warning-and-zero.
+
+The acceptance case: a jitted training step whose BACKWARD contraction
+saturates (NaN/inf in ``.bwd_*``) trips, demotes exactly that key,
+retries on the standard route, and completes with finite gradients --
+with the pre-fix (eager-only, ``compiled=False``) behavior pinned as
+missing it.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import counting, guards
+from repro.core.einsum import fs_einsum
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.kernels import routing
+from repro.models.lm import build_model
+from repro.optim import adamw
+from repro.serve.engine import Engine, EngineConfig
+from repro.serve.server import Request
+from repro.train import step as step_mod
+
+RNG = np.random.default_rng(23)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_guard_state():
+    routing.reset_route_health()
+    guards.clear_pending_trips()
+    yield
+    routing.reset_route_health()
+    guards.clear_pending_trips()
+
+
+# --------------------------------------------------------------------------
+# The saturating jitted train step (cotangent ~1e22 -> inf in .bwd_*)
+# --------------------------------------------------------------------------
+
+def _sat_operands():
+    x = jnp.asarray(RNG.normal(size=(8, 16)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(16, 4)).astype(np.float32))
+    return x, w
+
+
+def _make_sat_step(mode):
+    """A minimal train step whose BACKWARD square route saturates: the
+    loss scale puts the VJP cotangent at ~1e22, so the materialized
+    ``(g+w)^2`` is inf in f32 while the standard backward stays finite
+    (same construction as tests/test_train_square.py, jitted here).
+    ``square_exact`` actually squares (``square_virtual`` cancels the
+    corrections algebraically and cannot trip)."""
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            out = fs_einsum("mk,kn->mn", batch["x"], p["w"], mode=mode,
+                            site="chaos")
+            return jnp.sum(out) * 1e22
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return params, opt_state, {"loss": loss, "grads": grads}
+
+    return train_step
+
+
+def _std_grad_ref(x, w):
+    return jax.grad(
+        lambda p: jnp.sum(jnp.einsum("mk,kn->mn", x, p)) * 1e22)(w)
+
+
+def test_prefix_eager_only_guard_misses_jitted_backward_nan():
+    """The BEFORE picture: under ``compiled=False`` (the eager-only
+    guard this PR replaces as the default) the jitted step's backward
+    saturation is invisible -- non-finite grads come back, zero trips,
+    zero demotions.  This is the documented miss the acceptance test
+    below fixes."""
+    x, w = _sat_operands()
+    step = jax.jit(_make_sat_step("square_exact"))
+    with guards.guarded(trip_limit=1, compiled=False):
+        _, _, metrics = step({"w": w}, {}, {"x": x})
+        jax.block_until_ready(metrics)
+        trips = guards.drain_pending_trips()
+    assert not bool(jnp.isfinite(metrics["grads"]["w"]).all())
+    assert trips == {}
+    assert routing.route_health().summary()["trips"] == {}
+
+
+def test_jitted_backward_trip_demotes_bwd_key_and_retries_finite():
+    """ACCEPTANCE: a jitted training step with an injected NaN in a
+    backward contraction trips the compiled guard, demotes exactly that
+    ``<site>.bwd_*`` RouteHealth key (forward site untouched), re-jits,
+    retries on the standard route, and completes with finite, correct
+    gradients."""
+    x, w = _sat_operands()
+    gs = step_mod.GuardedStep(_make_sat_step("square_exact"), jit=True,
+                              trip_limit=1, max_retries=4)
+    _, _, metrics = gs({"w": w}, {}, {"x": x})
+
+    grads = metrics["grads"]["w"]
+    assert bool(jnp.isfinite(grads).all())
+    np.testing.assert_allclose(np.asarray(grads),
+                               np.asarray(_std_grad_ref(x, w)), rtol=1e-5)
+    # the recovery really happened, and was counted
+    assert gs.guard_trips >= 1
+    assert gs.retries >= 1
+    assert gs.rejits >= 1                  # demotion forced a fresh trace
+    # exactly the backward keys demoted; the forward site still serves
+    h = routing.route_health()
+    assert h.demotions, "no demotion recorded"
+    assert all(k.split("|")[0].startswith("chaos.bwd_")
+               for k in h.demotions), h.demotions
+    assert not any(k.split("|")[0] == "chaos" for k in h.demotions)
+
+    # steady state: the demoted trace is clean -- no more trips/retries
+    t0, r0 = gs.guard_trips, gs.retries
+    _, _, m2 = gs({"w": w}, {}, {"x": x})
+    assert bool(jnp.isfinite(m2["grads"]["w"]).all())
+    assert (gs.guard_trips, gs.retries) == (t0, r0)
+
+
+def test_guarded_step_retry_is_deterministic():
+    """The demoted retry computes exactly what an eagerly-guarded run
+    produces (same inputs, same standard-route backward): recovery is
+    bit-reproducible, not merely finite."""
+    x, w = _sat_operands()
+    gs = step_mod.GuardedStep(_make_sat_step("square_exact"), jit=True,
+                              trip_limit=1, max_retries=4)
+    _, _, m_jit = gs({"w": w}, {}, {"x": x})
+
+    routing.reset_route_health()
+    with guards.guarded(trip_limit=1):
+        _, _, m_eager = _make_sat_step("square_exact")({"w": w}, {}, {"x": x})
+    assert adamw.tree_fingerprint(np.asarray(m_jit["grads"]["w"])) == \
+        adamw.tree_fingerprint(np.asarray(m_eager["grads"]["w"]))
+
+
+def test_guarded_step_clean_path_is_transparent():
+    """No saturation -> no trips, no retries, no re-jits, bit-identical
+    outputs to the bare jitted step (the guard_trips == 0 clean-run gate
+    BENCH_training.json's guarded row rides on)."""
+    x = jnp.asarray(RNG.normal(size=(8, 16)).astype(np.float32))
+    w = jnp.asarray(RNG.normal(size=(16, 4)).astype(np.float32))
+
+    def step(params, opt_state, batch):
+        out = fs_einsum("mk,kn->mn", batch["x"], params["w"],
+                        mode="square_exact", site="clean")
+        return params, opt_state, {"loss": jnp.sum(out), "out": out}
+
+    gs = step_mod.GuardedStep(step, jit=True, trip_limit=1)
+    _, _, m_guarded = gs({"w": w}, {}, {"x": x})
+    _, _, m_raw = jax.jit(step)({"w": w}, {}, {"x": x})
+    assert gs.stats() == {"guard_trips": 0, "rejits": 0, "retries": 0}
+    assert adamw.tree_fingerprint(np.asarray(m_guarded["out"])) == \
+        adamw.tree_fingerprint(np.asarray(m_raw["out"]))
+
+
+def test_guarded_step_raises_when_source_is_not_demotable():
+    """A non-finite source OUTSIDE the square-routed contractions (here:
+    poisoned input data) trips nothing, so the guard must not loop
+    forever -- nothing pends, the step returns; while a persistent
+    square trip that cannot be fixed by demotion is bounded by
+    max_retries."""
+    x, w = _sat_operands()
+
+    # trips come from the contraction; with trip_limit high enough that
+    # no demotion ever lands inside the retry budget, the step raises
+    gs = step_mod.GuardedStep(_make_sat_step("square_exact"), jit=True,
+                              trip_limit=100, max_retries=2)
+    with pytest.raises(RuntimeError, match="still tripping"):
+        gs({"w": w}, {}, {"x": x})
+
+
+# --------------------------------------------------------------------------
+# Compiled audits: cached jit executions report real fractions
+# --------------------------------------------------------------------------
+
+def _tiny_train_world():
+    cfg = ModelConfig(
+        name="tiny-compiled-audit", family="dense", n_layers=2, d_model=32,
+        n_heads=2, n_kv_heads=2, d_ff=64, vocab=128, head_dim=16,
+        dtype="float32", scan_layers=False, remat="none", attn_chunk_q=16,
+        attn_chunk_kv=16, loss_chunk=16, max_seq=64,
+        matmul_mode="square_virtual")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.adamw_init(params)
+    data = SyntheticLM(DataConfig(global_batch=2, seq_len=32,
+                                  vocab=cfg.vocab, seed=5), cfg)
+    return model, params, opt, data.take(3)
+
+
+def test_cached_jit_run_reports_real_square_fraction():
+    """ACCEPTANCE: a cached-jit training execution reports a real
+    ``fraction_square >= 0.9`` (forward AND backward) through the
+    compiled counter -- no zero, no warning -- while the trace-time
+    counter on the same cached call still warns-and-zeros (the bug the
+    compiled audit exists to fix)."""
+    model, params, opt, batches = _tiny_train_world()
+    with counting.compiled_audit():
+        step = jax.jit(step_mod.make_train_step(model,
+                                                step_mod.TrainConfig()))
+        params, opt, _ = step(params, opt, batches[0])   # traces + runs
+        jax.block_until_ready(params)
+
+    # cached execution: the compiled counter sees the real mix
+    with counting.track_compiled_contractions() as ctr:
+        params, opt, metrics = step(params, opt, batches[1])
+        jax.block_until_ready(metrics["loss"])
+    assert ctr.total_mults > 0 and ctr.bwd_mults > 0
+    assert ctr.fraction_square >= 0.9
+    assert ctr.fraction_square_bwd >= 0.9
+    sites = set(ctr.by_site())
+    assert any(s.endswith(".bwd_x") for s in sites)
+    assert any(s.endswith(".bwd_w") for s in sites)
+
+    # same cached call through the TRACE-time counter: warn-and-zero
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        with counting.track_contractions() as tctr:
+            params, opt, _ = step(params, opt, batches[2])
+    assert tctr.total_mults == 0
+    assert any(issubclass(c.category, counting.EmptyAuditWarning)
+               for c in caught)
+
+
+def test_compiled_audit_counts_every_execution_not_every_trace():
+    """N cached executions tally N times the per-step volume (callbacks
+    fire per run), and notes are NOT emitted into traces made outside a
+    compiled_audit region."""
+    x, w = jnp.ones((4, 8)), jnp.ones((8, 2))
+    with counting.compiled_audit():
+        f = jax.jit(lambda a, b: fs_einsum("mk,kn->mn", a, b,
+                                           mode="square_virtual",
+                                           site="ffn"))
+        f(x, w)
+    with counting.track_compiled_contractions() as ctr:
+        for _ in range(3):
+            jax.block_until_ready(f(x, w))
+    assert ctr.total_mults == 3 * 4 * 8 * 2
+
+    g = jax.jit(lambda a, b: fs_einsum("mk,kn->mn", a, b,
+                                       mode="square_virtual", site="ffn"))
+    g(x, w)                                   # traced WITHOUT the audit
+    with counting.track_compiled_contractions() as ctr2:
+        jax.block_until_ready(g(x, w))
+    assert ctr2.total_mults == 0
+
+
+# --------------------------------------------------------------------------
+# Engine: the jitted guarded regime
+# --------------------------------------------------------------------------
+
+ENGINE_KW = dict(max_slots=2, block_size=8, num_blocks=24, blocks_per_seq=4,
+                 prefill_chunk=8, max_new_tokens=4)
+
+
+def _engine_world():
+    from repro.configs import get_config
+    cfg = get_config("deepseek-7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = [Request(0, [3, 1, 4, 1, 5, 9]), Request(1, [2, 7, 1, 8])]
+    return model, params, reqs
+
+
+def test_jitted_guarded_engine_clean_run_token_identical():
+    """guard=True + jit=True: probes are baked and drained every model
+    call, and a clean run has zero trips/re-jits with tokens identical
+    to the unguarded jitted engine (the compiled guard is transparent
+    until it fires)."""
+    model, params, reqs = _engine_world()
+    base = Engine(model, params, EngineConfig(**ENGINE_KW)).run(
+        [Request(r.rid, list(r.tokens)) for r in reqs])
+    eng = Engine(model, params, EngineConfig(guard=True, **ENGINE_KW))
+    out = eng.run([Request(r.rid, list(r.tokens)) for r in reqs])
+    assert all(r.ok for r in out.values())
+    assert {rid: r.tokens for rid, r in out.items()} == \
+        {rid: r.tokens for rid, r in base.items()}
+    assert eng.metrics.guard_trips == 0
+    assert eng.metrics.guard_rejits == 0
+
+
+def test_jitted_engine_rejits_and_recovers_on_core_demotion():
+    """When RouteHealth demotes a key mid-run (simulated via a pending
+    probe trip against one of the engine's own square-routed decode
+    sites), ``_guarded_call`` drains it, re-jits the model fns, and the
+    retried call serves tokens identical to the clean run -- per-slot
+    decode survives a core-layer demotion without failing requests."""
+    model, params, reqs = _engine_world()
+    base = Engine(model, params, EngineConfig(**ENGINE_KW)).run(
+        [Request(r.rid, list(r.tokens)) for r in reqs])
+
+    eng = Engine(model, params, EngineConfig(guard=True, **ENGINE_KW))
+    # seed one pending probe trip + demotion (a synthetic key: forcing a
+    # REAL saturation through a healthy model would need poisoned
+    # weights; the ledger is the injection point, and _guarded_call's
+    # contract -- drain, count, re-jit on epoch change, retry -- is
+    # independent of which key tripped)
+    probe_key = routing.health_key("synthetic_probe", (1, 2, 256, 1024),
+                                   jnp.float32)
+    guards._probe_landed(probe_key, False)
+    routing.route_health().record_trip(probe_key, limit=1)
+    epoch0 = eng._route_epoch
+    out = eng.run([Request(r.rid, list(r.tokens)) for r in reqs])
+    assert all(r.ok for r in out.values())
+    assert {rid: r.tokens for rid, r in out.items()} == \
+        {rid: r.tokens for rid, r in base.items()}
+    assert eng.metrics.guard_trips >= 1
+    assert eng.metrics.guard_rejits >= 1
+    assert eng._route_epoch > epoch0

@@ -22,8 +22,10 @@ from repro.kernels import routing
 @pytest.fixture(autouse=True)
 def _fresh_route_health():
     routing.reset_route_health()
+    guards.clear_pending_trips()
     yield
     routing.reset_route_health()
+    guards.clear_pending_trips()
 
 
 def _cancelling_operands(m=4, k=8, n=4, mag=1e19):
@@ -165,9 +167,13 @@ def test_demotion_is_per_site_shape_dtype_key():
     assert bool(jnp.isfinite(out).all())
 
 
-def test_guard_skips_check_under_jit_trace():
-    """Inside jit the outputs are tracers: the guard must neither trip
-    nor alter results (check_finite -> None -> skip)."""
+def test_legacy_eager_only_guard_misses_jitted_trips():
+    """The PRE-compiled-guard stance, kept reachable as
+    ``guarded(compiled=False)``: inside jit the outputs are tracers, the
+    in-line check skips (check_finite -> None), NO probe is baked, and a
+    saturating square route serves inf with zero trips recorded -- the
+    blind spot ISSUE 9 closes (tests/test_compiled_guard.py pins the
+    fixed behavior)."""
     x, y = _cancelling_operands()
 
     @jax.jit
@@ -175,7 +181,40 @@ def test_guard_skips_check_under_jit_trace():
         return fs_einsum("mk,kn->mn", a, b, mode="square_exact",
                          site="jitted")
 
+    with guards.guarded(trip_limit=1, compiled=False):
+        out = f(x, y)
+        jax.block_until_ready(out)
+        trips = guards.drain_pending_trips()
+    assert not bool(jnp.isfinite(out).all())     # unguarded behaviour
+    assert trips == {}                           # nothing even pending
+    assert routing.route_health().summary()["trips"] == {}
+
+
+def test_compiled_guard_probes_jitted_trips_into_pending_ledger():
+    """With the (default) compiled guard policy the same jitted call
+    bakes a host-callback probe: the saturation lands in the pending
+    ledger and drain records it into RouteHealth -- the jitted regime is
+    guarded now (step-level retry semantics: test_compiled_guard.py)."""
+    x, y = _cancelling_operands()
+
+    @jax.jit
+    def f(a, b):
+        return fs_einsum("mk,kn->mn", a, b, mode="square_exact",
+                         site="jitted")
+
+    key = routing.health_key("jitted", (1, 4, 8, 4), jnp.float32)
     with guards.guarded(trip_limit=1):
         out = f(x, y)
-    assert not bool(jnp.isfinite(out).all())     # unguarded behaviour
-    assert routing.route_health().summary()["trips"] == {}
+        jax.block_until_ready(out)
+        trips = guards.drain_pending_trips()
+    assert not bool(jnp.isfinite(out).all())     # no IN-GRAPH fallback --
+    assert trips == {key: 1}                     # -- but the trip surfaced
+    assert routing.route_health().is_demoted(key)
+    # demotion is trace-time state: a FRESH trace serves standard, finite
+    g = jax.jit(lambda a, b: fs_einsum("mk,kn->mn", a, b,
+                                       mode="square_exact", site="jitted"))
+    with guards.guarded(trip_limit=1):
+        out2 = g(x, y)
+        jax.block_until_ready(out2)
+        assert guards.drain_pending_trips() == {}
+    assert bool(jnp.isfinite(out2).all())

@@ -1,0 +1,213 @@
+"""Trainer chaos suite: crash-consistent training under seeded faults.
+
+The contract (mirroring tests/test_faults.py for the serving engine):
+whatever a :class:`~repro.train.faults.TrainFaultPlan` injects -- raising
+steps, NaN-poisoned parameter updates, checkpoint-write crashes, a
+process kill or a SIGTERM mid-run -- the run must END with a loss
+trajectory and final parameters **bit-identical** to the unfaulted run:
+
+- raising steps are retried on the same batch (the step is functional:
+  bit-exact);
+- NaN updates COMMIT (realistic shape: the loss that exposes them is the
+  next step's), get caught by the loss probe, and roll back to the
+  newest valid checkpoint -- replay is bit-exact because the synthetic
+  pipeline regenerates batch ``t`` from ``(seed, t)``;
+- checkpoint-write faults degrade that snapshot only (counted, torn tmp
+  files invisible to restore);
+- kill/SIGTERM ends the "process" (SimulatedKill is a BaseException);
+  the harness restarts with a fresh Trainer + ``maybe_resume()``, which
+  must land on a complete checkpoint and replay to the same end state.
+"""
+import dataclasses
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.lm import build_model
+from repro.optim import adamw
+from repro.train import step as step_mod
+from repro.train.faults import (SimulatedKill, TrainFaultInjector,
+                                TrainFaultPlan)
+from repro.train.trainer import Trainer, TrainerConfig
+
+TOTAL = 6
+_SEEDS = tuple(int(s) for s in
+               os.environ.get("REPRO_CHAOS_SEEDS", "0,1,2").split(","))
+
+_CFG = ModelConfig(
+    name="tiny-chaos", family="dense", n_layers=2, d_model=32, n_heads=2,
+    n_kv_heads=2, d_ff=64, vocab=128, head_dim=16, dtype="float32",
+    scan_layers=False, remat="none", attn_chunk_q=16, attn_chunk_kv=16,
+    loss_chunk=16, max_seq=64, matmul_mode="square_virtual")
+_MODEL = build_model(_CFG)
+_STEP = jax.jit(step_mod.make_train_step(_MODEL, step_mod.TrainConfig()))
+
+
+def _trainer(ckpt_dir, faults=None, ckpt_every=2):
+    params = _MODEL.init(jax.random.PRNGKey(0))
+    opt = adamw.adamw_init(params)
+    data = SyntheticLM(DataConfig(global_batch=2, seq_len=16,
+                                  vocab=_CFG.vocab, seed=7), _CFG)
+    cfg = TrainerConfig(total_steps=TOTAL, ckpt_every=ckpt_every,
+                        ckpt_dir=str(ckpt_dir), keep=3, log_every=3,
+                        audit_contractions=False)
+    return Trainer(cfg, _STEP, params, opt, data, faults=faults)
+
+
+def _params_fp(tr):
+    return adamw.tree_fingerprint(jax.tree.map(np.asarray, tr.params))
+
+
+def _run_with_restarts(ckpt_dir, plan, max_restarts=4):
+    """Run to completion across simulated process deaths: each
+    SimulatedKill "restarts the process" -- a fresh Trainer resumes from
+    the newest valid checkpoint with a fresh injector whose plan no
+    longer kills (the node died once)."""
+    faults = TrainFaultInjector(plan)
+    deaths = 0
+    while True:
+        tr = _trainer(ckpt_dir, faults=faults)
+        tr.maybe_resume()
+        try:
+            return tr, tr.run(), deaths
+        except SimulatedKill:
+            deaths += 1
+            assert deaths <= max_restarts, "kill loop did not converge"
+            plan = dataclasses.replace(plan, kill_after=None,
+                                       sigterm_after=None)
+            faults = TrainFaultInjector(plan)
+
+
+@pytest.fixture(scope="module")
+def baseline(tmp_path_factory):
+    tr = _trainer(tmp_path_factory.mktemp("base"))
+    res = tr.run()
+    assert res["final_step"] == TOTAL
+    assert len(res["loss_trajectory"]) == TOTAL
+    assert all(np.isfinite(res["loss_trajectory"]))
+    assert res["rollbacks"] == 0 and res["step_failures"] == 0
+    return {"losses": res["loss_trajectory"], "params_fp": _params_fp(tr)}
+
+
+def _check_identical(tr, res, baseline):
+    assert res["final_step"] == TOTAL
+    assert res["loss_trajectory"] == baseline["losses"]
+    assert _params_fp(tr) == baseline["params_fp"]
+
+
+def test_step_faults_retry_bit_identical(tmp_path, baseline):
+    plan = TrainFaultPlan.of(step_fail=(1, 3))
+    faults = TrainFaultInjector(plan)
+    tr = _trainer(tmp_path, faults=faults)
+    res = tr.run()
+    _check_identical(tr, res, baseline)
+    assert res["step_failures"] == 2 == faults.injected["step"]
+    assert res["rollbacks"] == 0            # a retry, never a rollback
+
+
+def test_nan_grad_commits_then_rolls_back_bit_identical(tmp_path, baseline):
+    """The poisoned update COMMITS (its own loss is finite); the NEXT
+    step's loss probe exposes it and recovery is a genuine rollback to
+    the newest checkpoint + replay -- not a same-batch retry."""
+    plan = TrainFaultPlan.of(nan_grad=(2,))
+    faults = TrainFaultInjector(plan)
+    tr = _trainer(tmp_path, faults=faults)
+    res = tr.run()
+    _check_identical(tr, res, baseline)
+    assert faults.injected["nan"] == 1
+    assert res["rollbacks"] >= 1
+    assert res["step_failures"] == 0        # nothing raised
+
+
+def test_poisoned_checkpoint_escalates_to_older_snapshot(tmp_path, baseline):
+    """nan at call 1 -> the poisoned params are COMMITTED at step 2 and
+    then CHECKPOINTED (ckpt_every=2) before detection: the first
+    rollback restores the poisoned snapshot, makes no progress, and the
+    escalation path must walk back to the step-0 anchor."""
+    plan = TrainFaultPlan.of(nan_grad=(1,))
+    tr = _trainer(tmp_path, faults=TrainFaultInjector(plan))
+    tr.ckpt.async_save = False      # poisoned snapshot lands BEFORE the
+    res = tr.run()                  # probe fires: escalation guaranteed
+    _check_identical(tr, res, baseline)
+    assert res["rollbacks"] >= 2            # poisoned snapshot + escalation
+
+
+def test_ckpt_write_fault_absorbed_never_torn(tmp_path, baseline):
+    """An injected crash at the mid-write point (files staged, rename
+    pending) degrades that snapshot only: the run completes identically,
+    the failure is counted, and restore() never sees a torn dir."""
+    plan = TrainFaultPlan.of(ckpt_fail=(1,))   # ordinal 0 is the anchor
+    faults = TrainFaultInjector(plan)
+    tr = _trainer(tmp_path, faults=faults)
+    res = tr.run()
+    _check_identical(tr, res, baseline)
+    assert res["ckpt_failures"] >= 1 and faults.injected["ckpt"] == 1
+    trees, meta = tr.ckpt.restore()            # newest snapshot is whole
+    assert int(meta["step"]) in range(TOTAL + 1)
+
+
+def test_failed_anchor_write_falls_back_to_init_state(tmp_path, baseline):
+    """Worst case: the step-0 anchor write ITSELF fails, then a NaN
+    update forces a rollback with nothing restorable on disk -- the
+    trainer replays from the constructor-time state instead of dying."""
+    plan = TrainFaultPlan.of(ckpt_fail=(0, 1), nan_grad=(1,))
+    tr = _trainer(tmp_path, faults=TrainFaultInjector(plan), ckpt_every=2)
+    res = tr.run()
+    _check_identical(tr, res, baseline)
+    assert res["rollbacks"] >= 1 and res["ckpt_failures"] >= 2
+
+
+def test_kill_and_resume_bit_identical(tmp_path, baseline):
+    plan = TrainFaultPlan.of(kill_after=3)
+    faults = TrainFaultInjector(plan)
+    tr = _trainer(tmp_path, faults=faults)
+    with pytest.raises(SimulatedKill):
+        tr.run()                               # the "process" dies
+    assert faults.injected["kill"] == 1
+    # newest checkpoint is the periodic step-2 save (kill hit at 3,
+    # before the next cadence point) -- complete and restorable
+    assert tr.ckpt.latest_step() == 2
+
+    tr2 = _trainer(tmp_path)                   # the restarted "process"
+    assert tr2.maybe_resume()
+    assert tr2.step == 2
+    res = tr2.run()
+    _check_identical(tr2, res, baseline)
+
+
+def test_sigterm_mid_run_resumes_bit_identically(tmp_path, baseline):
+    """SIGTERM lands between steps; the handler must drain the async
+    writer and commit a final BLOCKING checkpoint before the process
+    dies -- with the periodic cadence effectively disabled, that
+    handler-written snapshot is the ONLY thing resume can land on."""
+    plan = TrainFaultPlan.of(sigterm_after=2)
+    faults = TrainFaultInjector(plan)
+    tr = _trainer(tmp_path, faults=faults, ckpt_every=100)
+    with pytest.raises(SimulatedKill):
+        tr.run()
+    assert faults.injected["sigterm"] == 1
+    assert tr._preempted
+    assert tr.ckpt.latest_step() == 2          # the handler's save
+
+    tr2 = _trainer(tmp_path, ckpt_every=100)
+    assert tr2.maybe_resume()
+    assert tr2.step == 2
+    res = tr2.run()
+    _check_identical(tr2, res, baseline)
+
+
+@pytest.mark.parametrize("seed", _SEEDS)
+def test_seeded_chaos_schedule_converges_bit_identical(
+        tmp_path, baseline, seed):
+    """The full gauntlet: a seeded random schedule mixing every fault
+    kind (plus kill+restart loops) must still converge to the exact
+    unfaulted trajectory and parameters."""
+    plan = TrainFaultPlan.random(seed)
+    tr, res, deaths = _run_with_restarts(tmp_path, plan)
+    _check_identical(tr, res, baseline)
+    if plan.kill_after is not None and plan.kill_after < TOTAL:
+        assert deaths >= 1
