@@ -7,7 +7,7 @@ cache-block utilization, batch occupancy -- and the paper's quantity, the
 fraction of serving contraction FLOPs routed through square-form
 arithmetic (`core/counting`).
 
-Four engine configurations ride one workload:
+Five engine configurations ride one workload:
 
 - ``standard``        -- multiplier-baseline GEMMs (context row);
 - ``square_raw``      -- ``square_pallas`` GEMMs, weights prepared per
@@ -21,6 +21,13 @@ Four engine configurations ride one workload:
                          guard, live because the bench is eager).  Its
                          gated ratio vs square_prepared is the measured
                          cost of the guard-rails on the happy path.
+- ``square_traced``   -- square_prepared with structured tracing
+                         (``repro.obs.trace``) live for the whole run.
+                         Its gated ratio vs square_prepared (>= 0.9 -
+                         tol) bounds the cost of full observability; the
+                         prepared row itself runs with tracing disabled,
+                         so its own gates double as the
+                         tracing-off-is-free check.
 
 Execution is EAGER (``EngineConfig(jit=False)``: the engine steps run
 op-by-op, like the prepared-operand rows in ``kernel_timing.py``): under
@@ -60,6 +67,7 @@ from repro.configs.base import ContractionPolicy, ModelConfig
 from repro.core import counting
 from repro.launch.serve import make_requests
 from repro.models.lm import build_model
+from repro.obs import trace as obs_trace
 from repro.serve.engine import Engine, EngineConfig, EngineMetrics
 from repro.serve.server import Request
 
@@ -130,10 +138,19 @@ def _pinned_paged_route(route: str):
             os.environ["REPRO_ROUTE"] = prev
 
 
-def _run_once(model, params, *, prepared: bool, guard: bool = False) -> Engine:
+def _run_once(model, params, *, prepared: bool, guard: bool = False,
+              traced: bool = False) -> Engine:
     eng = Engine(model, params, EngineConfig(prepared=prepared, jit=False,
                                              guard=guard, **ENGINE_KW))
-    eng.run(make_requests(model.cfg, N_REQUESTS, seed=17, lo=4, hi=13))
+    reqs = make_requests(model.cfg, N_REQUESTS, seed=17, lo=4, hi=13)
+    if traced:
+        # full structured tracing live for the whole run (the overhead
+        # row): every tick/prefill/decode span lands in the ring buffer
+        with obs_trace.capture() as tr:
+            eng.run(reqs)
+        eng.trace_records = len(tr.records())
+    else:
+        eng.run(reqs)
     return eng
 
 
@@ -166,25 +183,41 @@ def serving_rows(reps: int = 2) -> List[Dict]:
     # (trace-time counting records nothing under cached jit); this run
     # doubles as the raw-config warmup
     with counting.track_contractions() as ctr:
-        _run_once(model_sq, params, prepared=False)
+        eng_counted = _run_once(model_sq, params, prepared=False)
     fraction_square = ctr.fraction_square
+    audit = ctr.summary()
+    # cross-validate the observability layer against the audit: publish
+    # the audit into the counted engine's registry and read the gauge
+    # back out of the snapshot -- run.py --check gates the two agreeing
+    snap = eng_counted.obs_snapshot(audit=audit)
+    registry_fraction_square = snap["gauges"]["counting_fraction_square"]
+    c = snap["counters"]
+    registry_conserved = (
+        sum(c[f"engine_requests_{k}_total"]
+            for k in ("completed", "rejected", "shed", "timeouts",
+                      "failures", "cancelled"))
+        == c["engine_requests_submitted_total"])
 
     # one warmup per remaining config: the first run of each pays one-time
     # costs (plan-cache fills, tuning-cache consults, allocator warmup)
     # that would otherwise bias whichever config runs first
     _run_once(model_sq, params, prepared=True)
     _run_once(model_sq, params, prepared=True, guard=True)
+    _run_once(model_sq, params, prepared=True, traced=True)
     _run_once(model_std, params, prepared=False)
 
     best: Dict[str, Engine] = {}
     for _ in range(reps):
-        # interleave raw/prepared/guarded so the gated ratios are immune
-        # to progressive runner throttling across the bench
-        for key, model, prep, grd in (("raw", model_sq, False, False),
-                                      ("prepared", model_sq, True, False),
-                                      ("guarded", model_sq, True, True),
-                                      ("standard", model_std, False, False)):
-            eng = _run_once(model, params, prepared=prep, guard=grd)
+        # interleave raw/prepared/guarded/traced so the gated ratios are
+        # immune to progressive runner throttling across the bench
+        for key, model, prep, grd, trc in (
+                ("raw", model_sq, False, False, False),
+                ("prepared", model_sq, True, False, False),
+                ("guarded", model_sq, True, True, False),
+                ("traced", model_sq, True, False, True),
+                ("standard", model_std, False, False, False)):
+            eng = _run_once(model, params, prepared=prep, guard=grd,
+                            traced=trc)
             if key not in best or (eng.metrics.tokens_per_s
                                    > best[key].metrics.tokens_per_s):
                 best[key] = eng
@@ -192,12 +225,15 @@ def serving_rows(reps: int = 2) -> List[Dict]:
     tps_raw = best["raw"].metrics.tokens_per_s
     tps_prep = best["prepared"].metrics.tokens_per_s
     tps_grd = best["guarded"].metrics.tokens_per_s
+    tps_trc = best["traced"].metrics.tokens_per_s
     return [
         _row("serving_engine_standard[interp-eager]", "standard",
              best["standard"]),
         _row("serving_engine_square_raw[interp-eager]",
              "square_pallas/per-call-prep", best["raw"],
-             fraction_square=fraction_square),
+             fraction_square=fraction_square,
+             registry_fraction_square=registry_fraction_square,
+             registry_conserved=registry_conserved),
         _row("serving_engine_square_prepared[interp-eager]",
              "square_pallas/prepared", best["prepared"],
              fraction_square=fraction_square,
@@ -206,6 +242,10 @@ def serving_rows(reps: int = 2) -> List[Dict]:
              "square_pallas/prepared+guard", best["guarded"],
              guard_trips=best["guarded"].metrics.guard_trips,
              speedup_vs_prepared=tps_grd / tps_prep if tps_prep else 0.0),
+        _row("serving_engine_square_traced[interp-eager]",
+             "square_pallas/prepared+trace", best["traced"],
+             trace_records=getattr(best["traced"], "trace_records", 0),
+             speedup_vs_prepared=tps_trc / tps_prep if tps_prep else 0.0),
     ]
 
 
@@ -324,7 +364,14 @@ def check_serving(payload: Dict, tol: float) -> List[str]:
     - SWA windowed eviction must actually cap the footprint:
       the evicting engine's ``peak_blocks_used`` strictly below the
       retain-everything engine's, with identical greedy tokens
-      (``tokens_match_retain``).
+      (``tokens_match_retain``);
+    - the observability layer must agree with the ground truth: the
+      registry's ``counting_fraction_square`` gauge must equal the
+      counting audit's fraction, and the registry's terminal request
+      counters must partition submissions (``registry_conserved``);
+    - tracing must stay cheap: the fully-traced engine's tokens/s must
+      hold ``speedup_vs_prepared >= 0.9 - tol``, with at least one span
+      actually recorded (``trace_records > 0``).
     """
     failures = []
     rows = {r["name"]: r for r in payload.get("rows", [])}
@@ -352,6 +399,28 @@ def check_serving(payload: Dict, tol: float) -> List[str]:
         if grd.get("guard_trips", 0) != 0:
             failures.append(f"serving: {grd['guard_trips']} guard trips "
                             f"on the healthy bench workload")
+    raw = rows.get("serving_engine_square_raw[interp-eager]")
+    if raw is not None and "registry_fraction_square" in raw:
+        if abs(raw["registry_fraction_square"]
+               - raw.get("fraction_square", 0.0)) > 1e-9:
+            failures.append(
+                f"serving: registry fraction_square gauge "
+                f"({raw['registry_fraction_square']:.4f}) disagrees with "
+                f"the counting audit ({raw.get('fraction_square', 0.0):.4f})")
+        if not raw.get("registry_conserved", False):
+            failures.append("serving: registry terminal counters do not "
+                            "partition submitted requests")
+    trc = rows.get("serving_engine_square_traced[interp-eager]")
+    if trc is None:
+        failures.append("serving: traced-engine row missing")
+    else:
+        ratio = trc.get("speedup_vs_prepared", 0.0)
+        if ratio < 0.9 - tol:
+            failures.append(f"serving: traced-engine tokens/s ratio "
+                            f"{ratio:.2f} < {0.9 - tol:.2f} vs prepared "
+                            f"(tracing overhead regression)")
+        if trc.get("trace_records", 0) <= 0:
+            failures.append("serving: traced-engine row recorded no spans")
     krn = rows.get("serving_engine_long_kernel[jit]")
     if krn is None:
         failures.append("serving: long-context kernel row missing")

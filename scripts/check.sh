@@ -62,6 +62,28 @@ if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
     --blocks-per-seq 6 --prefill-chunk 8 \
     --deadline-ms 60000 --queue-limit 16 --guard
 
+  echo "== observability smoke (metrics snapshot + chrome trace) =="
+  # one traced serve run + one traced train run; check_obs.py validates
+  # the snapshot schema (terminal-counter conservation, percentile
+  # ordering, registry-vs-audit square fraction) and the trace_event
+  # JSON, and obs_report.py must render both -- see docs/observability.md
+  OBS_TMP="$(mktemp -d)"
+  trap 'rm -rf "$OBS_TMP"' EXIT
+  python -m repro.launch.serve --arch fairsquare-demo --reduced \
+    --requests 6 --max-new 4 --slots 4 --block-size 8 --blocks 32 \
+    --blocks-per-seq 6 --prefill-chunk 8 \
+    --deadline-ms 60000 --queue-limit 16 --guard \
+    --metrics-file "$OBS_TMP/serve.json" --trace-out "$OBS_TMP/serve_trace.json"
+  python -m repro.launch.train --arch fairsquare-demo --reduced \
+    --steps 4 --global-batch 4 --seq 64 \
+    --ckpt-dir "$OBS_TMP/ckpt" --ckpt-every 2 \
+    --metrics-file "$OBS_TMP/train.json" --trace-out "$OBS_TMP/train_trace.json"
+  python scripts/check_obs.py \
+    --snapshot "$OBS_TMP/serve.json" --snapshot "$OBS_TMP/train.json" \
+    --trace "$OBS_TMP/serve_trace.json" --trace "$OBS_TMP/train_trace.json"
+  python scripts/obs_report.py "$OBS_TMP/serve.json" >/dev/null
+  python scripts/obs_report.py "$OBS_TMP/train.json" >/dev/null
+
   echo "== smoke bench + regression gate (writes BENCH_kernels.json) =="
   # --check compares fresh measurements against the seed baselines and the
   # committed BENCH_kernels.json (read before --json overwrites it);

@@ -1,0 +1,169 @@
+#!/usr/bin/env python
+"""Observability artifact gate (stdlib only; exit 1 on any violation).
+
+Validates the two artifacts the launchers emit (see docs/observability.md):
+
+1. **Registry snapshot JSON** (``--metrics-file``): must have
+   ``counters`` / ``gauges`` / ``histograms`` maps with numeric values;
+   counters must be non-negative; each histogram summary needs
+   count/sum/mean/p50/p95/p99 with ordered percentiles; when the
+   request-lifecycle counters are present the terminal states must
+   PARTITION submissions (completed + rejected + shed + timeouts +
+   failures + cancelled == submitted); when both the registry audit
+   gauges and an engine/trainer section are present, the square
+   fractions must agree.
+2. **Chrome trace JSON** (``--trace-out``): ``traceEvents`` must be a
+   list of dicts with the trace_event-viewer's required keys -- ``ph``
+   in {X, i, M}, complete events carrying numeric ``ts`` and ``dur >=
+   0``, instants carrying scope ``s`` -- so the file actually loads in
+   Perfetto / chrome://tracing rather than failing at import time.
+
+Usage:
+    python scripts/check_obs.py --snapshot /tmp/m.json --trace /tmp/t.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+FAILURES = []
+
+TERMINAL_KEYS = ("completed", "rejected", "shed", "timeouts", "failures",
+                 "cancelled")
+
+
+def fail(msg: str) -> None:
+    FAILURES.append(msg)
+    print(f"FAIL: {msg}")
+
+
+def _is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_snapshot(path: str) -> None:
+    try:
+        with open(path) as f:
+            snap = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"snapshot {path}: unreadable ({e})")
+        return
+    if not isinstance(snap, dict):
+        fail(f"snapshot {path}: top level must be an object")
+        return
+    for sec in ("counters", "gauges", "histograms"):
+        if not isinstance(snap.get(sec), dict):
+            fail(f"snapshot: missing/invalid '{sec}' map")
+            return
+    for name, v in snap["counters"].items():
+        if not _is_num(v):
+            fail(f"snapshot: counter {name} is not numeric: {v!r}")
+        elif v < 0:
+            fail(f"snapshot: counter {name} is negative ({v}) -- "
+                 f"counters are monotonic")
+    for name, v in snap["gauges"].items():
+        if not _is_num(v):
+            fail(f"snapshot: gauge {name} is not numeric: {v!r}")
+    for name, s in snap["histograms"].items():
+        if not isinstance(s, dict):
+            fail(f"snapshot: histogram {name} is not a summary object")
+            continue
+        missing = [k for k in ("count", "sum", "mean", "p50", "p95", "p99")
+                   if not _is_num(s.get(k))]
+        if missing:
+            fail(f"snapshot: histogram {name} missing numeric {missing}")
+            continue
+        if s["count"] and not (s["p50"] <= s["p95"] <= s["p99"]):
+            fail(f"snapshot: histogram {name} percentiles not ordered: "
+                 f"p50={s['p50']} p95={s['p95']} p99={s['p99']}")
+
+    # request-lifecycle conservation: terminals partition submissions
+    c = snap["counters"]
+    if "engine_requests_submitted_total" in c:
+        submitted = c["engine_requests_submitted_total"]
+        parts = {k: c.get(f"engine_requests_{k}_total", 0.0)
+                 for k in TERMINAL_KEYS}
+        if sum(parts.values()) != submitted:
+            fail(f"snapshot: terminal counters do not partition "
+                 f"submissions: {parts} vs submitted={submitted}")
+
+    # checkpoint ledger: a commit needs a save attempt
+    if c.get("ckpt_commits_total", 0) > c.get("ckpt_saves_total", 0):
+        fail("snapshot: more checkpoint commits than save attempts")
+
+    # registry audit gauges must agree with the structured audit section
+    g = snap["gauges"]
+    audit = snap.get("contraction_audit")
+    if audit and "counting_fraction_square" in g:
+        if abs(g["counting_fraction_square"]
+               - audit["fraction_square"]) > 1e-9:
+            fail(f"snapshot: counting_fraction_square gauge "
+                 f"({g['counting_fraction_square']}) != audit "
+                 f"({audit['fraction_square']})")
+    print(f"ok: snapshot {path} ({len(c)} counters, "
+          f"{len(snap['gauges'])} gauges, "
+          f"{len(snap['histograms'])} histograms)")
+
+
+def check_trace(path: str) -> None:
+    try:
+        with open(path) as f:
+            tr = json.load(f)
+    except (OSError, ValueError) as e:
+        fail(f"trace {path}: unreadable ({e})")
+        return
+    events = tr.get("traceEvents") if isinstance(tr, dict) else None
+    if not isinstance(events, list):
+        fail(f"trace {path}: missing 'traceEvents' list")
+        return
+    n_x = n_i = 0
+    for i, e in enumerate(events):
+        if not isinstance(e, dict):
+            fail(f"trace: event #{i} is not an object")
+            return
+        ph = e.get("ph")
+        if ph not in ("X", "i", "M"):
+            fail(f"trace: event #{i} has unsupported ph={ph!r}")
+            continue
+        if ph == "M":
+            continue
+        if not _is_num(e.get("ts")) or e["ts"] < 0:
+            fail(f"trace: event #{i} ({e.get('name')}) bad ts={e.get('ts')!r}")
+        if not isinstance(e.get("name"), str) or "pid" not in e \
+                or "tid" not in e:
+            fail(f"trace: event #{i} missing name/pid/tid")
+        if ph == "X":
+            n_x += 1
+            if not _is_num(e.get("dur")) or e["dur"] < 0:
+                fail(f"trace: complete event #{i} ({e.get('name')}) "
+                     f"bad dur={e.get('dur')!r}")
+        else:
+            n_i += 1
+            if e.get("s") not in ("t", "p", "g"):
+                fail(f"trace: instant event #{i} ({e.get('name')}) "
+                     f"bad scope s={e.get('s')!r}")
+    print(f"ok: trace {path} ({n_x} spans, {n_i} instants)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--snapshot", action="append", default=[],
+                    help="registry snapshot JSON to validate (repeatable)")
+    ap.add_argument("--trace", action="append", default=[],
+                    help="Chrome trace JSON to validate (repeatable)")
+    args = ap.parse_args(argv)
+    if not args.snapshot and not args.trace:
+        ap.error("nothing to check: pass --snapshot and/or --trace")
+    for p in args.snapshot:
+        check_snapshot(p)
+    for p in args.trace:
+        check_trace(p)
+    if FAILURES:
+        print(f"\ncheck_obs: {len(FAILURES)} violation(s)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

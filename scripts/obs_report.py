@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""Render a metrics-registry snapshot as a terminal dashboard.
+
+Input: the JSON written by ``launch/serve.py --metrics-file`` or
+``launch/train.py --metrics-file`` (the engine's / trainer's
+``obs_snapshot()``; schema validated by ``scripts/check_obs.py``).
+No dependencies beyond stdlib -- this is the "glance at a run" tool:
+
+    PYTHONPATH=src python -m repro.launch.serve ... --metrics-file /tmp/m.json
+    python scripts/obs_report.py /tmp/m.json
+
+Sections render only when their metrics are present, so one script
+covers serving snapshots, training snapshots, and bare registry dumps.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _fmt(v: float) -> str:
+    if v != v:                                    # NaN
+        return "nan"
+    if abs(v) >= 1000 or v == int(v):
+        return f"{v:,.0f}"
+    return f"{v:.4g}"
+
+
+def _ms(v) -> str:
+    return "-" if v is None else f"{float(v) * 1e3:.1f}ms"
+
+
+def _section(title: str):
+    print(f"\n== {title} ==")
+
+
+def _kv(label: str, value: str):
+    print(f"  {label:<28} {value}")
+
+
+def render(snap: dict) -> None:
+    counters = snap.get("counters", {})
+    gauges = snap.get("gauges", {})
+    hists = snap.get("histograms", {})
+    eng = snap.get("engine")
+
+    if eng:
+        _section("serving engine")
+        _kv("throughput", f"{eng['tokens_per_s']:.1f} tok/s "
+                          f"({_fmt(eng['tokens_out'])} tokens, "
+                          f"{eng['wall_s']:.2f}s wall)")
+        _kv("requests", f"{_fmt(eng['submitted'])} submitted / "
+                        f"{_fmt(eng['completed'])} completed / "
+                        f"{_fmt(eng['rejected'])} rejected / "
+                        f"{_fmt(eng['timeouts'])} timed out / "
+                        f"{_fmt(eng['failures'])} failed")
+        _kv("ttft p50/p95/p99", f"{_ms(eng['ttft_p50_s'])} / "
+                                f"{_ms(eng['ttft_p95_s'])} / "
+                                f"{_ms(eng['ttft_p99_s'])} "
+                                f"(mean {_ms(eng['mean_ttft_s'])})")
+        _kv("decode step p50/p95/p99", f"{_ms(eng['decode_step_p50_s'])} / "
+                                       f"{_ms(eng['decode_step_p95_s'])} / "
+                                       f"{_ms(eng['decode_step_p99_s'])}")
+        _kv("block util (mean/peak)",
+            f"{eng['mean_block_utilization']:.0%} / "
+            f"{_fmt(eng['peak_blocks_used'])} blocks")
+        _kv("preempt / guard trips / re-jits",
+            f"{_fmt(eng['preemptions'])} / {_fmt(eng['guard_trips'])} / "
+            f"{_fmt(eng['guard_rejits'])}")
+
+    if "train_steps_total" in counters:
+        _section("trainer")
+        _kv("steps committed", _fmt(counters["train_steps_total"]))
+        st = hists.get("train_step_seconds")
+        if st and st["count"]:
+            _kv("step time p50/p95/p99",
+                f"{_ms(st['p50'])} / {_ms(st['p95'])} / {_ms(st['p99'])} "
+                f"(n={st['count']}, post-warmup)")
+        _kv("failures / rollbacks / stragglers",
+            f"{_fmt(counters.get('train_step_failures_total', 0))} / "
+            f"{_fmt(counters.get('train_rollbacks_total', 0))} / "
+            f"{_fmt(counters.get('train_stragglers_total', 0))}")
+        if "train_last_loss" in gauges:
+            _kv("last committed loss", _fmt(gauges["train_last_loss"]))
+
+    if "ckpt_saves_total" in counters:
+        _section("checkpoints")
+        _kv("saves -> commits", f"{_fmt(counters['ckpt_saves_total'])} -> "
+                                f"{_fmt(counters['ckpt_commits_total'])}")
+        _kv("write failures / restores / gc",
+            f"{_fmt(counters.get('ckpt_write_failures_total', 0))} / "
+            f"{_fmt(counters.get('ckpt_restores_total', 0))} / "
+            f"{_fmt(counters.get('ckpt_gc_removed_total', 0))}")
+
+    if "counting_fraction_square" in gauges:
+        _section("square-route audit")
+        _kv("fraction square (fwd)",
+            f"{gauges['counting_fraction_square']:.1%}")
+        if "counting_fraction_square_bwd" in gauges:
+            _kv("fraction square (bwd)",
+                f"{gauges['counting_fraction_square_bwd']:.1%}")
+        _kv("fraction demoted",
+            f"{gauges.get('counting_fraction_demoted', 0.0):.1%}")
+        _kv("total multiplies", _fmt(gauges.get("counting_total_mults", 0)))
+
+    health = snap.get("route_health")
+    if health is not None:
+        _section("route health")
+        demoted = [h for h in health if h["demoted"]]
+        _kv("tracked sites", f"{len(health)} ({len(demoted)} demoted)")
+        for h in health:
+            flag = "DEMOTED" if h["demoted"] else f"{h['trips']} trip(s)"
+            _kv(f"  {h['key']}", flag)
+
+    leftovers = {k: v for k, v in hists.items()
+                 if k not in ("train_step_seconds",)
+                 and not k.startswith("engine_")}
+    if leftovers:
+        _section("other histograms")
+        for k, s in sorted(leftovers.items()):
+            _kv(k, f"n={s['count']} p50={_fmt(s['p50'])} "
+                   f"p95={_fmt(s['p95'])} p99={_fmt(s['p99'])}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("snapshot", help="metrics snapshot JSON "
+                                     "(launch ... --metrics-file)")
+    args = ap.parse_args(argv)
+    try:
+        with open(args.snapshot) as f:
+            snap = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"obs_report: cannot read {args.snapshot}: {e}",
+              file=sys.stderr)
+        return 1
+    if not isinstance(snap, dict) or "counters" not in snap:
+        print("obs_report: not a registry snapshot (no 'counters' key)",
+              file=sys.stderr)
+        return 1
+    print(f"metrics snapshot: {args.snapshot}")
+    render(snap)
+    print()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -57,6 +57,9 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 __all__ = ["CheckpointManager", "CheckpointCorruptError"]
 
 logger = logging.getLogger("repro.checkpoint")
@@ -137,7 +140,8 @@ def _build_manifest(step: int, flat: Dict[str, np.ndarray]) -> Dict[str, Any]:
 
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3, async_save: bool = True,
-                 faults=None):
+                 faults=None,
+                 registry: Optional[obs_metrics.MetricsRegistry] = None):
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
@@ -146,6 +150,14 @@ class CheckpointManager:
         # the tmp dir and BEFORE the atomic rename -- the torn-writer
         # crash point the commit protocol must make unobservable
         self._faults = faults
+        reg = registry if registry is not None else obs_metrics.default_registry()
+        self.registry = reg
+        # ckpt_commits_total counts atomic renames that LANDED -- a save
+        # that died before its rename bumps write_failures instead, so
+        # commits is the crash-consistency ground truth tests gate on
+        self._c = {k: reg.counter(f"ckpt_{k}_total")
+                   for k in ("saves", "commits", "write_failures",
+                             "restores", "gc_removed")}
         os.makedirs(directory, exist_ok=True)
         self._worker: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -190,37 +202,44 @@ class CheckpointManager:
         final = self._step_dir(step)
         # unique tmp dir: concurrent writers for the same step never collide
         tmp = f"{final}.{os.getpid()}.{threading.get_ident()}.tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        flat = {}
-        for name, tree in trees.items():
-            for k, v in _flatten(tree, f"{name}/").items():
-                flat[k] = np.asarray(v)       # gathers the logical array
-        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
-            np.savez(f, **flat)
-            f.flush()
-            os.fsync(f.fileno())
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump(dict(meta, step=step), f)
-            f.flush()
-            os.fsync(f.fileno())
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(_build_manifest(step, flat), f)
-            f.flush()
-            os.fsync(f.fileno())
-        _fsync_dir(tmp)
+        # stage: everything up to the rename -- files written AND fsynced
+        # into the tmp dir (spans survive a mid-write exception; the
+        # fault injector's kill point sits between stage and commit)
+        with obs_trace.span("ckpt.stage", cat="ckpt", step=step):
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            flat = {}
+            for name, tree in trees.items():
+                for k, v in _flatten(tree, f"{name}/").items():
+                    flat[k] = np.asarray(v)   # gathers the logical array
+            with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+                np.savez(f, **flat)
+                f.flush()
+                os.fsync(f.fileno())
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(dict(meta, step=step), f)
+                f.flush()
+                os.fsync(f.fileno())
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(_build_manifest(step, flat), f)
+                f.flush()
+                os.fsync(f.fileno())
+            with obs_trace.span("ckpt.fsync", cat="ckpt", step=step):
+                _fsync_dir(tmp)
         if self._faults is not None:
             # simulated crash point: files written, commit rename pending
             self._faults.before_ckpt_write(step)
-        try:
-            os.replace(tmp, final)            # atomic commit
-        except OSError:
-            if os.path.isdir(final):          # same step already committed
-                shutil.rmtree(tmp, ignore_errors=True)
-            else:
-                raise
-        _fsync_dir(self.dir)                  # commit the rename itself
+        with obs_trace.span("ckpt.commit", cat="ckpt", step=step):
+            try:
+                os.replace(tmp, final)        # atomic commit
+            except OSError:
+                if os.path.isdir(final):      # same step already committed
+                    shutil.rmtree(tmp, ignore_errors=True)
+                else:
+                    raise
+            _fsync_dir(self.dir)              # commit the rename itself
+        self._c["commits"].inc()
 
     def _quick_valid(self, step: int) -> bool:
         """Cheap structural check (all three files present) -- GC's
@@ -243,6 +262,7 @@ class CheckpointManager:
         for s in steps:
             if s not in keep:
                 shutil.rmtree(self._step_dir(s), ignore_errors=True)
+                self._c["gc_removed"].inc()
 
     def save(self, step: int, trees: Dict[str, Any],
              meta: Optional[Dict[str, Any]] = None, block: bool = False):
@@ -257,18 +277,24 @@ class CheckpointManager:
         Joins (and re-raises the failure of) any in-flight async save
         first, so at most one write is pending and a worker exception
         surfaces at the NEXT save instead of vanishing."""
+        self._c["saves"].inc()
         host = {name: jax.tree.map(np.asarray, tree)
                 for name, tree in trees.items()}
         meta = copy.deepcopy(meta) if meta else {}
         self.wait()                            # at most one in flight
         if not self.async_save or block:
-            self._write(step, host, meta)
+            try:
+                self._write(step, host, meta)
+            except BaseException:
+                self._c["write_failures"].inc()
+                raise
             return
 
         def work():
             try:
                 self._write(step, host, meta)
             except BaseException as e:         # surfaced on next wait/save
+                self._c["write_failures"].inc()
                 self._error = e
 
         self._worker = threading.Thread(target=work, daemon=True)
@@ -347,7 +373,8 @@ class CheckpointManager:
         poisoned, go older").  Trees come back as host numpy; the caller
         re-shards with ``jax.device_put(..., sharding)``."""
         if step is not None:
-            flat, meta = self._validate(step)
+            with obs_trace.span("ckpt.restore", cat="ckpt", step=step):
+                flat, meta = self._validate(step)
         else:
             candidates = [s for s in reversed(self.steps())
                           if before is None or s < before]
@@ -359,7 +386,8 @@ class CheckpointManager:
             last_err: Optional[Exception] = None
             for s in candidates:
                 try:
-                    flat, meta = self._validate(s)
+                    with obs_trace.span("ckpt.restore", cat="ckpt", step=s):
+                        flat, meta = self._validate(s)
                     break
                 except CheckpointCorruptError as e:
                     logger.warning("checkpoint: step %d invalid (%s) -- "
@@ -369,6 +397,7 @@ class CheckpointManager:
                 raise CheckpointCorruptError(
                     f"every checkpoint in {self.dir} failed validation"
                 ) from last_err
+        self._c["restores"].inc()
         roots: Dict[str, Dict[str, Any]] = {}
         for k, v in flat.items():
             name, rest = k.split("/", 1)

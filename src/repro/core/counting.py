@@ -284,6 +284,15 @@ class ContractionCounter:
             "by_site": self.by_site(),
         }
 
+    def publish(self, registry) -> None:
+        """Publish this audit into an observability registry
+        (:class:`repro.obs.metrics.MetricsRegistry`) as ``counting_*``
+        gauges, so one registry snapshot reports the square-routed
+        fraction (fwd and bwd) next to the serving/training counters of
+        the same run -- see docs/observability.md."""
+        from repro.obs.metrics import publish_contraction_audit
+        publish_contraction_audit(self.summary(), registry)
+
 
 _COUNTERS: List[ContractionCounter] = []
 _SCALES: List[int] = [1]

@@ -72,6 +72,8 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace as obs_trace
+
 __all__ = ["GuardPolicy", "guard_policy", "set_guard_policy", "guarded",
            "check_finite", "emit_trace_probe", "pending_trip_counts",
            "clear_pending_trips", "drain_pending_trips",
@@ -229,10 +231,11 @@ def drain_pending_trips(trip_limit: Optional[int] = None) -> Dict[str, int]:
     a demotion occurred (``repro.kernels.routing.route_epoch`` bumps on
     demotion so owners can re-jit only when the routing state changed).
     """
-    jax.effects_barrier()                 # wait out in-flight callbacks
-    with _PENDING_LOCK:
-        drained = dict(_PENDING)
-        _PENDING.clear()
+    with obs_trace.span("guard.drain", cat="guard"):
+        jax.effects_barrier()             # wait out in-flight callbacks
+        with _PENDING_LOCK:
+            drained = dict(_PENDING)
+            _PENDING.clear()
     if not drained:
         return drained
     if trip_limit is None:

@@ -52,15 +52,17 @@ Overrides (most specific wins):
 from __future__ import annotations
 
 import dataclasses
+import functools
 import logging
 import os
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 
 from repro.core import cost_model as cm
 from repro.core import squares as sq
 from repro.kernels import tuning
+from repro.obs import trace as obs_trace
 
 __all__ = ["Route", "select_route", "select_matmul_route",
            "select_conv2d_route", "select_paged_attn_route",
@@ -126,6 +128,24 @@ class Route:
 
 
 _ALL_ROUTES = frozenset().union(*_KIND_ROUTES.values())
+
+
+def _traced_selector(kind: str):
+    """Wrap a route selector so every resolved decision lands in the
+    tracer as a ``route.decide`` instant event (chosen route + the
+    cost-model rationale string).  Disabled tracing costs one global
+    read per call -- the overhead contract in docs/observability.md."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            route = fn(*args, **kwargs)
+            t = obs_trace.get_tracer()
+            if t is not None:
+                t.event("route.decide", cat="dispatch", kind=kind,
+                        route=route.name, reason=route.reason)
+            return route
+        return wrapper
+    return deco
 
 
 def _env_route(kind: str, valid) -> Optional[str]:
@@ -198,6 +218,7 @@ def set_route_override(kind: str, sizes: dict, route: str,
     return key
 
 
+@_traced_selector("matmul")
 def select_matmul_route(m: int, n: int, k: int, *, batch: int = 1,
                         dtype=jnp.float32) -> Route:
     """Resolve the ``square_pallas`` route of a (possibly batched) GEMM."""
@@ -223,6 +244,7 @@ def select_matmul_route(m: int, n: int, k: int, *, batch: int = 1,
     return Route("batched", "per-element work amortizes its grid step")
 
 
+@_traced_selector("conv2d")
 def select_conv2d_route(oh: int, ow: int, kh: int, kw: int, cin: int,
                         cout: int, *, batch: int = 1,
                         dtype=jnp.float32) -> Route:
@@ -246,6 +268,7 @@ def select_conv2d_route(oh: int, ow: int, kh: int, kw: int, cin: int,
                           f"window-streaming regime")
 
 
+@_traced_selector("paged_attn")
 def select_paged_attn_route(s: int, t: int, *, batch: int = 1,
                             kv_heads: int = 1, group: int = 1,
                             hd: int = 64, dtype=jnp.float32) -> Route:
@@ -320,14 +343,27 @@ class RouteHealth:
     trips: Dict[str, int] = dataclasses.field(default_factory=dict)
     demotions: Dict[str, str] = dataclasses.field(default_factory=dict)
     epoch: int = 0
+    # trip ordinals: every record_trip() gets a process-wide sequence
+    # number; first/last per key date a breaker's history ("tripped once
+    # at startup" vs "tripping right now") without storing timestamps
+    trip_seq: int = 0
+    first_trip: Dict[str, int] = dataclasses.field(default_factory=dict)
+    last_trip: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def record_trip(self, key: str, limit: int,
                     reason: str = "non-finite square-route output") -> bool:
         """Record one guard trip; returns True when this trip demotes."""
         self.trips[key] = self.trips.get(key, 0) + 1
+        self.trip_seq += 1
+        self.first_trip.setdefault(key, self.trip_seq)
+        self.last_trip[key] = self.trip_seq
+        obs_trace.event("guard.trip", cat="guard", key=key,
+                        trips=self.trips[key], reason=reason)
         if key not in self.demotions and self.trips[key] >= max(1, limit):
             self.demotions[key] = (f"{reason} ({self.trips[key]} trips)")
             self.epoch += 1
+            obs_trace.event("guard.demote", cat="guard", key=key,
+                            trips=self.trips[key])
             logger.warning(
                 "route-health: demoting %s to the standard route after "
                 "%d guard trips (%s)", key, self.trips[key], reason)
@@ -340,6 +376,21 @@ class RouteHealth:
     def summary(self) -> Dict[str, object]:
         return {"trips": dict(self.trips),
                 "demotions": dict(self.demotions)}
+
+    def snapshot(self) -> List[Dict[str, object]]:
+        """Registry dump, one entry per key that ever tripped: trip
+        count, demoted flag + reason, and the first/last trip ordinals
+        (:attr:`trip_seq` sequence numbers).  Surfaced in the engine's
+        observability snapshot and ``launch/serve.py``'s summary line,
+        and publishable as labeled gauges via
+        :func:`repro.obs.metrics.publish_route_health`."""
+        return [{"key": key,
+                 "trips": n,
+                 "demoted": key in self.demotions,
+                 "reason": self.demotions.get(key),
+                 "first_trip": self.first_trip.get(key, 0),
+                 "last_trip": self.last_trip.get(key, 0)}
+                for key, n in sorted(self.trips.items())]
 
 
 _HEALTH = RouteHealth()
@@ -357,6 +408,8 @@ def reset_route_health() -> None:
         _HEALTH.epoch += 1
     _HEALTH.trips.clear()
     _HEALTH.demotions.clear()
+    _HEALTH.first_trip.clear()
+    _HEALTH.last_trip.clear()
 
 
 def route_epoch() -> int:

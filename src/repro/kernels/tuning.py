@@ -42,6 +42,8 @@ import jax.numpy as jnp
 
 from repro.core import cost_model as cm
 from repro.core import squares as sq
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 __all__ = ["TilePlan", "Conv2DPlan", "PagedAttnPlan", "plan_matmul",
            "plan_conv", "plan_conv2d", "plan_paged_attn",
@@ -300,6 +302,15 @@ def _model_pick(m: int, n: int, k: int, *, itemsize: int, n_row_ops: int,
 _CACHE: dict[str, dict] = {}
 # Cache keys already warned about (warn ONCE per key per process).
 _WARNED_MISS: set[str] = set()
+# Autotune-cache lookup outcomes, published to the process-default obs
+# registry (per-engine/per-trainer registries track run-scoped state; the
+# plan cache is process-wide, so its counters are too).  Bound once: the
+# planners run per eager GEMM call and must not pay a registry lookup.
+_HIT_COUNTER = obs_metrics.default_registry().counter(
+    "tuning_cache_hits_total", help="autotune-cache lookups served")
+_MISS_COUNTER = obs_metrics.default_registry().counter(
+    "tuning_cache_misses_total",
+    help="autotune-cache lookups that fell back to the cost model")
 
 
 def autotune_enabled() -> bool:
@@ -321,7 +332,14 @@ def _key(kind: str, m: int, n: int, k: int, dtype, batch: int = 1) -> str:
         if batch > 1 else base
 
 
-def _warn_cache_miss(key: str) -> None:
+def _note_cache_lookup(key: str, hit: bool) -> None:
+    """Publish one autotune-cache lookup outcome (trace event + default-
+    registry counters)."""
+    obs_trace.event("tuning.cache", cat="dispatch", key=key, hit=hit)
+    (_HIT_COUNTER if hit else _MISS_COUNTER).inc()
+
+
+def _warn_cache_miss(key: str, plan_entry: Optional[dict] = None) -> None:
     if key in _WARNED_MISS:
         return
     _WARNED_MISS.add(key)
@@ -331,10 +349,19 @@ def _warn_cache_miss(key: str) -> None:
         fn = "autotune_paged_attn"
     else:
         fn = "autotune_matmul"
+    # the ready-to-paste JSON cache entry (the cost-model pick this call
+    # will serve): drop it into tuning_cache.json to pin the plan, or
+    # replace it with an autotune winner later -- no key re-derivation
+    paste = ""
+    if plan_entry is not None:
+        paste = (f"  Cost-model entry, ready to paste into "
+                 f"{cache_path()}: "
+                 + json.dumps({key: plan_entry}, sort_keys=True))
     warnings.warn(
         f"autotune cache miss for {key}; falling back to the cost-model "
         f"plan.  Run kernels.tuning.{fn} once for this shape to "
-        f"cache an empirical winner, or set REPRO_AUTOTUNE=0 to silence.",
+        f"cache an empirical winner, or set REPRO_AUTOTUNE=0 to silence."
+        + paste,
         stacklevel=3)
 
 
@@ -418,18 +445,22 @@ def plan_matmul(m: int, n: int, k: int, dtype=jnp.float32, *,
             and str(cached.get("pm_layout", pm_layout)) == pm_layout:
         # Serve the cache only for the requested layout: an autotune run on
         # a CPU host must not dictate "mnk" to a TPU caller.
+        _note_cache_lookup(key, hit=True)
         return TilePlan(*(int(cached[f]) for f in ("bm", "bn", "bk", "kc")),
                         pm_layout)
-    if use_cache and cached is None and bm is None and bn is None \
-            and bk is None and kc is None:
-        _warn_cache_miss(key)
     base = _model_pick(m, n, k, itemsize=itemsize, n_row_ops=n_row_ops,
                        n_col_ops=n_col_ops, n_acc=n_acc, pm_layout=pm_layout)
     pbm = _align_bm(bm if bm is not None else base.bm, m)
     pbn = _align_lane(bn if bn is not None else base.bn, n)
     pbk = _align_lane(bk if bk is not None else base.bk, k)
     pkc = _align_kc(kc if kc is not None else base.kc, pbk)
-    return TilePlan(pbm, pbn, pbk, pkc, pm_layout)
+    plan = TilePlan(pbm, pbn, pbk, pkc, pm_layout)
+    if use_cache and cached is None and bm is None and bn is None \
+            and bk is None and kc is None:
+        _note_cache_lookup(key, hit=False)
+        _warn_cache_miss(key, {"bm": plan.bm, "bn": plan.bn, "bk": plan.bk,
+                               "kc": plan.kc, "pm_layout": plan.pm_layout})
+    return plan
 
 
 def plan_conv(k_out: int, n_taps: int, dtype=jnp.float32, *,
@@ -509,11 +540,10 @@ def plan_conv2d(h: int, w: int, kh: int, kw: int, cin: int, cout: int,
     no_user = all(v is None for v in (bh, bw, bk, kc, bf))
     if cached is not None and no_user \
             and str(cached.get("pm_layout", pm_layout)) == pm_layout:
+        _note_cache_lookup(key, hit=True)
         return Conv2DPlan(*(int(cached[f])
                             for f in ("bh", "bw", "bk", "kc", "bf")),
                           pm_layout)
-    if use_cache and cached is None and no_user:
-        _warn_cache_miss(key)
     base = _model_pick_conv2d(oh, ow, kh, kw, cin, cout, stride=(sh, sv),
                               itemsize=itemsize, pm_layout=pm_layout)
     pbh = max(1, min(bh if bh is not None else base.bh, oh))
@@ -521,7 +551,13 @@ def plan_conv2d(h: int, w: int, kh: int, kw: int, cin: int, cout: int,
     pbk = max(1, min(bk if bk is not None else base.bk, cin))
     pbf = max(1, min(bf if bf is not None else base.bf, cout))
     pkc = _align_kc(kc if kc is not None else base.kc, kh * kw * pbk)
-    return Conv2DPlan(pbh, pbw, pbk, pkc, pbf, pm_layout)
+    plan = Conv2DPlan(pbh, pbw, pbk, pkc, pbf, pm_layout)
+    if use_cache and cached is None and no_user:
+        _note_cache_lookup(key, hit=False)
+        _warn_cache_miss(key, {"bh": plan.bh, "bw": plan.bw, "bk": plan.bk,
+                               "kc": plan.kc, "bf": plan.bf,
+                               "pm_layout": plan.pm_layout})
+    return plan
 
 
 def plan_paged_attn(rows: int, hd: int, block_size: int,
@@ -557,19 +593,23 @@ def plan_paged_attn(rows: int, hd: int, block_size: int,
     cached = load_cache().get(key) if use_cache else None
     if cached is not None and kc_qk is None and kc_pv is None \
             and str(cached.get("pm_layout", pm_layout)) == pm_layout:
+        _note_cache_lookup(key, hit=True)
         return PagedAttnPlan(int(cached["kc_qk"]), int(cached["kc_pv"]),
                              pm_layout)
-    if use_cache and cached is None and kc_qk is None and kc_pv is None:
-        _warn_cache_miss(key)
     if pm_layout == "mnk":
         base_qk = _align_kc(min(KC_MNK_MAX, hd), hd)
         base_pv = _align_kc(min(KC_MNK_MAX, block_size), block_size)
     else:
         base_qk, base_pv = hd, block_size
-    return PagedAttnPlan(
+    plan = PagedAttnPlan(
         _align_kc(kc_qk if kc_qk is not None else base_qk, hd),
         _align_kc(kc_pv if kc_pv is not None else base_pv, block_size),
         pm_layout)
+    if use_cache and cached is None and kc_qk is None and kc_pv is None:
+        _note_cache_lookup(key, hit=False)
+        _warn_cache_miss(key, {"kc_qk": plan.kc_qk, "kc_pv": plan.kc_pv,
+                               "pm_layout": plan.pm_layout})
+    return plan
 
 
 # --------------------------------------------------------------------------

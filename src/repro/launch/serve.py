@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import os
 import time
 
@@ -29,6 +30,8 @@ from repro.configs import get_config
 from repro.configs.base import SQUARE_GEMMS_POLICY
 from repro.models.blocks import PAGEABLE_KINDS
 from repro.models.lm import build_model
+from repro.obs import trace as obs_trace
+from repro.obs.export import write_chrome_trace
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.server import Request, ServeConfig, Server
 
@@ -95,7 +98,19 @@ def main(argv=None):
                     help="numerics guard: fail non-finite-logits slots "
                          "cleanly and let the core-layer route-health "
                          "breaker demote saturating square-route sites")
+    # observability (docs/observability.md)
+    ap.add_argument("--metrics-file", default=None,
+                    help="write the engine's registry snapshot (counters, "
+                         "gauges, histogram percentiles, route health) as "
+                         "JSON; render with scripts/obs_report.py")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable structured tracing and write a Chrome "
+                         "trace_event JSON (load in Perfetto / "
+                         "chrome://tracing)")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        obs_trace.enable()
 
     if args.route:
         os.environ["REPRO_ROUTE"] = args.route
@@ -162,7 +177,32 @@ def main(argv=None):
             by_status[str(r.status)] = by_status.get(str(r.status), 0) + 1
         print(f"  terminals: {by_status} | shed {m.shed} | timeouts "
               f"{m.timeouts} | guard trips {m.guard_trips}")
+        summ = m.summary()
+        print(f"  ttft p50/p95/p99 {summ['ttft_p50_s'] * 1e3:.0f}/"
+              f"{summ['ttft_p95_s'] * 1e3:.0f}/"
+              f"{summ['ttft_p99_s'] * 1e3:.0f}ms | decode step p50 "
+              f"{summ['decode_step_p50_s'] * 1e3:.1f}ms")
+        snap = engine.obs_snapshot()
+        health = snap["route_health"]
+        demoted = [h["key"] for h in health if h["demoted"]]
+        line = (f"  route health: {len(health)} tracked site(s), "
+                f"{len(demoted)} demoted")
+        if demoted:
+            line += " -> " + ", ".join(demoted)
+        print(line)
+        if args.metrics_file:
+            with open(args.metrics_file, "w") as f:
+                json.dump(snap, f, indent=1, sort_keys=True)
+            print(f"  metrics snapshot -> {args.metrics_file}")
         results = {rid: r.tokens for rid, r in eresults.items()}
+    if legacy and args.metrics_file:
+        print("note: --metrics-file needs the paged engine's registry; "
+              "ignored under --legacy")
+    if args.trace_out:
+        tr = obs_trace.get_tracer()
+        write_chrome_trace(tr, args.trace_out)
+        print(f"  trace -> {args.trace_out} ({len(tr.records())} records, "
+              f"{tr.dropped} dropped)")
     for rid in sorted(results)[:4]:
         print(f"  req {rid}: {results[rid][:8]}...")
     assert len(results) == args.requests

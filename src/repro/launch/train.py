@@ -12,12 +12,15 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 
 import jax
 
 from repro.configs import get_config
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models.lm import build_model
+from repro.obs import trace as obs_trace
+from repro.obs.export import write_chrome_trace
 from repro.optim import adamw
 from repro.train import step as step_mod
 from repro.train.trainer import Trainer, TrainerConfig
@@ -37,7 +40,18 @@ def main(argv=None):
                     help="use the smoke-scale reduction of --arch")
     ap.add_argument("--microbatch", type=int, default=0)
     ap.add_argument("--grad-compression", action="store_true")
+    # observability (docs/observability.md)
+    ap.add_argument("--metrics-file", default=None,
+                    help="write the trainer's registry snapshot (step "
+                         "counters/latency percentiles, checkpoint commit "
+                         "events, contraction audit) as JSON")
+    ap.add_argument("--trace-out", default=None,
+                    help="enable structured tracing and write a Chrome "
+                         "trace_event JSON (Perfetto-loadable)")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        obs_trace.enable()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -73,6 +87,15 @@ def main(argv=None):
                for k, v in m.items()})
     print(f"done at step {out['final_step']} "
           f"(stragglers observed: {len(out['stragglers'])})")
+    if args.metrics_file:
+        with open(args.metrics_file, "w") as f:
+            json.dump(trainer.obs_snapshot(), f, indent=1, sort_keys=True)
+        print(f"metrics snapshot -> {args.metrics_file}")
+    if args.trace_out:
+        tr = obs_trace.get_tracer()
+        write_chrome_trace(tr, args.trace_out)
+        print(f"trace -> {args.trace_out} ({len(tr.records())} records, "
+              f"{tr.dropped} dropped)")
     return out
 
 

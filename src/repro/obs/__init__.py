@@ -1,0 +1,31 @@
+"""Unified observability layer: tracing, metrics, exporters.
+
+Dependency-free (stdlib only, no jax import) so every layer of the
+stack -- kernels, core dispatch, serving, training, checkpointing --
+can instrument itself without import cycles.  Three pillars:
+
+- :mod:`repro.obs.trace` -- span/event tracer (ring buffer, thread-safe,
+  clock-injectable, near-zero cost when disabled);
+- :mod:`repro.obs.metrics` -- counters/gauges/histograms in a
+  :class:`MetricsRegistry` with JSON-snapshot + Prometheus-text export;
+- :mod:`repro.obs.export` -- Chrome ``trace_event`` JSON (Perfetto) and
+  span-derived per-request latency breakdowns.
+
+See docs/observability.md for the span taxonomy, metric tables, and the
+overhead contract.
+"""
+from repro.obs import trace
+from repro.obs.export import (request_breakdown, to_chrome_trace,
+                              write_chrome_trace)
+from repro.obs.metrics import (DEFAULT_LATENCY_BUCKETS, Counter, Gauge,
+                               Histogram, MetricsRegistry, default_registry,
+                               publish_contraction_audit,
+                               publish_route_health)
+
+__all__ = [
+    "trace",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "default_registry", "DEFAULT_LATENCY_BUCKETS",
+    "publish_contraction_audit", "publish_route_health",
+    "to_chrome_trace", "write_chrome_trace", "request_breakdown",
+]

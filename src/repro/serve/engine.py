@@ -88,6 +88,8 @@ import numpy as np
 
 from repro.core import guards
 from repro.models.attention import EMPTY_POS
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve import paged as paged_mod
 from repro.serve.faults import FaultInjector, FaultyAllocator
 from repro.serve.server import Request
@@ -224,6 +226,19 @@ class EngineMetrics:
     util_steps: int = 0
     ttft_s: Dict[int, float] = dataclasses.field(default_factory=dict)
     wall_s: float = 0.0
+    # Histogram-backed latency percentiles (fixed buckets: O(1) state,
+    # same bounded-bookkeeping rule as the running sums above).  The mean
+    # hides the preemption/retry tail; p95/p99 expose it.  ``ttft_hist``
+    # is observed at TERMINAL time from the final ``ttft_s`` value -- a
+    # preempted request's rolled-back TTFT never lands in the histogram
+    # (histograms cannot un-observe), only the TTFT its caller actually
+    # saw.  ``decode_step_hist`` observes each ragged decode step's wall
+    # time -- the per-token latency every live slot paid that step.
+    ttft_hist: obs_metrics.Histogram = dataclasses.field(
+        default_factory=lambda: obs_metrics.Histogram("engine_ttft_seconds"))
+    decode_step_hist: obs_metrics.Histogram = dataclasses.field(
+        default_factory=lambda: obs_metrics.Histogram(
+            "engine_decode_step_seconds"))
 
     @property
     def tokens_per_s(self) -> float:
@@ -234,7 +249,8 @@ class EngineMetrics:
         """Mean time-to-first-token over requests that GOT a first token.
         Shed/rejected requests never enter ``ttft_s`` (they saw no model
         work), so backpressure cannot skew the latency read; the empty
-        case is 0.0, never a division by zero."""
+        case is 0.0, never a division by zero.  (Kept for bench-trajectory
+        compatibility; the histogram percentiles are the honest read.)"""
         return (sum(self.ttft_s.values()) / len(self.ttft_s)
                 if self.ttft_s else 0.0)
 
@@ -270,6 +286,12 @@ class EngineMetrics:
             "guard_trips": self.guard_trips,
             "guard_rejits": self.guard_rejits,
             "peak_queue_depth": self.peak_queue_depth,
+            "ttft_p50_s": self.ttft_hist.quantile(0.50),
+            "ttft_p95_s": self.ttft_hist.quantile(0.95),
+            "ttft_p99_s": self.ttft_hist.quantile(0.99),
+            "decode_step_p50_s": self.decode_step_hist.quantile(0.50),
+            "decode_step_p95_s": self.decode_step_hist.quantile(0.95),
+            "decode_step_p99_s": self.decode_step_hist.quantile(0.99),
         }
 
 
@@ -285,7 +307,8 @@ class _Slot:
 
 class Engine:
     def __init__(self, model, params, cfg: EngineConfig, seed: int = 0,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 registry: Optional[obs_metrics.MetricsRegistry] = None):
         self.model = model
         self.cfg = cfg
         self.params = (model.prepare_params(params) if cfg.prepared
@@ -343,6 +366,48 @@ class Engine:
         self.queue: List[Request] = []
         self.results: Dict[int, RequestResult] = {}
         self.metrics = EngineMetrics()
+        # --- observability (docs/observability.md) ---------------------
+        # Fresh per-engine registry by default so the chaos-suite
+        # conservation invariants (submitted == sum of terminals) stay
+        # per-run; launchers pass one registry to merge the whole stack.
+        # In the registry, ``rejected`` EXCLUDES shed (shed gets its own
+        # counter) so the terminal counters PARTITION submissions --
+        # unlike ``EngineMetrics.shed``, which is a subset of
+        # ``EngineMetrics.rejected``.
+        self.registry = (registry if registry is not None
+                         else obs_metrics.MetricsRegistry())
+        reg = self.registry
+        self._c_requests = {
+            "submitted": reg.counter("engine_requests_submitted_total"),
+            "completed": reg.counter("engine_requests_completed_total"),
+            "rejected": reg.counter("engine_requests_rejected_total"),
+            "shed": reg.counter("engine_requests_shed_total"),
+            "timeouts": reg.counter("engine_requests_timeouts_total"),
+            "failures": reg.counter("engine_requests_failures_total"),
+            "cancelled": reg.counter("engine_requests_cancelled_total"),
+        }
+        self._c_work = {
+            "tokens": reg.counter("engine_tokens_generated_total",
+                                  help="tokens sampled (executed work: "
+                                       "counts regeneration after "
+                                       "preemption, unlike tokens_out)"),
+            "prefill_chunks": reg.counter("engine_prefill_chunks_total"),
+            "decode_steps": reg.counter("engine_decode_steps_total"),
+            "preemptions": reg.counter("engine_preemptions_total"),
+            "step_failures": reg.counter("engine_step_failures_total"),
+            "watchdog_trips": reg.counter("engine_watchdog_trips_total"),
+            "guard_trips": reg.counter("engine_guard_trips_total"),
+            "guard_rejits": reg.counter("engine_guard_rejits_total"),
+        }
+        self._g_queue = reg.gauge("engine_queue_depth")
+        self._g_blocks = reg.gauge("engine_blocks_used")
+        self._g_util = reg.gauge("engine_block_utilization")
+        self._g_live = reg.gauge("engine_live_slots")
+        # the registry's latency histograms ARE the EngineMetrics ones
+        # (one observe feeds both views)
+        self.metrics.ttft_hist = reg.histogram("engine_ttft_seconds")
+        self.metrics.decode_step_hist = reg.histogram(
+            "engine_decode_step_seconds")
         self._newly_finished: List[RequestResult] = []
         self._arrival: Dict[int, float] = {}
         self._deadline: Dict[int, float] = {}     # rid -> absolute engine time
@@ -379,12 +444,16 @@ class Engine:
         m = self.metrics
         if status is RequestStatus.COMPLETED:
             m.completed += 1
+            self._c_requests["completed"].inc()
         elif status is RequestStatus.TIMED_OUT:
             m.timeouts += 1
+            self._c_requests["timeouts"].inc()
         elif status is RequestStatus.FAILED:
             m.failures += 1
+            self._c_requests["failures"].inc()
         elif status is RequestStatus.CANCELLED:
             m.cancelled += 1
+            self._c_requests["cancelled"].inc()
 
     def _result(self, req: Request, status: RequestStatus,
                 error: Optional[str] = None) -> RequestResult:
@@ -397,6 +466,13 @@ class Engine:
         self._deadline.pop(req.rid, None)
         self._preempts.pop(req.rid, None)
         self._count_terminal(status)
+        # the FINAL ttft (a preempted-then-regenerated request re-measures;
+        # this is the one its caller saw) feeds the percentile histogram
+        ttft = self.metrics.ttft_s.get(req.rid)
+        if ttft is not None:
+            self.metrics.ttft_hist.observe(ttft)
+        obs_trace.event("request.terminal", cat="engine", rid=req.rid,
+                        status=str(status))
         return res
 
     def _terminate(self, slot_id: int, status: RequestStatus,
@@ -413,6 +489,9 @@ class Engine:
         self.metrics.rejected += 1
         if shed:
             self.metrics.shed += 1
+        # registry terminals PARTITION submissions: shed is counted as
+        # shed there, NOT also as rejected (see __init__)
+        self._c_requests["shed" if shed else "rejected"].inc()
         self._result(req, RequestStatus.REJECTED, msg)
 
     # ----------------------------------------------------------- admission
@@ -428,6 +507,9 @@ class Engine:
                     f"duplicate request id {req.rid}: a rid already "
                     f"queued, in flight, or finished would silently "
                     f"overwrite its result; use fresh rids per request")
+            self._c_requests["submitted"].inc()
+            obs_trace.event("request.submit", cat="engine", rid=req.rid,
+                            prompt_tokens=len(req.tokens))
             if len(req.tokens) == 0:
                 self._reject(req, "empty prompt (there is no position to "
                                   "sample the first token from)")
@@ -530,7 +612,9 @@ class Engine:
         v = self.slots[victim]
         rid = v.req.rid
         self.metrics.preemptions += 1
+        self._c_work["preemptions"].inc()
         n = self._preempts[rid] = self._preempts.get(rid, 0) + 1
+        obs_trace.event("engine.preempt", cat="engine", rid=rid, count=n)
         if n > self.cfg.max_preemptions:
             # partial tokens stay in the result: they were delivered work
             self._terminate(victim, RequestStatus.FAILED,
@@ -566,6 +650,8 @@ class Engine:
                 break                          # pool exhausted: wait
             self.queue.pop(0)
             self.slots[slot_id] = _Slot(req=req)
+            obs_trace.event("request.admit", cat="engine", rid=req.rid,
+                            slot=slot_id)
             admitted = True
         return admitted
 
@@ -601,11 +687,16 @@ class Engine:
             trips = guards.drain_pending_trips()
             if not trips:
                 return out
-            self.metrics.guard_trips += sum(trips.values())
+            n_trips = sum(trips.values())
+            self.metrics.guard_trips += n_trips
+            self._c_work["guard_trips"].inc(n_trips)
             if routing.route_epoch() != self._route_epoch:
                 self._route_epoch = routing.route_epoch()
-                self._jit_model_fns()
+                with obs_trace.span("engine.rejit", cat="engine",
+                                    fn=name):
+                    self._jit_model_fns()
                 self.metrics.guard_rejits += 1
+                self._c_work["guard_rejits"].inc()
         # retries exhausted with a key the breaker could not demote; the
         # per-slot logits guard downstream isolates the damage
         return out
@@ -617,6 +708,9 @@ class Engine:
         tick is token-exact.  ``max_step_retries`` consecutive failures
         convert into clean per-request FAILED terminals."""
         self.metrics.step_failures += 1
+        self._c_work["step_failures"].inc()
+        obs_trace.event("engine.step_failure", cat="engine", kind=kind,
+                        streak=self._fail_streak[kind] + 1)
         self._fail_streak[kind] += 1
         if self._fail_streak[kind] > self.cfg.max_step_retries:
             msg = (f"{kind} step failed {self._fail_streak[kind]} "
@@ -645,8 +739,11 @@ class Engine:
             # grow the table to cover this chunk (admission only reserved
             # the first chunk); preempt youngest-first when the pool is
             # dry, exactly like the decode growth loop.
-            self._reset_pos(self.tables.evict_window(slot_id, lo,
-                                                     self._evict_window))
+            freed = self.tables.evict_window(slot_id, lo, self._evict_window)
+            if freed:
+                obs_trace.event("engine.evict", cat="engine",
+                                rid=slot.req.rid, blocks=len(freed))
+            self._reset_pos(freed)
             while self.slots[slot_id] is not None and \
                     not self.tables.ensure(slot_id, lo + len(chunk)):
                 if not self._preempt_for(slot_id):
@@ -660,11 +757,15 @@ class Engine:
         poss[0, :len(chunk)] = np.arange(lo, lo + len(chunk), dtype=np.int32)
         tables_row = jnp.asarray(self.tables.table[slot_id:slot_id + 1])
         try:
-            if self._faults is not None:
-                self._faults.before_step("prefill")
-            hidden, cache, pos_pool = self._guarded_call(
-                "_chunk", self.params, self.cache, self.pos_pool,
-                tables_row, jnp.asarray(toks), jnp.asarray(poss))
+            # the span covers the injector hook too: an injected raise is
+            # an error-tagged span, not a gap in the trace
+            with obs_trace.span("engine.prefill_chunk", cat="engine",
+                                rid=slot.req.rid, lo=lo, n=len(chunk)):
+                if self._faults is not None:
+                    self._faults.before_step("prefill")
+                hidden, cache, pos_pool = self._guarded_call(
+                    "_chunk", self.params, self.cache, self.pos_pool,
+                    tables_row, jnp.asarray(toks), jnp.asarray(poss))
         except Exception as e:                        # noqa: BLE001
             self._step_failed("prefill", e, [slot_id])
             return False
@@ -672,6 +773,7 @@ class Engine:
         self.cache, self.pos_pool = cache, pos_pool
         slot.n_prefilled = lo + len(chunk)
         self.metrics.prefill_chunks += 1
+        self._c_work["prefill_chunks"].inc()
         self.metrics.prefill_tokens += len(chunk)
         if slot.n_prefilled == len(prompt):      # final chunk: first token
             logits = self._guarded_call("_logits_at", self.params, hidden,
@@ -686,8 +788,11 @@ class Engine:
             tok = int(self._sample(logits)[0])
             rid = slot.req.rid
             self.metrics.ttft_s[rid] = self._now() - self._arrival[rid]
+            obs_trace.event("request.first_token", cat="engine", rid=rid,
+                            ttft_s=self.metrics.ttft_s[rid])
             slot.req.out = [tok]
             self.metrics.tokens_out += 1
+            self._c_work["tokens"].inc()
             slot.last_tok = tok
             slot.pos = len(prompt)
             slot.remaining = cfg.max_new_tokens - 1
@@ -711,8 +816,13 @@ class Engine:
         for slot_id in list(live):
             if self._evict_window is not None \
                     and self.slots[slot_id] is not None:
-                self._reset_pos(self.tables.evict_window(
-                    slot_id, self.slots[slot_id].pos, self._evict_window))
+                freed = self.tables.evict_window(
+                    slot_id, self.slots[slot_id].pos, self._evict_window)
+                if freed:
+                    obs_trace.event("engine.evict", cat="engine",
+                                    rid=self.slots[slot_id].req.rid,
+                                    blocks=len(freed))
+                self._reset_pos(freed)
             while self.slots[slot_id] is not None and \
                     not self.tables.ensure(slot_id,
                                            self.slots[slot_id].pos + 1):
@@ -730,16 +840,22 @@ class Engine:
         for i in live:
             toks[i, 0] = self.slots[i].last_tok
             poss[i, 0] = self.slots[i].pos
+        t0 = time.perf_counter()
         try:
-            if self._faults is not None:
-                self._faults.before_step("decode")
-            logits, cache, pos_pool = self._guarded_call(
-                "_decode", self.params, self.cache, self.pos_pool,
-                jnp.asarray(self.tables.table), jnp.asarray(toks),
-                jnp.asarray(poss))
+            with obs_trace.span("engine.decode_step", cat="engine",
+                                n_live=len(live)):
+                if self._faults is not None:
+                    self._faults.before_step("decode")
+                logits, cache, pos_pool = self._guarded_call(
+                    "_decode", self.params, self.cache, self.pos_pool,
+                    jnp.asarray(self.tables.table), jnp.asarray(toks),
+                    jnp.asarray(poss))
         except Exception as e:                        # noqa: BLE001
             self._step_failed("decode", e, live)
             return False
+        # one ragged decode step = one new token per live slot: the step
+        # wall time IS the per-token decode latency those slots paid
+        self.metrics.decode_step_hist.observe(time.perf_counter() - t0)
         self._fail_streak["decode"] = 0
         self.cache, self.pos_pool = cache, pos_pool
         if self._faults is not None:
@@ -753,6 +869,7 @@ class Engine:
             # isfinite pass over (slots, vocab)
             finite = np.isfinite(np.asarray(jnp.max(logits, axis=-1)))
         self.metrics.decode_steps += 1
+        self._c_work["decode_steps"].inc()
         self.metrics.decode_slot_steps += len(live)
         for i in live:
             if finite is not None and not finite[i]:
@@ -766,6 +883,7 @@ class Engine:
             tok = int(nxt[i])
             slot.req.out.append(tok)
             self.metrics.tokens_out += 1
+            self._c_work["tokens"].inc()
             slot.pos += 1
             slot.last_tok = tok
             slot.remaining -= 1
@@ -779,6 +897,9 @@ class Engine:
         with work still pending: convert the stall into surfaced per-
         request errors instead of an infinite ``run()`` loop."""
         self.metrics.watchdog_trips += 1
+        self._c_work["watchdog_trips"].inc()
+        obs_trace.event("engine.watchdog", cat="engine",
+                        idle_ticks=self._idle_ticks)
         msg = (f"watchdog: no scheduler progress for {self._idle_ticks} "
                f"consecutive steps (persistent allocator exhaustion or "
                f"failing model calls)")
@@ -809,15 +930,22 @@ class Engine:
             self._skew += self._faults.clock_skew(self._tick)
         guard_ctx = (guards.guarded() if self.cfg.guard
                      else contextlib.nullcontext())
-        with guard_ctx:
+        with obs_trace.span("engine.tick", cat="engine", tick=self._tick), \
+                guard_ctx:
             self._expire_deadlines()
-            did = self._admit()
+            with obs_trace.span("engine.admit", cat="engine"):
+                did = self._admit()
             did = self._prefill_one() or did
             did = self._decode_all() or did
         self.metrics.util_sum += self.allocator.utilization
         self.metrics.util_steps += 1
         self.metrics.peak_blocks_used = max(self.metrics.peak_blocks_used,
                                             self.allocator.used_blocks)
+        occ = self.allocator.occupancy()
+        self._g_queue.set(len(self.queue))
+        self._g_blocks.set(occ["used_blocks"])
+        self._g_util.set(occ["utilization"])
+        self._g_live.set(sum(s is not None for s in self.slots))
         pending = bool(self.queue) \
             or any(s is not None for s in self.slots)
         if pending and not did:
@@ -848,4 +976,40 @@ class Engine:
             if not self.step():
                 break
         self.metrics.wall_s += time.perf_counter() - t0
+        self.publish_metrics()
         return dict(self.results)
+
+    # ------------------------------------------------------- observability
+    def publish_metrics(self) -> None:
+        """Mirror the :class:`EngineMetrics` summary into the registry as
+        ``engine_*`` gauges (throughput, mean/percentile latencies, peak
+        depths).  The live counters/histograms are updated in-line as the
+        engine runs; the summary-derived gauges are refreshed here --
+        at the end of :meth:`run` and before :meth:`obs_snapshot`."""
+        for k, v in self.metrics.summary().items():
+            self.registry.gauge(f"engine_{k}").set(float(v))
+        self.registry.gauge("engine_wall_s").set(self.metrics.wall_s)
+
+    def obs_snapshot(self, audit=None) -> dict:
+        """The whole-stack health snapshot (docs/observability.md).
+
+        Publishes the engine summary gauges and the route-health dump
+        into the engine's registry -- and the counting audit, when the
+        caller ran one (``audit``: a ``ContractionCounter.summary()``
+        dict, so the snapshot's square-routed fraction matches the
+        audit's) -- then returns the registry snapshot augmented with the
+        structured ``engine`` summary and ``route_health`` entries.
+        ``launch/serve.py --metrics-file`` writes exactly this dict;
+        ``scripts/obs_report.py`` renders it."""
+        from repro.kernels import routing
+        self.publish_metrics()
+        health = routing.route_health().snapshot()
+        obs_metrics.publish_route_health(health, self.registry)
+        if audit is not None:
+            obs_metrics.publish_contraction_audit(audit, self.registry)
+        snap = self.registry.snapshot()
+        snap["engine"] = dict(
+            self.metrics.summary(), wall_s=self.metrics.wall_s,
+            submitted=int(self._c_requests["submitted"].value))
+        snap["route_health"] = health
+        return snap

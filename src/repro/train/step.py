@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import counting, guards
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.optim import adamw
 from repro.train import loss as loss_mod
 
@@ -170,7 +172,8 @@ class GuardedStep:
 
     def __init__(self, step_fn, *, jit: bool = True,
                  trip_limit: int = guards.DEFAULT_TRIP_LIMIT,
-                 max_retries: int = 8):
+                 max_retries: int = 8,
+                 registry: obs_metrics.MetricsRegistry = None):
         self._raw = step_fn
         self._jit = jit
         self._fn = self._fresh_jit() if jit else step_fn
@@ -179,6 +182,11 @@ class GuardedStep:
         self.guard_trips = 0          # probe trips drained (all keys)
         self.rejits = 0               # fresh traces forced by demotions
         self.retries = 0              # discarded-and-recomputed steps
+        reg = registry if registry is not None else obs_metrics.default_registry()
+        self.registry = reg
+        self._c_trips = reg.counter("train_guard_trips_total")
+        self._c_rejits = reg.counter("train_guard_rejits_total")
+        self._c_retries = reg.counter("train_guard_retries_total")
         from repro.kernels import routing
         self._epoch = routing.route_epoch()
 
@@ -202,15 +210,21 @@ class GuardedStep:
                 trips = guards.drain_pending_trips(self.trip_limit)
             if not trips:
                 return out
-            self.guard_trips += sum(trips.values())
+            n_trips = sum(trips.values())
+            self.guard_trips += n_trips
+            self._c_trips.inc(n_trips)
             if routing.route_epoch() != self._epoch:
                 # a key demoted: cached traces still serve the square
                 # route there -- only a fresh trace sees the demotion
                 self._epoch = routing.route_epoch()
                 if self._jit:
-                    self._fn = self._fresh_jit()
+                    with obs_trace.span("train.rejit", cat="train",
+                                        attempt=attempt):
+                        self._fn = self._fresh_jit()
                     self.rejits += 1
+                    self._c_rejits.inc()
             self.retries += 1
+            self._c_retries.inc()
         raise RuntimeError(
             f"guarded train step still tripping after {self.max_retries} "
             f"retries (keys: {sorted(trips)}) -- the non-finite source is "

@@ -41,6 +41,8 @@ import numpy as np
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import SyntheticLM
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.train.faults import (FaultyTrainStep, SimulatedKill,
                                 TrainFaultInjector)
 
@@ -72,7 +74,8 @@ class Trainer:
     def __init__(self, cfg: TrainerConfig, train_step: Callable,
                  params, opt_state, data: SyntheticLM,
                  shard_params: Optional[Callable] = None,
-                 faults: Optional[TrainFaultInjector] = None):
+                 faults: Optional[TrainFaultInjector] = None,
+                 registry: Optional[obs_metrics.MetricsRegistry] = None):
         self.cfg = cfg
         self._faults = faults
         self.train_step = (FaultyTrainStep(train_step, faults)
@@ -81,8 +84,20 @@ class Trainer:
         self.opt_state = opt_state
         self.data = data
         self.shard_params = shard_params or (lambda t: t)
+        # one registry per run (per-run counters stay invariant-checkable
+        # across restarts of the SAME trainer; a restarted process builds
+        # a fresh one) -- shared with the checkpoint manager so one
+        # snapshot covers steps AND commit events
+        self.registry = (registry if registry is not None
+                         else obs_metrics.MetricsRegistry())
+        self._c_steps = self.registry.counter("train_steps_total")
+        self._c_step_failures = self.registry.counter(
+            "train_step_failures_total")
+        self._c_rollbacks = self.registry.counter("train_rollbacks_total")
+        self._c_stragglers = self.registry.counter("train_stragglers_total")
+        self._h_step = self.registry.histogram("train_step_seconds")
         self.ckpt = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep,
-                                      faults=faults)
+                                      faults=faults, registry=self.registry)
         self.step = 0
         self.metrics_log = []
         self.straggler_events = []
@@ -112,6 +127,7 @@ class Trainer:
         self.data.load_state_dict(meta["data"])
         self.step = int(meta["step"])
         self.loss_trajectory = [float(x) for x in meta.get("losses", [])]
+        obs_trace.event("train.resume", cat="train", step=self.step)
         return True
 
     def _save(self, block: bool = False):
@@ -133,6 +149,7 @@ class Trainer:
 
     def _on_sigterm(self, *_):
         self._preempted = True
+        obs_trace.event("train.sigterm", cat="train", step=self.step)
         # Python runs signal handlers between bytecodes on the main
         # thread: if the interrupted frame is already inside _save, the
         # manager's state is mid-mutation -- skip; the interrupted save
@@ -161,6 +178,9 @@ class Trainer:
                 raise                         # process death: no absorbing
             except Exception as e:
                 self.step_failures += 1
+                self._c_step_failures.inc()
+                obs_trace.event("train.step_failure", cat="train",
+                                step=self.step, attempt=attempt)
                 if attempt >= self.cfg.max_step_retries:
                     raise RuntimeError(
                         f"train step failed {attempt + 1} consecutive "
@@ -171,6 +191,7 @@ class Trainer:
         older ones when the previous restore made no progress -- the
         snapshot itself may hold the poisoned params)."""
         self.rollbacks += 1
+        self._c_rollbacks.inc()
         if self.rollbacks > self.cfg.max_rollbacks:
             raise RuntimeError(
                 f"non-finite loss persisted through "
@@ -193,6 +214,7 @@ class Trainer:
         self.data.load_state_dict(meta["data"])
         self.step = int(meta["step"])
         self._last_restored_step = self.step
+        obs_trace.event("train.rollback", cat="train", to_step=self.step)
         self.loss_trajectory = [float(x) for x in
                                 meta.get("losses", [])][: self.step]
         # committed-then-rolled-back steps will replay and re-log
@@ -211,9 +233,11 @@ class Trainer:
             while self.step < self.cfg.total_steps and not self._preempted:
                 batch = self.data.next_batch()
                 t0 = time.monotonic()
-                new_params, new_opt, metrics = self._attempt_step(
-                    batch, audit=(steps_run == 0
-                                  and self.cfg.audit_contractions))
+                with obs_trace.span("train.step", cat="train",
+                                    step=self.step):
+                    new_params, new_opt, metrics = self._attempt_step(
+                        batch, audit=(steps_run == 0
+                                      and self.cfg.audit_contractions))
                 loss = float(np.asarray(metrics["loss"]))
                 if self._recovery and not np.isfinite(loss):
                     # poisoned update (e.g. NaN grads one step earlier
@@ -226,14 +250,20 @@ class Trainer:
                 steps_run += 1
                 if steps_run <= 1:
                     pass                   # warmup: compile time isn't signal
-                elif ewma is None:
-                    ewma = dt
                 else:
-                    if dt > self.cfg.watchdog_factor * ewma:
-                        self.straggler_events.append(
-                            {"step": self.step, "dt": dt, "ewma": ewma})
-                    ewma = 0.9 * ewma + 0.1 * dt
+                    # post-warmup only: the tracing step's compile time
+                    # would dominate every percentile of the histogram
+                    self._h_step.observe(dt)
+                    if ewma is None:
+                        ewma = dt
+                    else:
+                        if dt > self.cfg.watchdog_factor * ewma:
+                            self.straggler_events.append(
+                                {"step": self.step, "dt": dt, "ewma": ewma})
+                            self._c_stragglers.inc()
+                        ewma = 0.9 * ewma + 0.1 * dt
                 self.step += 1
+                self._c_steps.inc()
                 if self.step % self.cfg.log_every == 0 or \
                         self.step == self.cfg.total_steps:
                     self.metrics_log.append(
@@ -262,4 +292,38 @@ class Trainer:
                   "ckpt_failures": self.ckpt_failures}
         if hasattr(self.train_step, "stats"):
             result["guard"] = self.train_step.stats()   # GuardedStep
+        self.publish_metrics()
         return result
+
+    # ------------------------------------------------------- observability
+    def publish_metrics(self) -> None:
+        """Mirror run-level results into the registry as gauges (the
+        counters/histograms update in-line during :meth:`run`)."""
+        reg = self.registry
+        reg.gauge("train_final_step").set(float(self.step))
+        reg.gauge("train_preempted").set(float(self._preempted))
+        reg.gauge("train_ckpt_failures").set(float(self.ckpt_failures))
+        if self.loss_trajectory:
+            reg.gauge("train_last_loss").set(self.loss_trajectory[-1])
+        if self.contraction_audit is not None:
+            obs_metrics.publish_contraction_audit(self.contraction_audit,
+                                                  reg)
+        if hasattr(self.train_step, "stats"):
+            for k, v in self.train_step.stats().items():
+                reg.gauge(f"train_guard_{k}").set(float(v))
+
+    def obs_snapshot(self) -> dict:
+        """The training-side registry snapshot (docs/observability.md):
+        step counters + step-time percentiles + checkpoint commit events
+        + the first-step contraction audit (square fraction fwd/bwd) +
+        guard trip/re-jit counts + route-health dump.
+        ``launch/train.py --metrics-file`` writes exactly this dict."""
+        from repro.kernels import routing
+        self.publish_metrics()
+        health = routing.route_health().snapshot()
+        obs_metrics.publish_route_health(health, self.registry)
+        snap = self.registry.snapshot()
+        snap["route_health"] = health
+        if self.contraction_audit is not None:
+            snap["contraction_audit"] = dict(self.contraction_audit)
+        return snap

@@ -71,6 +71,19 @@ def _check_contract(eng, results, free0, n_submitted):
     assert (m.completed + m.rejected + m.timeouts + m.failures
             + m.cancelled) == n_submitted
     assert m.tokens_out == sum(len(r.tokens) for r in results.values())
+    # the metrics registry mirrors the same ledger: terminal counters
+    # PARTITION submissions (registry 'rejected' EXCLUDES shed, which is
+    # its own counter -- see EngineMetrics), counters never go negative
+    c = eng.registry.snapshot()["counters"]
+    assert c["engine_requests_submitted_total"] == n_submitted
+    assert sum(c[f"engine_requests_{k}_total"]
+               for k in ("completed", "rejected", "shed", "timeouts",
+                         "failures", "cancelled")) == n_submitted
+    assert all(v >= 0 for v in c.values())
+    # the counter is MONOTONIC: it counts generation events, so tokens a
+    # preemption rolled back (and decode later regenerated) count twice,
+    # while metrics.tokens_out is net delivered tokens
+    assert c["engine_tokens_generated_total"] >= m.tokens_out
 
 
 def test_transient_alloc_and_step_faults_are_token_invisible(world):
@@ -174,6 +187,41 @@ def test_random_fault_schedules_hold_the_contract(world, seed):
     _check_contract(eng, results, free0, len(reqs))
     assert all(r.ok for r in results.values())
     assert {rid: r.tokens for rid, r in results.items()} == base
+
+
+def test_spans_balance_and_lifecycle_events_cover_faulted_runs(world):
+    """Observability under chaos: with tracing live through a schedule
+    mixing allocator exhaustion, transient step raises, a NaN guard trip
+    and a deadline-expiring clock skew, every span still closes (the
+    class-based __exit__ records through exception unwinds), every
+    submitted request emits submit + terminal events, and failed spans
+    carry the error tag instead of vanishing."""
+    from repro.obs import trace as obs_trace
+    cfg, model, params, reqs, base = world
+    plan = FaultPlan.of(alloc_fail=(1, 3), decode_fail=(0, 4),
+                        prefill_fail=(2,), nan_logits={2: 1},
+                        clock_skew={6: 3600.0})
+    with obs_trace.capture() as tr:
+        eng, results, free0 = _run(model, params, reqs, plan,
+                                   guard=True, deadline_s=60.0)
+    _check_contract(eng, results, free0, len(reqs))
+    assert tr.open_spans == 0                  # balanced across all faults
+    recs = tr.records()
+    submits = {r.args["rid"] for r in recs if r.name == "request.submit"}
+    terminals = {r.args["rid"] for r in recs
+                 if r.name == "request.terminal"}
+    assert submits == terminals == set(results)
+    # every injected step raise surfaces as an error-tagged span, not a
+    # gap (the skewed clock may end the run before later ordinals fire,
+    # so count against the injector's own ledger)
+    errored = [r for r in recs
+               if r.name in ("engine.prefill_chunk", "engine.decode_step")
+               and "error" in r.args]
+    n_inj = (eng._faults.injected["decode"]
+             + eng._faults.injected["prefill"])
+    assert n_inj >= 2 and len(errored) == n_inj
+    assert all(r.dur is not None and r.dur >= 0.0 for r in recs
+               if r.dur is not None)
 
 
 def test_fault_plan_random_is_deterministic():

@@ -200,6 +200,60 @@ def test_sigterm_mid_run_resumes_bit_identically(tmp_path, baseline):
     _check_identical(tr2, res, baseline)
 
 
+def test_spans_balance_across_sigterm_and_registry_counts_commits(
+        tmp_path, baseline):
+    """Observability under preemption: with tracing live through a
+    SIGTERM (SimulatedKill is a BaseException -- the unwind crosses the
+    train.step and ckpt.* spans), every span still closes, the sigterm
+    instant is recorded, and the run's registry counters agree with the
+    trainer's own ledger across the restart boundary."""
+    from repro.obs import trace as obs_trace
+    plan = TrainFaultPlan.of(sigterm_after=2)
+    faults = TrainFaultInjector(plan)
+    tr = _trainer(tmp_path, faults=faults, ckpt_every=100)
+    with obs_trace.capture() as trc:
+        with pytest.raises(SimulatedKill):
+            tr.run()
+    assert trc.open_spans == 0             # balanced through the unwind
+    names = [r.name for r in trc.records()]
+    assert "train.sigterm" in names
+    assert "ckpt.commit" in names          # the handler's blocking save
+    c = tr.registry.snapshot()["counters"]
+    assert c["train_steps_total"] == 2
+    assert c["ckpt_commits_total"] >= 1
+    assert all(v >= 0 for v in c.values())
+
+    # restarted "process": a fresh trainer has a FRESH registry whose
+    # counters reflect only the post-resume stretch
+    tr2 = _trainer(tmp_path, ckpt_every=100)
+    assert tr2.maybe_resume()
+    res = tr2.run()
+    _check_identical(tr2, res, baseline)
+    c2 = tr2.registry.snapshot()["counters"]
+    assert c2["train_steps_total"] == TOTAL - 2
+    assert c2["ckpt_restores_total"] == 1  # the maybe_resume restore
+
+
+def test_registry_counts_faulted_run_ledger(tmp_path, baseline):
+    """Step retries, rollbacks, and checkpoint write failures each land
+    in the run registry, mirroring the result dict's ledger."""
+    plan = TrainFaultPlan.of(step_fail=(1, 3), nan_grad=(2,),
+                             ckpt_fail=(1,))
+    faults = TrainFaultInjector(plan)
+    tr = _trainer(tmp_path, faults=faults)
+    res = tr.run()
+    _check_identical(tr, res, baseline)
+    c = tr.registry.snapshot()["counters"]
+    assert c["train_step_failures_total"] == res["step_failures"] == 2
+    assert c["train_rollbacks_total"] == res["rollbacks"] >= 1
+    assert c["ckpt_write_failures_total"] >= 1
+    assert c["ckpt_commits_total"] >= 1
+    # committed-step counter includes replayed steps (it is a counter,
+    # not the final step gauge) -- the gauge holds the logical end
+    assert c["train_steps_total"] >= TOTAL
+    assert tr.registry.snapshot()["gauges"]["train_final_step"] == TOTAL
+
+
 @pytest.mark.parametrize("seed", _SEEDS)
 def test_seeded_chaos_schedule_converges_bit_identical(
         tmp_path, baseline, seed):
